@@ -1,0 +1,62 @@
+"""Aggregate dry-run JSON records into the §Roofline table (markdown + dict)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def summarize(recs: list[dict]) -> dict:
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    failed = [r for r in recs if r.get("status") == "FAILED"]
+    return {"ok": len(ok), "skipped": len(skipped), "failed": len(failed),
+            "total": len(recs)}
+
+
+def table_markdown(recs: list[dict], mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful-FLOPs ratio | peak bytes/dev (CPU-backend compile) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | N/A "
+                         f"(skipped: {r['reason'][:40]}…) | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | |")
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory", {}).get("bytes_per_device")
+        memgb = f"{mem/2**30:.1f} GiB" if mem else "?"
+        ratio = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.2e} | "
+            f"{rl['memory_s']:.2e} | {rl['collective_s']:.2e} | {rl['dominant']} | "
+            f"{ratio:.2f} | {memgb} |")
+    return "\n".join(lines)
+
+
+def main() -> dict:
+    recs = load_records()
+    s = summarize(recs)
+    doms = {}
+    for r in recs:
+        if r.get("status") == "ok" and r.get("mesh") == "16x16":
+            doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+    return {"summary": s, "dominant_histogram": doms}

@@ -1,0 +1,82 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline table.
+
+Prints ``name,value,derived`` CSV rows (derived=1 marks numbers reconstructed
+from the paper's reported ratios rather than simulated from architecture).
+"""
+
+from __future__ import annotations
+
+import time
+
+from . import paper_figs, roofline_table
+
+
+def _emit(name: str, value, derived: int = 0):
+    if isinstance(value, float):
+        value = f"{value:.6g}"
+    print(f"{name},{value},{derived}")
+
+
+def main() -> None:
+    t0 = time.time()
+
+    fig9 = paper_figs.fig9_single_workload()
+    _emit("fig9.deep_geomean_vs_craterlake", fig9["deep_geomean_vs_craterlake"])
+    _emit("fig9.deep_geomean_vs_f1plus", fig9["deep_geomean_vs_f1plus"])
+    for w, row in fig9["rows"].items():
+        _emit(f"fig9.{w}.flash_fhe_ms", row["flash_fhe_ms"])
+        _emit(f"fig9.{w}.craterlake_over_ff", row["craterlake_over_ff"])
+        _emit(f"fig9.{w}.f1plus_over_ff", row["f1plus_over_ff"])
+
+    fig10 = paper_figs.fig10_7nm()
+    _emit("fig10.ff_logreg_ms", fig10["ff_logreg_ms"])
+    _emit("fig10.ff_resnet20_ms", fig10["ff_resnet20_ms"])
+    _emit("fig10.ark_logreg_ms", fig10["ark_logreg_ms_derived"], 1)
+    _emit("fig10.perf_per_area_vs_ark_logreg", fig10["perf_per_area_vs_ark_logreg"], 1)
+
+    fig11 = paper_figs.fig11_ntt_hmul()
+    _emit("fig11.ntt_ops_per_s", fig11["ntt_ops_per_s"])
+    _emit("fig11.hmul_ops_per_s", fig11["hmul_ops_per_s"])
+    _emit("fig11.tensorfhe_ntt_ops_per_s", fig11["tensorfhe_ntt_derived"], 1)
+
+    fig12 = paper_figs.fig12_multi_shallow()
+    _emit("fig12.peak_multi_job_speedup", fig12["peak_speedup"])
+    for k, v in fig12["per_job_count"].items():
+        _emit(f"fig12.jobs{k}.makespan_speedup", v["makespan_speedup"])
+
+    fig8 = paper_figs.fig8_cache_sweep()
+    _emit("fig8.dnum1_saturates_at_320MB", int(fig8["dnum1_saturates_at_320MB"]))
+    for dnum, curve in fig8["curves_ms"].items():
+        for cap, ms in curve.items():
+            _emit(f"fig8.{dnum}.cache{cap}MB_ms", ms)
+
+    t3 = paper_figs.table3_area()
+    _emit("table3.total_14nm_mm2", t3["total_14nm_mm2"])
+    _emit("table3.swift_logic_fraction", t3["swift_logic_fraction"])
+    _emit("table3.claim_under_7pct", int(t3["claim_under_7pct"]))
+
+    fig13 = paper_figs.fig13_power()
+    _emit("fig13.total_w", fig13["total_w"])
+    _emit("fig13.vs_craterlake", fig13["vs_craterlake"])
+
+    pre = paper_figs.preemption_study()
+    _emit("preemption.shallow_turnaround_speedup", pre["shallow_avg_turnaround_speedup"])
+
+    perf = paper_figs.perf_beyond_paper()
+    for w, row in perf.items():
+        _emit(f"perf.{w}.baseline_ms", row["baseline_ms"])
+        _emit(f"perf.{w}.optimized_ms", row["optimized_ms"])
+        _emit(f"perf.{w}.speedup", row["speedup"])
+
+    rt = roofline_table.main()
+    _emit("roofline.cells_ok", rt["summary"]["ok"])
+    _emit("roofline.cells_skipped", rt["summary"]["skipped"])
+    _emit("roofline.cells_failed", rt["summary"]["failed"])
+    for dom, n in rt["dominant_histogram"].items():
+        _emit(f"roofline.dominant.{dom}", n)
+
+    _emit("bench.total_seconds", time.time() - t0)
+
+
+if __name__ == "__main__":
+    main()

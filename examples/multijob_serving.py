@@ -1,0 +1,47 @@
+"""Parallel shallow FHE jobs: affiliation = device group, executed for real.
+
+Runs N homomorphic multiplications (one per "customer job") through the
+shard_map executor — the numerical realisation of the paper's one-shallow-job-
+per-affiliation scheduling — and compares scheduler timelines vs CraterLake.
+
+    PYTHONPATH=src python examples/multijob_serving.py
+"""
+
+import numpy as np
+
+from repro.core import executor as E
+from repro.core import hardware as H, jobs as J, scheduler as S
+from repro.fhe import keys as K, ops, params as P
+
+
+def main():
+    p = P.make_params(1 << 9, 4, 2, check_security=False)
+    ks = K.full_keyset(p, seed=0)
+    rng = np.random.default_rng(0)
+
+    n_jobs = 4
+    pairs, zs = [], []
+    for j in range(n_jobs):
+        z1 = rng.normal(size=p.slots) * 0.4
+        z2 = rng.normal(size=p.slots) * 0.4
+        zs.append((z1, z2))
+        pairs.append((ops.encrypt(p, ks.pk, ops.encode(p, z1), seed=j),
+                      ops.encrypt(p, ks.pk, ops.encode(p, z2), seed=50 + j)))
+
+    mesh = E.affiliation_mesh(1)  # all local devices as one affiliation group
+    outs = E.parallel_shallow_mul(p, ks, pairs, mesh)
+    errs = [np.abs(ops.decrypt_decode(p, ks.sk, o) - z1 * z2).max()
+            for o, (z1, z2) in zip(outs, zs)]
+    print(f"[multijob] {n_jobs} jobs executed in one shard_map program; "
+          f"max err {max(errs):.2e}")
+
+    jobs = [J.make_job("lola_mnist_plain", job_id=i) for i in range(8)]
+    ff, cl = S.schedule(jobs, H.FLASH_FHE), S.schedule(jobs, H.CRATERLAKE)
+    print(f"[multijob] simulated 8-job makespan: FLASH-FHE "
+          f"{S.makespan(ff)/1e3:.0f} kcycles vs CraterLake "
+          f"{S.makespan(cl)/1e3:.0f} kcycles "
+          f"({S.makespan(cl)/S.makespan(ff):.1f}× — paper: up to 8×)")
+
+
+if __name__ == "__main__":
+    main()

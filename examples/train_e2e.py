@@ -1,0 +1,47 @@
+"""End-to-end driver: train a ~1M-param smollm-family model for a few hundred
+steps on byte-level text, checkpoint, restore, and generate.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+"""
+
+import argparse
+import tempfile
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import manager
+from repro.data import pipeline
+from repro.launch import train as train_mod
+from repro.models import registry
+from repro.serving.engine import Engine, SamplerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+
+    ckpt = tempfile.mkdtemp(prefix="repro_ckpt_")
+    out = train_mod.run("smollm-135m", smoke=True, steps=args.steps, batch=16,
+                        seq=64, ckpt_dir=ckpt, ckpt_every=100, lr=3e-3)
+    print(f"[e2e] loss {out['first_loss']:.3f} → {out['final_loss']:.3f}")
+    assert out["final_loss"] < out["first_loss"] - 1.0, "training must learn"
+
+    # restart-from-checkpoint proves the fault-tolerance path
+    step, tree = manager.restore(ckpt)
+    print(f"[e2e] restored checkpoint at step {step}")
+
+    cfg = configs.get_config("smollm-135m", smoke=True)
+    api = registry.build(cfg)
+    eng = Engine(api, out["params"], batch=2, max_seq=128)
+    corpus = pipeline.ByteCorpus(vocab=cfg.vocab)
+    prompts = corpus.batch(seed=9, step=0, batch=2, seq=31)[:, :32]
+    toks = eng.generate(prompts, n_tokens=48, sampler=SamplerConfig(temperature=0.0))
+    txt = bytes(int(t) % 256 for t in toks[0]).decode(errors="replace")
+    print(f"[e2e] greedy continuation: {txt!r}")
+
+
+if __name__ == "__main__":
+    main()

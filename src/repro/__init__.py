@@ -1,0 +1,14 @@
+"""repro: FLASH-FHE on TPU — heterogeneous JAX framework for mixed FHE workloads.
+
+Layout:
+  repro.fhe        CKKS scheme (modmath/rns/ntt/keys/ops/keyswitch/bootstrap)
+  repro.kernels    Pallas TPU kernels (+ jit wrappers + pure-jnp oracles)
+  repro.core       the paper's contribution: heterogeneous clusters + multi-job scheduler
+  repro.models     assigned LM architectures (dense / MoE / SSM / hybrid / enc-dec / VLM)
+  repro.training   optimizer + train step substrate
+  repro.serving    KV cache + decode substrate
+  repro.distributed / repro.launch   mesh, sharding rules, dry-run
+  repro.roofline   HLO-derived roofline terms
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,15 @@
+"""FLASH-FHE core: heterogeneous clusters, multi-job scheduler, simulator.
+
+The paper's contribution as a composable library:
+  hardware   — chip configs (FLASH-FHE + CraterLake/F1+ baselines), area/power
+  jobs       — workload descriptions + deep/shallow classifier
+  planner    — static instruction-stream generation (the "software driver")
+  cache      — hierarchical L1/L2 SRAM model
+  simulator  — cycle-level throughput model over instruction streams
+  scheduler  — multi-job placement: 1 shallow job/affiliation, deep = all
+               bootstrappable clusters, priority preemption
+  executor   — shard_map execution of parallel shallow jobs (affiliation =
+               device group), numerically real
+"""
+
+from . import cache, executor, hardware, jobs, planner, scheduler, simulator  # noqa: F401

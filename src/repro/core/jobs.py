@@ -1,0 +1,37 @@
+"""FHE job descriptions and the deep/shallow classifier (paper §4.2 step 1)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.fhe.params import CkksParams, workload_kind, workload_params
+
+
+@dataclasses.dataclass(frozen=True)
+class FheJob:
+    """One submitted FHE workload instance."""
+
+    workload: str  # name in fhe.params.WORKLOAD_PRESETS
+    params: CkksParams
+    priority: int = 0  # higher = more urgent (preemptive scheduling)
+    arrival_cycle: int = 0
+    job_id: int = 0
+
+    @property
+    def kind(self) -> str:
+        return classify(self.params)
+
+
+def classify(params: CkksParams) -> str:
+    """Paper §3.2: shallow ⇔ N ≤ 2^14 (no bootstrapping budget needed)."""
+    return "shallow" if params.is_shallow() else "deep"
+
+
+def make_job(workload: str, priority: int = 0, arrival_cycle: int = 0, job_id: int = 0) -> FheJob:
+    p = workload_params(workload)
+    job = FheJob(workload=workload, params=p, priority=priority,
+                 arrival_cycle=arrival_cycle, job_id=job_id)
+    assert job.kind == workload_kind(workload), (
+        f"classifier disagrees with preset for {workload}"
+    )
+    return job

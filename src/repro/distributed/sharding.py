@@ -1,0 +1,135 @@
+"""Sharding rules for the multi-pod mesh (DESIGN.md §5).
+
+Logical mesh axes:
+  pod    — cross-pod pure data parallelism (gradient all-reduce, compressible)
+  data   — in-pod data parallel + FSDP (weights/optimizer sharded over it)
+  model  — tensor/expert/sequence parallel
+
+Divisibility-aware rules: a tensor dim is sharded on an axis only when the
+axis size divides it — configs like hymba (25 heads) or vocab 32001 fall back
+to the next-best layout instead of failing to lower.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Sharding policy (perf hillclimb knob):
+#   "tp"  — default: tensor-parallel over 'model', FSDP over 'data'
+#   "dp"  — pure data parallel: batch over every mesh axis, weights FSDP over
+#           ('data','model'); right for small models whose TP all-gathers
+#           dominate (see EXPERIMENTS.md §Perf, smollm cell)
+_POLICY: contextvars.ContextVar[str] = contextvars.ContextVar("shard_policy", default="tp")
+
+
+@contextlib.contextmanager
+def policy(name: str):
+    assert name in ("tp", "dp")
+    tok = _POLICY.set(name)
+    try:
+        yield
+    finally:
+        _POLICY.reset(tok)
+
+
+def current_policy() -> str:
+    return _POLICY.get()
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Batch-sharding axes: ('pod', 'data') when multi-pod; under the pure-DP
+    policy the 'model' axis carries batch too."""
+    names = ("pod", "data", "model") if _POLICY.get() == "dp" else ("pod", "data")
+    return tuple(a for a in names if a in mesh.shape)
+
+
+def divisible(dim: int, mesh: Mesh, *axes: str) -> bool:
+    total = 1
+    for a in axes:
+        total *= axis_size(mesh, a)
+    return dim % total == 0
+
+
+def weight_spec(mesh: Mesh, shape: tuple[int, ...], tp_dim: int | None,
+                fsdp_dim: int | None) -> P:
+    """Spec for a weight: tensor-parallel on `tp_dim`, FSDP on `fsdp_dim`.
+
+    Falls back to replication per-dim when sizes don't divide.  Under the
+    pure-DP policy nothing is tensor-parallel; FSDP spans ('data','model').
+    """
+    parts: list = [None] * len(shape)
+    if _POLICY.get() == "dp":
+        if fsdp_dim is None:
+            fsdp_dim = tp_dim
+        if fsdp_dim is not None:
+            if divisible(shape[fsdp_dim], mesh, "data", "model"):
+                parts[fsdp_dim] = ("data", "model")
+            elif divisible(shape[fsdp_dim], mesh, "data"):
+                parts[fsdp_dim] = "data"
+        return P(*parts)
+    if tp_dim is not None and divisible(shape[tp_dim], mesh, "model"):
+        parts[tp_dim] = "model"
+    if fsdp_dim is not None and fsdp_dim != tp_dim and \
+            divisible(shape[fsdp_dim], mesh, "data"):
+        parts[fsdp_dim] = "data"
+    return P(*parts)
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    """with_sharding_constraint that silently no-ops off-mesh (CPU tests)."""
+    if mesh.devices.size == 1:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_spec(mesh: Mesh, ndim: int, seq_axis: int | None = None,
+               shard_seq: bool = False) -> P:
+    """Activations: batch dim over ('pod','data'); optionally seq over 'model'."""
+    parts: list = [None] * ndim
+    parts[0] = dp_axes(mesh) or None
+    if shard_seq and seq_axis is not None:
+        parts[seq_axis] = "model"
+    return P(*parts)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def sanitize_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop any axis assignment that doesn't divide its dimension."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, part in zip(shape, parts):
+        if part is None:
+            out.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        total = 1
+        for a in axes:
+            total *= axis_size(mesh, a)
+        out.append(part if dim % total == 0 else None)
+    return P(*out)
+
+
+def sanitize_tree(spec_tree, struct_tree, mesh: Mesh):
+    """sanitize_spec over matching (spec, ShapeDtypeStruct) trees."""
+    return jax.tree.map(
+        lambda s, x: sanitize_spec(s, x.shape, mesh),
+        spec_tree, struct_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )

@@ -1,0 +1,13 @@
+"""CKKS FHE scheme implemented in JAX.
+
+The FHE layer uses exact integer arithmetic:
+  * oracle path: uint64 jnp ops (requires x64 — enabled below at import);
+  * TPU path:    uint32 Montgomery arithmetic (see repro.fhe.modmath / repro.kernels).
+
+x64 is enabled here (and only here) because RNS arithmetic on the host/reference path
+needs 64-bit integers.  Model/training code is dtype-explicit and unaffected.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,182 @@
+"""CKKS bootstrapping: ModRaise → CoeffToSlot → EvalMod → SlotToCoeff.
+
+Full-slot ("packed") bootstrapping per the paper's Packed Bootstrapping
+workload: all N/2 slots are used, so CoeffToSlot produces two ciphertexts
+(first/second half of the coefficient vector) and EvalMod runs on both.
+
+The homomorphic pipeline here is exactly the instruction mix the paper's
+bootstrappable clusters are provisioned for: BSGS rotations (key-switch =
+iNTT→BConv→NTT) dominate CtS/StC, and EvalMod is a Chebyshev ladder of
+ct×ct multiplications (each with a relinearisation key-switch).
+
+Math summary (DESIGN.md §6): with E0[j,i] = ζ^{g_j·i} (i < n), E1 the second
+half, and z = slots of the ModRaise'd ciphertext, the coefficient halves are
+a0 = Re(A0·z), a1 = Re(A1·z) with A{0,1} = (2/N)·E{0,1}^H.  EvalMod applies
+(q0/2πΔ)·sin(2π·a/q0) via Chebyshev on [-(K+½)θ, (K+½)θ], θ = q0/Δ.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from . import encoder, linear, ops, poly, polyeval, trace
+from .keys import KeySet, SecretKey, full_keyset, galois_keygen
+from .params import CkksParams
+
+
+@functools.lru_cache(maxsize=8)
+def _cts_matrices(n: int) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """(A0, A1) coeff-extraction and (E0, E1) slot-restoration matrices."""
+    slots = n // 2
+    zeta, s2n, _ = encoder._tables(n)
+    g = 2 * s2n + 1  # generator exponents
+    i0 = np.arange(slots)
+    E0 = np.exp(1j * np.pi * np.outer(g, i0) / n)  # (slots, slots): ζ^{g_j·i}
+    E1 = np.exp(1j * np.pi * np.outer(g, i0 + slots) / n)
+    A0 = (2.0 / n) * E0.conj().T
+    A1 = (2.0 / n) * E1.conj().T
+    return A0, A1, E0, E1
+
+
+@dataclasses.dataclass
+class BootstrapContext:
+    params: CkksParams  # the (large-L) bootstrapping parameter set
+    keys: KeySet
+    cts_plans: tuple[linear.BsgsPlan, linear.BsgsPlan]
+    stc_plans: tuple[linear.BsgsPlan, linear.BsgsPlan]
+    sine_coeffs: np.ndarray
+    K: int
+    eval_mod_degree: int
+
+    @property
+    def depth(self) -> int:
+        """Levels consumed: CtS(1) + normalise(1) + Chebyshev + StC(1)."""
+        d = self.eval_mod_degree
+        k = 1
+        while k * k < d + 1:
+            k *= 2
+        cheb_depth = int(np.ceil(np.log2(k))) + max(0, int(np.ceil(np.log2((d + 1) / k)))) + 2
+        return 3 + cheb_depth
+
+
+def build_context(
+    params: CkksParams,
+    seed: int = 0,
+    K: int | None = None,
+    degree: int | None = None,
+    h: int | None = None,
+) -> BootstrapContext:
+    """Precompute matrices, sine approximation and every needed Galois key."""
+    n = params.n
+    if h is None:
+        h = min(192, n // 4)
+    if K is None:
+        K = max(8, int(np.ceil(1.3 * np.sqrt(h))))
+    if degree is None:
+        degree = _default_degree(K)
+
+    A0, A1, E0, E1 = _cts_matrices(n)
+    cts_plans = (linear.plan_matrix(A0), linear.plan_matrix(A1))
+    stc_plans = (linear.plan_matrix(E0), linear.plan_matrix(E1))
+
+    # EvalMod target: h(x) = (q0/Δ)·sin(2π·(K+½)·x)/(2π) fitted on [-1, 1];
+    # input is a/q0 normalised by (K+½)·θ with θ = q0/Δ.
+    q0 = float(params.q_primes[0])
+    theta = q0 / params.scale
+    c = 2.0 * np.pi * (K + 0.5)
+    f = lambda x: (q0 / params.scale) * np.sin(c * x) / (2.0 * np.pi)
+    coeffs = polyeval.chebyshev_fit(f, degree)
+
+    rots = set()
+    for p in (*cts_plans, *stc_plans):
+        rots |= p.rotations()
+    keys = full_keyset(params, seed=seed, rotations=tuple(sorted(rots)), conjugate=True, h=h)
+    return BootstrapContext(
+        params=params, keys=keys, cts_plans=cts_plans, stc_plans=stc_plans,
+        sine_coeffs=coeffs, K=K, eval_mod_degree=degree,
+    )
+
+
+def _default_degree(K: int) -> int:
+    """Chebyshev degree for sin(2π(K+½)x): Bessel decay sets ~1.3·c + margin."""
+    c = 2.0 * np.pi * (K + 0.5)
+    return int(np.ceil(1.25 * c + 12))
+
+
+def mod_raise(ctx: BootstrapContext, ct: ops.Ciphertext) -> ops.Ciphertext:
+    """Level-0 ciphertext → top level; plaintext becomes m + q0·I."""
+    params = ctx.params
+    assert ct.level == 0, "mod_raise expects an exhausted (level-0) ciphertext"
+    q0 = int(params.q_primes[0])
+    L = params.L
+    trace.record("MODRAISE", params.n, L + 1)
+
+    def raise_poly(c_eval):
+        c = poly.to_coeff(c_eval, params, (0,))  # (1, N) residues mod q0
+        v = np.asarray(c[0], np.uint64)
+        centered = v.astype(np.int64) - np.where(v > q0 // 2, q0, 0)
+        rns = poly.to_rns_signed(centered, params.q_primes)
+        return poly.to_eval(rns, params, poly.q_idx(params, L))
+
+    return ops.Ciphertext(
+        c0=raise_poly(ct.c0), c1=raise_poly(ct.c1), level=L, scale=ct.scale
+    )
+
+
+def coeff_to_slot(ctx: BootstrapContext, ct: ops.Ciphertext) -> tuple[ops.Ciphertext, ops.Ciphertext]:
+    """Slots become the coefficient halves a0, a1 (each real)."""
+    p, keys = ctx.params, ctx.keys
+    u0 = linear.apply_bsgs(p, ct, ctx.cts_plans[0], keys)
+    u1 = linear.apply_bsgs(p, ct, ctx.cts_plans[1], keys)
+    return linear.real_part(p, u0, keys), linear.real_part(p, u1, keys)
+
+
+def eval_mod(ctx: BootstrapContext, ct: ops.Ciphertext, coeff_scale: float) -> ops.Ciphertext:
+    """Remove the q0·I component: slot values v = a/coeff_scale → (q0/Δ)·sin(2π·a/q0)/(2π) ≈ m/Δ.
+
+    ``coeff_scale`` is the ModRaise'd ciphertext's scale — the factor relating
+    the CtS slot *values* to the underlying integer coefficients a (homomorphic
+    ops preserve values, so the CtS output's own bookkeeping scale is NOT it).
+    """
+    p, keys = ctx.params, ctx.keys
+    q0 = float(p.q_primes[0])
+    norm = coeff_scale / ((ctx.K + 0.5) * q0)  # v·norm = a/((K+½)·q0) ∈ [-1, 1]
+    # exact-scale normalisation: seeds the Chebyshev tree at scale Δ so the
+    # multiplicative scale-doubling dynamics stay bounded
+    x = ops.mul_const_exact(p, ct, norm, p.scale)
+    basis = polyeval.ChebyshevBasis(p, x, keys, ctx.eval_mod_degree)
+    return polyeval.eval_chebyshev(p, basis, ctx.sine_coeffs, keys)
+
+
+def slot_to_coeff(ctx: BootstrapContext, a0: ops.Ciphertext, a1: ops.Ciphertext) -> ops.Ciphertext:
+    p, keys = ctx.params, ctx.keys
+    v0 = linear.apply_bsgs(p, a0, ctx.stc_plans[0], keys)
+    v1 = linear.apply_bsgs(p, a1, ctx.stc_plans[1], keys)
+    return polyeval.add_any(p, v0, v1)
+
+
+def bootstrap(
+    ctx: BootstrapContext, ct: ops.Ciphertext, post_scale: float | None = None
+) -> ops.Ciphertext:
+    """Refresh an exhausted ciphertext to level L − depth.
+
+    ``post_scale``: uniform-prime adaptation (DESIGN.md §6) — with 30-bit q0 ≈ Δ
+    the message must enter bootstrapping attenuated (|m| ≪ q0); the caller
+    divides before exhaustion and passes the same factor here to restore it.
+    """
+    trace.record("BOOTSTRAP_BEGIN", ctx.params.n, ctx.params.L + 1)
+    in_scale = ct.scale
+    raised = mod_raise(ctx, ct)
+    a0, a1 = coeff_to_slot(ctx, raised)
+    m0 = eval_mod(ctx, a0, raised.scale)
+    m1 = eval_mod(ctx, a1, raised.scale)
+    out = slot_to_coeff(ctx, m0, m1)
+    # amplitude bookkeeping: the sine was fitted for input scale = params.scale
+    out = ops.Ciphertext(out.c0, out.c1, out.level, out.scale * in_scale / ctx.params.scale)
+    if post_scale is not None:
+        out = ops.mul_const(ctx.params, out, float(post_scale), rescale_after=True)
+    trace.record("BOOTSTRAP_END", ctx.params.n, out.level + 1)
+    return out

@@ -1,0 +1,117 @@
+"""Hybrid key switching — the iNTT→BConv→NTT pipeline the paper accelerates.
+
+`key_switch(d, level, ...)` homomorphically maps a polynomial d (eval domain,
+basis q_0..q_ℓ) multiplied by s' into a pair under s:
+
+    1. INTT d over the active basis                       (iNTT stage)
+    2. per digit j < β(ℓ): prescale by [B̂_i^{-1}]_{b_i},
+       BConv digit → {q_0..q_ℓ} ∪ {p_0..p_α-1}            (BConv stage)
+    3. NTT each converted digit over the extended basis   (NTT stage)
+    4. accumulate  Σ_j  d̂_j ∘ ksk_j                       (MAC stage)
+    5. ModDown by P: INTT(P limbs) → BConv P→Q → NTT → subtract, ×[P^{-1}]_q
+
+Every stage records trace instructions; this function *is* the workload the
+bootstrappable clusters are shaped around.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bconv import ops as bconv_ops
+from repro.kernels.modops import ops as mo
+
+from . import poly, rns, trace
+from .keys import SwitchingKey
+from .params import CkksParams
+
+
+@functools.lru_cache(maxsize=2048)
+def _digit_tables(params: CkksParams, level: int, j: int):
+    """(src_idx, bhat_inv, w, dst_primes) for digit j at ``level``."""
+    digit_idx = tuple(i for i in params.digit(j) if i <= level)
+    src = poly.primes_for(params, digit_idx)
+    dst_idx = poly.ext_idx(params, level)
+    dst = poly.primes_for(params, dst_idx)
+    bhat_inv, w = rns.bconv_tables(src, dst)
+    return digit_idx, jnp.asarray(bhat_inv), jnp.asarray(w), np.array(dst, np.uint64)
+
+
+@functools.lru_cache(maxsize=512)
+def _moddown_tables(params: CkksParams, level: int):
+    p_primes = poly.primes_for(params, poly.p_idx(params))
+    q_primes = poly.primes_for(params, poly.q_idx(params, level))
+    bhat_inv, w = rns.bconv_tables(p_primes, q_primes)
+    P = 1
+    for p in p_primes:
+        P *= int(p)
+    pinv = np.array([pow(P % int(q), -1, int(q)) for q in q_primes], np.uint64)
+    return jnp.asarray(bhat_inv), jnp.asarray(w), np.array(q_primes, np.uint64), jnp.asarray(
+        pinv[:, None].astype(np.uint32)
+    )
+
+
+def _scale_limbs(x, consts, qs, backend):
+    """x ∘ diag(consts) per limb — consts: (k,) broadcast over N."""
+    trace.record("PMULT", x.shape[-1], x.shape[-2])
+    c = jnp.broadcast_to(jnp.asarray(consts, jnp.uint32)[:, None], x.shape)
+    return mo.pointwise_mulmod(x, c, qs, backend="ref" if backend == "ref" else backend)
+
+
+def mod_down(acc_ext, params: CkksParams, level: int, backend: str = "auto"):
+    """Extended-basis eval-domain poly → q-basis, divided (rounded) by P."""
+    nq = level + 1
+    q_part, p_part = acc_ext[:nq], acc_ext[nq:]
+    bhat_inv, w, q_np, pinv = _moddown_tables(params, level)
+    p_np = np.array(poly.primes_for(params, poly.p_idx(params)), np.uint64)
+
+    p_coeff = poly.to_coeff(p_part, params, poly.p_idx(params), backend)
+    xhat = _scale_limbs(p_coeff, bhat_inv, p_np, backend)
+    trace.record("BCONV", params.n, len(p_np), dst=nq)
+    conv = bconv_ops.bconv(xhat, w, q_np, backend="ref" if backend == "ref" else "auto")
+    conv_eval = poly.to_eval(conv, params, poly.q_idx(params, level), backend)
+
+    trace.record("PSUB", params.n, nq)
+    diff = mo.pointwise_submod(q_part, conv_eval, q_np, backend="ref")
+    trace.record("PMULT", params.n, nq)
+    pinv_b = jnp.broadcast_to(pinv, diff.shape)
+    return mo.pointwise_mulmod(diff, pinv_b, q_np, backend="ref")
+
+
+def key_switch(d_eval, params: CkksParams, level: int, ksk: SwitchingKey, backend: str = "auto"):
+    """d (eval, basis q_0..q_ℓ) ⊗ s' → (ks0, ks1) eval over q_0..q_ℓ under s."""
+    n = params.n
+    beta = params.beta(level)
+    ext = poly.ext_idx(params, level)
+    ext_primes = np.array(poly.primes_for(params, ext), np.uint64)
+    nq = level + 1
+
+    trace.record("LOAD_KSK", n, beta * 2 * len(ext))
+    d_coeff = poly.to_coeff(d_eval, params, poly.q_idx(params, level), backend)
+
+    acc0 = jnp.zeros((len(ext), n), jnp.uint32)
+    acc1 = jnp.zeros((len(ext), n), jnp.uint32)
+    ksk_sel = jnp.concatenate(
+        [ksk.k[:, :, : level + 1], ksk.k[:, :, params.L + 1 :]], axis=2
+    )  # (dnum, 2, |ext|, N) restricted to active + special limbs
+    for j in range(beta):
+        digit_idx, bhat_inv, w, dst = _digit_tables(params, level, j)
+        src_np = np.array(poly.primes_for(params, digit_idx), np.uint64)
+        dj = d_coeff[digit_idx[0] : digit_idx[-1] + 1]
+        xhat = _scale_limbs(dj, bhat_inv, src_np, backend)
+        trace.record("BCONV", n, len(digit_idx), dst=len(ext))
+        dj_ext = bconv_ops.bconv(xhat, w, dst, backend="ref" if backend == "ref" else "auto")
+        dj_eval = poly.to_eval(dj_ext, params, ext, backend)
+        trace.record("PMULT", n, 2 * len(ext))
+        t0 = mo.pointwise_mulmod(dj_eval, ksk_sel[j, 0], ext_primes, backend="ref")
+        t1 = mo.pointwise_mulmod(dj_eval, ksk_sel[j, 1], ext_primes, backend="ref")
+        trace.record("PADD", n, 2 * len(ext))
+        acc0 = mo.pointwise_addmod(acc0, t0, ext_primes, backend="ref")
+        acc1 = mo.pointwise_addmod(acc1, t1, ext_primes, backend="ref")
+
+    ks0 = mod_down(acc0, params, level, backend)
+    ks1 = mod_down(acc1, params, level, backend)
+    return ks0, ks1

@@ -1,0 +1,119 @@
+"""Homomorphic linear transforms via the BSGS diagonal method.
+
+M·v = Σ_g rot_{g·n1}( Σ_b  rot_{-g·n1}(diag_{g·n1+b}(M)) ∘ rot_b(v) )
+
+Baby rotations rot_b(v) are shared across giants, so an n×n dense transform
+costs ≈ 2√n key-switched rotations + n plaintext multiplies — the dominant
+workload of CoeffToSlot/SlotToCoeff in bootstrapping (paper §3.3: rotation-
+heavy deep pipelines).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from . import ops, polyeval
+from .keys import KeySet
+from .params import CkksParams
+
+
+@dataclasses.dataclass
+class BsgsPlan:
+    n1: int  # baby-step count
+    diags: dict[int, np.ndarray]  # d → diag_d(M) (length n complex)
+
+    def rotations(self) -> set[int]:
+        """Slot rotations whose Galois keys the transform needs."""
+        rots = set()
+        for d in self.diags:
+            g, b = divmod(d, self.n1)
+            if b:
+                rots.add(b)
+            if g:
+                rots.add(g * self.n1)
+        return rots
+
+
+def plan_matrix(m: np.ndarray, n1: int | None = None, tol: float = 0.0) -> BsgsPlan:
+    """Extract (optionally sparse) diagonals of an n×n matrix for BSGS."""
+    n = m.shape[0]
+    assert m.shape == (n, n)
+    if n1 is None:
+        n1 = max(1, 1 << int(round(math.log2(math.sqrt(n)))))  # ≈ √n, power of two
+    idx = np.arange(n)
+    diags = {}
+    mx = np.abs(m).max() or 1.0
+    for d in range(n):
+        u = m[idx, (idx + d) % n]
+        if tol == 0.0 or np.abs(u).max() > tol * mx:
+            diags[int(d)] = u.astype(np.complex128)
+    return BsgsPlan(n1=n1, diags=diags)
+
+
+def apply_bsgs(
+    params: CkksParams,
+    ct: ops.Ciphertext,
+    plan: BsgsPlan,
+    keys: KeySet,
+    scale: float | None = None,
+) -> ops.Ciphertext:
+    """Homomorphic M·v.  Consumes one level (single rescale at the end)."""
+    n = params.slots
+    scale = params.scale if scale is None else scale
+    lv = ct.level
+
+    babies: dict[int, ops.Ciphertext] = {0: ct}
+    needed_b = sorted({d % plan.n1 for d in plan.diags})
+    for b in needed_b:
+        if b and b not in babies:
+            babies[b] = ops.rotate(params, ct, b, keys)
+
+    by_giant: dict[int, list[int]] = {}
+    for d in plan.diags:
+        by_giant.setdefault(d // plan.n1, []).append(d)
+
+    total: ops.Ciphertext | None = None
+    for g, ds in sorted(by_giant.items()):
+        acc: ops.Ciphertext | None = None
+        for d in ds:
+            b = d % plan.n1
+            u = np.roll(plan.diags[d], g * plan.n1)  # pre-rotate the diagonal
+            pt = ops.encode(params, u, level=lv, scale=scale)
+            term = ops.mul_plain(params, babies[b], pt, rescale_after=False)
+            acc = term if acc is None else ops.add(params, acc, term)
+        if g:
+            acc = ops.rotate(params, acc, g * plan.n1, keys)
+        total = acc if total is None else ops.add(params, total, acc)
+
+    return ops.rescale(params, total)
+
+
+def apply_bsgs_pair(
+    params: CkksParams,
+    ct: ops.Ciphertext,
+    plans: tuple[BsgsPlan, BsgsPlan],
+    keys: KeySet,
+    scale: float | None = None,
+) -> tuple[ops.Ciphertext, ops.Ciphertext]:
+    """Two transforms of the same input sharing the baby rotations."""
+    # (simple composition; baby-step sharing is an optimisation the scheduler
+    # models — numerically we just apply twice)
+    return (
+        apply_bsgs(params, ct, plans[0], keys, scale),
+        apply_bsgs(params, ct, plans[1], keys, scale),
+    )
+
+
+def real_part(params: CkksParams, ct: ops.Ciphertext, keys: KeySet) -> ops.Ciphertext:
+    """(ct + conj(ct)) / 2 — scale the ½ into the bookkeeping (free)."""
+    s = ops.add(params, ct, ops.conjugate(params, ct, keys))
+    return ops.Ciphertext(s.c0, s.c1, s.level, s.scale * 2.0)
+
+
+def imag_part(params: CkksParams, ct: ops.Ciphertext, keys: KeySet) -> ops.Ciphertext:
+    """(ct − conj(ct)) / 2i — fold 1/(2i) into a plaintext mul."""
+    d = ops.sub(params, ct, ops.conjugate(params, ct, keys))
+    return ops.mul_const(params, d, -0.5j, rescale_after=True)

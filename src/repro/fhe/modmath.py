@@ -1,0 +1,238 @@
+"""Modular arithmetic for RNS-CKKS, twice:
+
+1. ``*_u64`` — exact uint64 jnp arithmetic.  The oracle path (requires x64; enabled by
+   ``repro.fhe``).  Used by kernel ``ref.py`` oracles and host-side precomputation.
+
+2. ``*_u32`` — TPU-native path.  TPUs have no 64-bit integer datapath, so every product
+   is built from 16-bit limbs in uint32 (``mulhi32``) and reduced with Montgomery
+   multiplication (R = 2^32, primes q < 2^31).  This is what the Pallas kernels use —
+   inside a kernel *and* as plain jnp (the functions are dtype-pure and jit/pallas
+   compatible).
+
+Host-side (Python int) utilities generate NTT-friendly primes (q ≡ 1 mod 2^(log2N+1))
+and roots of unity.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+MASK16 = jnp.uint32(0xFFFF)
+U32_MOD = 1 << 32
+
+
+# ---------------------------------------------------------------------------
+# Host-side integer number theory (Python ints; runs once at parameter build)
+# ---------------------------------------------------------------------------
+
+_MR_BASES = (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37)  # deterministic < 3.3e24
+
+
+def is_prime(n: int) -> bool:
+    if n < 2:
+        return False
+    for p in (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37):
+        if n % p == 0:
+            return n == p
+    d, r = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        r += 1
+    for a in _MR_BASES:
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(r - 1):
+            x = x * x % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def gen_ntt_primes(nbits: int, count: int, two_n: int, skip: tuple[int, ...] = ()) -> list[int]:
+    """``count`` primes of ~``nbits`` bits with q ≡ 1 (mod two_n), descending from 2^nbits.
+
+    ``two_n`` should be 2N for the largest supported ring degree so the same primes work
+    for every smaller power-of-two ring.
+    """
+    assert nbits < 31, "u32 Montgomery path requires q < 2^31"
+    out: list[int] = []
+    q = (1 << nbits) + 1
+    # descend over the arithmetic progression 1 mod two_n
+    q -= (q - 1) % two_n
+    while len(out) < count:
+        if q < (1 << (nbits - 1)):
+            raise ValueError(f"not enough {nbits}-bit NTT primes for 2N={two_n}")
+        if q not in skip and is_prime(q):
+            out.append(q)
+        q -= two_n
+    return out
+
+
+def find_primitive_root(q: int) -> int:
+    """Smallest primitive root of prime q."""
+    phi = q - 1
+    factors = set()
+    n = phi
+    d = 2
+    while d * d <= n:
+        while n % d == 0:
+            factors.add(d)
+            n //= d
+        d += 1
+    if n > 1:
+        factors.add(n)
+    for g in range(2, q):
+        if all(pow(g, phi // f, q) != 1 for f in factors):
+            return g
+    raise ValueError(f"no primitive root for {q}")
+
+
+@functools.lru_cache(maxsize=None)
+def root_of_unity(order: int, q: int) -> int:
+    """A primitive ``order``-th root of unity mod prime q (order | q-1)."""
+    assert (q - 1) % order == 0, f"{order} does not divide {q}-1"
+    g = find_primitive_root(q)
+    w = pow(g, (q - 1) // order, q)
+    assert pow(w, order, q) == 1 and pow(w, order // 2, q) == q - 1
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Montgomery constants (host-side, per prime)
+# ---------------------------------------------------------------------------
+
+
+class MontConstants:
+    """Per-prime Montgomery constants for the u32 path (R = 2^32)."""
+
+    __slots__ = ("q", "qinv_neg", "r1", "r2")
+
+    def __init__(self, q: int):
+        assert q % 2 == 1 and q < (1 << 31)
+        self.q = q
+        self.qinv_neg = (-pow(q, -1, U32_MOD)) % U32_MOD  # -q^{-1} mod 2^32
+        self.r1 = U32_MOD % q  # R mod q   (Montgomery form of 1)
+        self.r2 = (U32_MOD * U32_MOD) % q  # R^2 mod q (to_mont multiplier)
+
+    def to_mont_int(self, a: int) -> int:
+        return (a << 32) % self.q
+
+
+def mont_constants_array(qs) -> dict[str, np.ndarray]:
+    cs = [MontConstants(int(q)) for q in qs]
+    return {
+        "q": np.array([c.q for c in cs], np.uint32),
+        "qinv_neg": np.array([c.qinv_neg for c in cs], np.uint32),
+        "r1": np.array([c.r1 for c in cs], np.uint32),
+        "r2": np.array([c.r2 for c in cs], np.uint32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# uint64 oracle path
+# ---------------------------------------------------------------------------
+
+
+def add_mod_u64(a, b, q):
+    a = jnp.asarray(a, jnp.uint64)
+    b = jnp.asarray(b, jnp.uint64)
+    q = jnp.asarray(q, jnp.uint64)
+    s = a + b
+    return jnp.where(s >= q, s - q, s)
+
+
+def sub_mod_u64(a, b, q):
+    a = jnp.asarray(a, jnp.uint64)
+    b = jnp.asarray(b, jnp.uint64)
+    q = jnp.asarray(q, jnp.uint64)
+    return jnp.where(a >= b, a - b, a + q - b)
+
+
+def mul_mod_u64(a, b, q):
+    """(a*b) mod q for q < 2^31 — the 62-bit product is exact in uint64."""
+    a = jnp.asarray(a, jnp.uint64)
+    b = jnp.asarray(b, jnp.uint64)
+    q = jnp.asarray(q, jnp.uint64)
+    return (a * b) % q
+
+
+# ---------------------------------------------------------------------------
+# uint32 TPU-native path
+# ---------------------------------------------------------------------------
+
+
+def mulhi32(a, b):
+    """High 32 bits of the 64-bit product of two uint32, using only uint32 ops.
+
+    Schoolbook over 16-bit limbs; every intermediate provably fits uint32.
+    """
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    al = a & MASK16
+    ah = a >> 16
+    bl = b & MASK16
+    bh = b >> 16
+    t = al * bl
+    u = ah * bl + (t >> 16)  # ≤ (2^16-1)^2 + (2^16-1) < 2^32
+    v = al * bh + (u & MASK16)  # same bound
+    return ah * bh + (u >> 16) + (v >> 16)
+
+
+def mont_mul_u32(a, b, q, qinv_neg):
+    """Montgomery product a·b·R^{-1} mod q (R = 2^32, q < 2^31, odd).
+
+    All inputs uint32 (broadcastable).  Output in [0, q).
+    """
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    q = q.astype(jnp.uint32)
+    qinv_neg = qinv_neg.astype(jnp.uint32)
+    t_lo = a * b  # low 32 bits (wrap)
+    t_hi = mulhi32(a, b)
+    m = t_lo * qinv_neg  # wrap; m = t_lo * (-q^{-1}) mod 2^32
+    mq_hi = mulhi32(m, q)
+    # t + m*q ≡ 0 mod 2^32 by construction ⇒ low word of the sum is zero and the
+    # carry into the high word is 1 unless t_lo == 0.
+    carry = (t_lo != 0).astype(jnp.uint32)
+    res = t_hi + mq_hi + carry  # < 2q < 2^32
+    return jnp.where(res >= q, res - q, res)
+
+
+def add_mod_u32(a, b, q):
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    q = q.astype(jnp.uint32)
+    s = a + b  # < 2q < 2^32
+    return jnp.where(s >= q, s - q, s)
+
+
+def sub_mod_u32(a, b, q):
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    q = q.astype(jnp.uint32)
+    return jnp.where(a >= b, a - b, a + q - b)
+
+
+def to_mont_u32(a, q, qinv_neg, r2):
+    """a → a·R mod q."""
+    return mont_mul_u32(a, jnp.asarray(r2, jnp.uint32), q, qinv_neg)
+
+
+def from_mont_u32(a, q, qinv_neg):
+    """a·R → a mod q (montmul by 1)."""
+    return mont_mul_u32(a, jnp.ones((), jnp.uint32), q, qinv_neg)
+
+
+def mul_mod_u32(a, b, q, qinv_neg, r2):
+    """Plain (a*b) mod q via two Montgomery multiplies (variable × variable)."""
+    return mont_mul_u32(mont_mul_u32(a, b, q, qinv_neg), jnp.asarray(r2, jnp.uint32), q, qinv_neg)
+
+
+def pow_mod_host(base: int, exp: int, q: int) -> int:
+    return pow(base, exp, q)

@@ -1,0 +1,298 @@
+"""CKKS homomorphic operations over eval-domain RNS ciphertexts.
+
+Ciphertexts are pairs of (level+1, N) uint32 eval-domain polynomials with a
+tracked floating-point scale (Lattigo-style scale management).  All heavy ops
+dispatch through the kernel wrappers (Pallas on TPU, u64 oracle elsewhere) and
+record trace instructions for the core scheduler/simulator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.modops import ops as mo
+
+from . import encoder, keyswitch, poly, trace
+from .keys import KeySet, PublicKey, SecretKey, SwitchingKey
+from .params import CkksParams
+
+
+@dataclasses.dataclass
+class Ciphertext:
+    c0: jnp.ndarray  # (level+1, N) uint32, eval domain
+    c1: jnp.ndarray
+    level: int
+    scale: float
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.c0.nbytes + self.c1.nbytes)
+
+
+@dataclasses.dataclass
+class Plaintext:
+    data: jnp.ndarray  # (level+1, N) uint32, eval domain
+    level: int
+    scale: float
+
+
+def _qs(params: CkksParams, level: int) -> np.ndarray:
+    return np.array(params.q_primes[: level + 1], np.uint64)
+
+
+# ---------------------------------------------------------------------------
+# encode / encrypt / decrypt
+# ---------------------------------------------------------------------------
+
+
+def encode(params: CkksParams, z, level: int | None = None, scale: float | None = None) -> Plaintext:
+    level = params.L if level is None else level
+    scale = params.scale if scale is None else scale
+    primes = params.q_primes[: level + 1]
+    coeffs = encoder.encode(np.asarray(z), params.n, scale, primes)
+    data = poly.to_eval(coeffs, params, poly.q_idx(params, level))
+    return Plaintext(data=data, level=level, scale=scale)
+
+
+def encode_const(params: CkksParams, c, level: int, scale: float) -> Plaintext:
+    primes = params.q_primes[: level + 1]
+    coeffs = encoder.encode_const(c, params.n, scale, primes)
+    data = poly.to_eval(coeffs, params, poly.q_idx(params, level))
+    return Plaintext(data=data, level=level, scale=scale)
+
+
+def decode(params: CkksParams, pt: Plaintext) -> np.ndarray:
+    coeffs = poly.to_coeff(pt.data, params, poly.q_idx(params, pt.level))
+    limbs = min(pt.level + 1, 4)
+    return encoder.decode(np.asarray(coeffs), params.q_primes[: pt.level + 1], pt.scale, max_limbs=limbs)
+
+
+def encrypt(params: CkksParams, pk: PublicKey, pt: Plaintext, seed: int = 17) -> Ciphertext:
+    rng = np.random.default_rng(seed)
+    level = pt.level
+    idx = poly.q_idx(params, level)
+    qs = _qs(params, level)
+    v = poly.to_eval(
+        poly.to_rns_signed(poly.sample_ternary(rng, params.n, params.n // 2), params.q_primes[: level + 1]),
+        params, idx,
+    )
+    e0 = poly.to_eval(
+        poly.to_rns_signed(poly.sample_gaussian(rng, params.n), params.q_primes[: level + 1]), params, idx
+    )
+    e1 = poly.to_eval(
+        poly.to_rns_signed(poly.sample_gaussian(rng, params.n), params.q_primes[: level + 1]), params, idx
+    )
+    trace.record("PMULT", params.n, 2 * (level + 1))
+    c0 = mo.pointwise_addmod(
+        mo.pointwise_addmod(mo.pointwise_mulmod(v, pk.b[: level + 1], qs, backend="ref"), e0, qs, backend="ref"),
+        pt.data, qs, backend="ref",
+    )
+    c1 = mo.pointwise_addmod(mo.pointwise_mulmod(v, pk.a[: level + 1], qs, backend="ref"), e1, qs, backend="ref")
+    return Ciphertext(c0=c0, c1=c1, level=level, scale=pt.scale)
+
+
+def decrypt(params: CkksParams, sk: SecretKey, ct: Ciphertext) -> Plaintext:
+    qs = _qs(params, ct.level)
+    trace.record("PMULT", params.n, ct.level + 1)
+    m = mo.pointwise_addmod(
+        ct.c0, mo.pointwise_mulmod(ct.c1, sk.s_eval[: ct.level + 1], qs, backend="ref"), qs, backend="ref"
+    )
+    return Plaintext(data=m, level=ct.level, scale=ct.scale)
+
+
+def decrypt_decode(params: CkksParams, sk: SecretKey, ct: Ciphertext) -> np.ndarray:
+    return decode(params, decrypt(params, sk, ct))
+
+
+# ---------------------------------------------------------------------------
+# additive ops
+# ---------------------------------------------------------------------------
+
+
+def _align(params: CkksParams, a: Ciphertext, b: Ciphertext) -> tuple[Ciphertext, Ciphertext]:
+    """Drop the deeper ciphertext to the shallower level. Scales must match closely."""
+    lv = min(a.level, b.level)
+    a = level_drop(a, lv)
+    b = level_drop(b, lv)
+    assert abs(a.scale / b.scale - 1.0) < 1e-9, f"scale mismatch {a.scale} vs {b.scale}"
+    return a, b
+
+
+def level_drop(ct: Ciphertext, level: int) -> Ciphertext:
+    if level == ct.level:
+        return ct
+    assert level < ct.level
+    return Ciphertext(c0=ct.c0[: level + 1], c1=ct.c1[: level + 1], level=level, scale=ct.scale)
+
+
+def add(params: CkksParams, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+    a, b = _align(params, a, b)
+    qs = _qs(params, a.level)
+    trace.record("PADD", params.n, 2 * (a.level + 1))
+    return Ciphertext(
+        c0=mo.pointwise_addmod(a.c0, b.c0, qs, backend="ref"),
+        c1=mo.pointwise_addmod(a.c1, b.c1, qs, backend="ref"),
+        level=a.level, scale=a.scale,
+    )
+
+
+def sub(params: CkksParams, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+    a, b = _align(params, a, b)
+    qs = _qs(params, a.level)
+    trace.record("PSUB", params.n, 2 * (a.level + 1))
+    return Ciphertext(
+        c0=mo.pointwise_submod(a.c0, b.c0, qs, backend="ref"),
+        c1=mo.pointwise_submod(a.c1, b.c1, qs, backend="ref"),
+        level=a.level, scale=a.scale,
+    )
+
+
+def negate(params: CkksParams, a: Ciphertext) -> Ciphertext:
+    qs = _qs(params, a.level)
+    z = jnp.zeros_like(a.c0)
+    trace.record("PSUB", params.n, 2 * (a.level + 1))
+    return Ciphertext(
+        c0=mo.pointwise_submod(z, a.c0, qs, backend="ref"),
+        c1=mo.pointwise_submod(z, a.c1, qs, backend="ref"),
+        level=a.level, scale=a.scale,
+    )
+
+
+def add_plain(params: CkksParams, a: Ciphertext, pt: Plaintext) -> Ciphertext:
+    assert pt.level >= a.level
+    qs = _qs(params, a.level)
+    trace.record("PADD", params.n, a.level + 1)
+    return Ciphertext(
+        c0=mo.pointwise_addmod(a.c0, pt.data[: a.level + 1], qs, backend="ref"),
+        c1=a.c1, level=a.level, scale=a.scale,
+    )
+
+
+def add_const(params: CkksParams, a: Ciphertext, c) -> Ciphertext:
+    pt = encode_const(params, c, a.level, a.scale)
+    return add_plain(params, a, pt)
+
+
+# ---------------------------------------------------------------------------
+# multiplicative ops
+# ---------------------------------------------------------------------------
+
+
+def mul_plain(params: CkksParams, a: Ciphertext, pt: Plaintext, rescale_after: bool = True) -> Ciphertext:
+    assert pt.level >= a.level
+    qs = _qs(params, a.level)
+    trace.record("PMULT", params.n, 2 * (a.level + 1))
+    d = pt.data[: a.level + 1]
+    out = Ciphertext(
+        c0=mo.pointwise_mulmod(a.c0, d, qs, backend="ref"),
+        c1=mo.pointwise_mulmod(a.c1, d, qs, backend="ref"),
+        level=a.level, scale=a.scale * pt.scale,
+    )
+    return rescale(params, out) if rescale_after else out
+
+
+def mul_const(params: CkksParams, a: Ciphertext, c, rescale_after: bool = True) -> Ciphertext:
+    pt = encode_const(params, c, a.level, params.scale)
+    return mul_plain(params, a, pt, rescale_after)
+
+
+def mul_const_exact(params: CkksParams, a: Ciphertext, c, target_scale: float) -> Ciphertext:
+    """a·c with the constant's encoding scale chosen so the rescaled result has
+    exactly ``target_scale`` — the anchor that keeps scale bookkeeping from
+    drifting through multiplicative trees (see polyeval)."""
+    q = float(params.q_primes[a.level])
+    enc_scale = target_scale * q / a.scale
+    assert enc_scale > 256.0, f"enc_scale underflow ({enc_scale}); scale drift upstream"
+    pt = encode_const(params, c, a.level, enc_scale)
+    out = mul_plain(params, a, pt, rescale_after=True)
+    return Ciphertext(out.c0, out.c1, out.level, target_scale)
+
+
+def mul(params: CkksParams, a: Ciphertext, b: Ciphertext, rlk: SwitchingKey,
+        rescale_after: bool = True, backend: str = "auto") -> Ciphertext:
+    """Full homomorphic multiplication with relinearisation (key-switch of d2)."""
+    a, b = _align_mul(params, a, b)
+    qs = _qs(params, a.level)
+    trace.record("PMULT", params.n, 4 * (a.level + 1))
+    d0 = mo.pointwise_mulmod(a.c0, b.c0, qs, backend="ref")
+    d2 = mo.pointwise_mulmod(a.c1, b.c1, qs, backend="ref")
+    cross1 = mo.pointwise_mulmod(a.c0, b.c1, qs, backend="ref")
+    cross2 = mo.pointwise_mulmod(a.c1, b.c0, qs, backend="ref")
+    trace.record("PADD", params.n, a.level + 1)
+    d1 = mo.pointwise_addmod(cross1, cross2, qs, backend="ref")
+    ks0, ks1 = keyswitch.key_switch(d2, params, a.level, rlk, backend)
+    trace.record("PADD", params.n, 2 * (a.level + 1))
+    out = Ciphertext(
+        c0=mo.pointwise_addmod(d0, ks0, qs, backend="ref"),
+        c1=mo.pointwise_addmod(d1, ks1, qs, backend="ref"),
+        level=a.level, scale=a.scale * b.scale,
+    )
+    return rescale(params, out) if rescale_after else out
+
+
+def _align_mul(params: CkksParams, a: Ciphertext, b: Ciphertext):
+    lv = min(a.level, b.level)
+    return level_drop(a, lv), level_drop(b, lv)
+
+
+def square(params: CkksParams, a: Ciphertext, rlk: SwitchingKey, rescale_after: bool = True) -> Ciphertext:
+    return mul(params, a, a, rlk, rescale_after)
+
+
+def rescale(params: CkksParams, ct: Ciphertext) -> Ciphertext:
+    """Divide by q_ℓ and drop a level (eval-domain RNS rescale)."""
+    lv = ct.level
+    assert lv >= 1, "cannot rescale at level 0"
+    q_last = int(params.q_primes[lv])
+    qs_rem = _qs(params, lv - 1)
+    rem_primes = params.q_primes[:lv]
+    qinv = np.array([pow(q_last % int(q), -1, int(q)) for q in rem_primes], np.uint64)
+    qinv_b = jnp.asarray(qinv[:, None].astype(np.uint32))
+
+    def _one(c):
+        # iNTT the dropped limb, re-embed its (centred) coefficients in every
+        # remaining basis, NTT back, subtract, multiply by q_ℓ^{-1}.
+        last_coeff = poly.to_coeff(c[lv : lv + 1], params, (lv,))
+        v = last_coeff[0].astype(jnp.uint64)
+        centered = jnp.where(v > q_last // 2, v + jnp.asarray(qs_rem[:, None]) - q_last, v)
+        rem = (centered % jnp.asarray(qs_rem[:, None])).astype(jnp.uint32)
+        rem_eval = poly.to_eval(rem, params, poly.q_idx(params, lv - 1))
+        trace.record("PSUB", params.n, lv)
+        diff = mo.pointwise_submod(c[:lv], rem_eval, qs_rem, backend="ref")
+        trace.record("PMULT", params.n, lv)
+        return mo.pointwise_mulmod(diff, jnp.broadcast_to(qinv_b, diff.shape), qs_rem, backend="ref")
+
+    return Ciphertext(c0=_one(ct.c0), c1=_one(ct.c1), level=lv - 1, scale=ct.scale / q_last)
+
+
+# ---------------------------------------------------------------------------
+# rotations / conjugation
+# ---------------------------------------------------------------------------
+
+
+def rotate(params: CkksParams, ct: Ciphertext, r: int, keys: KeySet, backend: str = "auto") -> Ciphertext:
+    """Cyclic left-rotation of the slot vector by r (σ_{5^r} + key switch)."""
+    if r % params.slots == 0:
+        return ct
+    t = pow(5, r % params.slots, 2 * params.n)
+    return _apply_galois(params, ct, t, keys.galois(t), backend)
+
+
+def conjugate(params: CkksParams, ct: Ciphertext, keys: KeySet, backend: str = "auto") -> Ciphertext:
+    t = 2 * params.n - 1
+    return _apply_galois(params, ct, t, keys.galois(t), backend)
+
+
+def _apply_galois(params: CkksParams, ct: Ciphertext, t: int, gk: SwitchingKey, backend: str) -> Ciphertext:
+    qs = _qs(params, ct.level)
+    p0 = poly.automorphism_eval(ct.c0, params.n, t)
+    p1 = poly.automorphism_eval(ct.c1, params.n, t)
+    ks0, ks1 = keyswitch.key_switch(p1, params, ct.level, gk, backend)
+    trace.record("PADD", params.n, ct.level + 1)
+    return Ciphertext(
+        c0=mo.pointwise_addmod(p0, ks0, qs, backend="ref"),
+        c1=ks1, level=ct.level, scale=ct.scale,
+    )

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the FHE hot spots the paper accelerates.
+
+Each kernel package ships three files:
+  kernel.py — ``pl.pallas_call`` body with explicit BlockSpec VMEM tiling (TPU target);
+  ops.py    — jit'd public wrapper (interpret=True on CPU, compiled on TPU);
+  ref.py    — pure-jnp uint64 oracle used by tests as the ground truth.
+"""

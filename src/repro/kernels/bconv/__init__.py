@@ -1,0 +1,1 @@
+from .ops import bconv  # noqa: F401

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fast basis conversion (BConv) as a modular MXU matmul.
+
+The paper's BConv unit is l_sub = 60 parallel modular-multiply lanes feeding
+adder trees; on TPU the natural substrate is again the MXU.  out = Wᵀ·x̂ mod c
+is computed by 8-bit limb decomposition of both operands: partial products are
+≤ 255²·k < 2^22 for k ≤ 64 limbs, so int32 accumulation is exact; the seven
+limb diagonals are recombined with Montgomery constants 2^(8s)·R mod c_j.
+
+Grid: (coefficient blocks,).  Per program: x̂ (K8, NB) + W (K8, M8) + out (M8, NB)
+⇒ ~(64·512 + 64·64 + 64·512)·4·(1+limb copies) ≈ 1.5 MB VMEM for NB=512.
+K8/M8 are the 8-padded limb counts (zero rows/cols are exact no-ops).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.fhe.ntt import NDIAG, NLIMB8
+from repro.kernels.ntt.kernel import _montmul
+
+
+def _bconv_kernel_body(x_ref, w_ref, c_ref, q_ref, qinv_ref, o_ref):
+    x = x_ref[...]  # (K8, NB) uint32
+    w = w_ref[...]  # (K8, M8) uint32
+    q = q_ref[...]  # (M8, 1)
+    qinv = qinv_ref[...]  # (M8, 1)
+    cm = c_ref[...]  # (M8, NDIAG)
+
+    x_limbs = [((x >> (8 * k)) & 0xFF).astype(jnp.int32) for k in range(NLIMB8)]
+    w_limbs = [((w >> (8 * k)) & 0xFF).astype(jnp.int32) for k in range(NLIMB8)]
+    diags = [None] * NDIAG
+    for kw in range(NLIMB8):
+        for kx in range(NLIMB8):
+            # (M8, K8) @ (K8, NB) → (M8, NB), exact in int32
+            p = jax.lax.dot_general(
+                w_limbs[kw].T,
+                x_limbs[kx],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            s = kw + kx
+            diags[s] = p if diags[s] is None else diags[s] + p
+    acc = jnp.zeros(diags[0].shape, jnp.uint32)
+    for s in range(NDIAG):
+        term = _montmul(diags[s].astype(jnp.uint32), cm[:, s : s + 1], q, qinv)
+        acc = acc + term
+        acc = jnp.where(acc >= q, acc - q, acc)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bconv_pallas(xhat, w, c_mont, q, qinv, *, interpret):
+    """xhat: (K8, N) u32; w: (K8, M8) u32; c_mont: (M8, NDIAG); q/qinv: (M8, 1)."""
+    k8, n = xhat.shape
+    m8 = w.shape[1]
+    nb = min(n, 4096)
+    assert n % nb == 0
+    return pl.pallas_call(
+        _bconv_kernel_body,
+        grid=(n // nb,),
+        in_specs=[
+            pl.BlockSpec((k8, nb), lambda i: (0, i)),
+            pl.BlockSpec((k8, m8), lambda i: (0, 0)),
+            pl.BlockSpec((m8, NDIAG), lambda i: (0, 0)),
+            pl.BlockSpec((m8, 1), lambda i: (0, 0)),
+            pl.BlockSpec((m8, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m8, nb), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m8, n), jnp.uint32),
+        interpret=interpret,
+    )(xhat, w, c_mont, q, qinv)

@@ -1,0 +1,33 @@
+"""uint64 oracle for fast basis conversion (BConv).
+
+Conv_{B→C}(x)[j, n] = Σ_i  x̂[i, n] · W[i, j]   (mod c_j)
+
+where x̂[i] = x[i]·[B̂_i^{-1}]_{b_i} mod b_i was already applied by the caller
+(or is applied here given the per-limb constants), and W[i, j] = B̂_i mod c_j.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bconv_ref(xhat, w, cs):
+    """xhat: (k, N) uint32; w: (k, m) uint32; cs: (m,) uint32 → (m, N) uint32.
+
+    Accumulates per-term 62-bit products reduced mod c_j; the ≤ 2^31-bounded
+    residues sum over k ≤ 64 terms well inside uint64.
+    """
+    xh = xhat.astype(jnp.uint64)  # (k, N)
+    wu = w.astype(jnp.uint64)  # (k, m)
+    cu = cs.astype(jnp.uint64)  # (m,)
+    # terms[i, j, n] = (xh[i, n] * wu[i, j]) % c_j ; sum over i then % c_j
+    def body(acc, inputs):
+        xi, wi = inputs  # (N,), (m,)
+        t = (xi[None, :] * wi[:, None]) % cu[:, None]
+        return acc + t, None
+
+    acc0 = jnp.zeros((w.shape[1], xhat.shape[1]), jnp.uint64)
+    acc, _ = jax.lax.scan(body, acc0, (xh, wu))
+    return (acc % cu[:, None]).astype(jnp.uint32)

@@ -1,0 +1,1 @@
+from .ops import pointwise_mulmod, pointwise_addmod, pointwise_submod  # noqa: F401

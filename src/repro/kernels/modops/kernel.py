@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused pointwise RNS ops on the VPU.
+
+HMUL's pointwise limb products are the paper's swift-cluster "Modular Mul/Add"
+datapath.  One kernel invocation fuses the Montgomery double-multiply
+(a·b·R^{-1}, then ·R² ⇒ plain product) so each limb element makes one VMEM
+round trip instead of two.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ntt.kernel import _montmul
+
+
+def _mul_body(a_ref, b_ref, q_ref, qinv_ref, r2_ref, o_ref):
+    q = q_ref[...]  # (1, 1) block → broadcast
+    qinv = qinv_ref[...]
+    r2 = r2_ref[...]
+    t = _montmul(a_ref[...], b_ref[...], q, qinv)
+    o_ref[...] = _montmul(t, r2, q, qinv)
+
+
+def _add_body(a_ref, b_ref, q_ref, o_ref):
+    q = q_ref[...]
+    s = a_ref[...] + b_ref[...]
+    o_ref[...] = jnp.where(s >= q, s - q, s)
+
+
+def _sub_body(a_ref, b_ref, q_ref, o_ref):
+    q = q_ref[...]
+    a = a_ref[...]
+    b = b_ref[...]
+    o_ref[...] = jnp.where(a >= b, a - b, a + q - b)
+
+
+def _specs(l, n, nb, with_consts):
+    base = [
+        pl.BlockSpec((1, nb), lambda l_, i: (l_, i)),
+        pl.BlockSpec((1, nb), lambda l_, i: (l_, i)),
+        pl.BlockSpec((1, 1), lambda l_, i: (l_, 0)),
+    ]
+    if with_consts:
+        base += [
+            pl.BlockSpec((1, 1), lambda l_, i: (l_, 0)),
+            pl.BlockSpec((1, 1), lambda l_, i: (l_, 0)),
+        ]
+    return base
+
+
+def _blocked(n):
+    nb = min(n, 8192)
+    assert n % nb == 0
+    return nb
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mulmod_pallas(a, b, q, qinv, r2, *, interpret):
+    l, n = a.shape
+    nb = _blocked(n)
+    return pl.pallas_call(
+        _mul_body,
+        grid=(l, n // nb),
+        in_specs=_specs(l, n, nb, with_consts=True),
+        out_specs=pl.BlockSpec((1, nb), lambda l_, i: (l_, i)),
+        out_shape=jax.ShapeDtypeStruct((l, n), jnp.uint32),
+        interpret=interpret,
+    )(a, b, q, qinv, r2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def addmod_pallas(a, b, q, *, interpret):
+    l, n = a.shape
+    nb = _blocked(n)
+    return pl.pallas_call(
+        _add_body,
+        grid=(l, n // nb),
+        in_specs=_specs(l, n, nb, with_consts=False),
+        out_specs=pl.BlockSpec((1, nb), lambda l_, i: (l_, i)),
+        out_shape=jax.ShapeDtypeStruct((l, n), jnp.uint32),
+        interpret=interpret,
+    )(a, b, q)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def submod_pallas(a, b, q, *, interpret):
+    l, n = a.shape
+    nb = _blocked(n)
+    return pl.pallas_call(
+        _sub_body,
+        grid=(l, n // nb),
+        in_specs=_specs(l, n, nb, with_consts=False),
+        out_specs=pl.BlockSpec((1, nb), lambda l_, i: (l_, i)),
+        out_shape=jax.ShapeDtypeStruct((l, n), jnp.uint32),
+        interpret=interpret,
+    )(a, b, q)

@@ -1,0 +1,53 @@
+"""Public fused pointwise RNS ops (limb-wise, arbitrary leading batch)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+from . import ref as _ref
+
+
+def _resolve(backend):
+    if backend == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "ref"
+    return backend
+
+
+def pointwise_mulmod(a, b, qs, qinv=None, r2=None, backend: str = "auto"):
+    """(a ∘ b) mod q per limb.  a, b: (..., l, N) uint32; qs: (l,)."""
+    if _resolve(backend) == "ref":
+        return _ref.mulmod_ref(a, b, jnp.asarray(qs, jnp.uint32))
+    lead = a.shape[:-2]
+    l, n = a.shape[-2:]
+    reps = math.prod(lead) if lead else 1
+    q = jnp.tile(jnp.asarray(qs, jnp.uint32).reshape(-1, 1), (reps, 1))
+    qi = jnp.tile(jnp.asarray(qinv, jnp.uint32).reshape(-1, 1), (reps, 1))
+    r2_ = jnp.tile(jnp.asarray(r2, jnp.uint32).reshape(-1, 1), (reps, 1))
+    out = _k.mulmod_pallas(a.reshape(-1, n), b.reshape(-1, n), q, qi, r2_, interpret=jax.default_backend() != "tpu")
+    return out.reshape(lead + (l, n))
+
+
+def pointwise_addmod(a, b, qs, backend: str = "auto"):
+    if _resolve(backend) == "ref":
+        return _ref.addmod_ref(a, b, jnp.asarray(qs, jnp.uint32))
+    lead = a.shape[:-2]
+    l, n = a.shape[-2:]
+    reps = math.prod(lead) if lead else 1
+    q = jnp.tile(jnp.asarray(qs, jnp.uint32).reshape(-1, 1), (reps, 1))
+    out = _k.addmod_pallas(a.reshape(-1, n), b.reshape(-1, n), q, interpret=jax.default_backend() != "tpu")
+    return out.reshape(lead + (l, n))
+
+
+def pointwise_submod(a, b, qs, backend: str = "auto"):
+    if _resolve(backend) == "ref":
+        return _ref.submod_ref(a, b, jnp.asarray(qs, jnp.uint32))
+    lead = a.shape[:-2]
+    l, n = a.shape[-2:]
+    reps = math.prod(lead) if lead else 1
+    q = jnp.tile(jnp.asarray(qs, jnp.uint32).reshape(-1, 1), (reps, 1))
+    out = _k.submod_pallas(a.reshape(-1, n), b.reshape(-1, n), q, interpret=jax.default_backend() != "tpu")
+    return out.reshape(lead + (l, n))

@@ -1,0 +1,25 @@
+"""uint64 oracle for fused pointwise RNS ops (HMUL inner loop)."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def mulmod_ref(a, b, qs):
+    q = qs.astype(jnp.uint64)[..., :, None]
+    return ((a.astype(jnp.uint64) * b.astype(jnp.uint64)) % q).astype(jnp.uint32)
+
+
+@jax.jit
+def addmod_ref(a, b, qs):
+    q = qs.astype(jnp.uint64)[..., :, None]
+    s = a.astype(jnp.uint64) + b.astype(jnp.uint64)
+    return jnp.where(s >= q, s - q, s).astype(jnp.uint32)
+
+
+@jax.jit
+def submod_ref(a, b, qs):
+    q = qs.astype(jnp.uint64)[..., :, None]
+    a = a.astype(jnp.uint64)
+    b = b.astype(jnp.uint64)
+    return jnp.where(a >= b, a - b, a + q - b).astype(jnp.uint32)

@@ -1,0 +1,1 @@
+from .ops import ntt_fwd, ntt_inv  # noqa: F401

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: four-step negacyclic NTT as MXU matmuls.
+
+This is the TPU-native re-think of FLASH-FHE's (i)NTT circuits (DESIGN.md §2):
+
+* the paper's R-point NTT *circuit* becomes an R×R modular **matmul on the MXU** —
+  operands are decomposed into 8-bit limbs so int32 accumulation is exact
+  (255·255·N2 < 2^26 for N2 ≤ 512), limb diagonals are recombined with Montgomery
+  constants 2^(8s)·R mod q;
+* the paper's L1 transpose becomes an in-VMEM transpose between the two matmuls;
+* multi-entrance/exit: the same kernel body is instantiated per ring degree
+  (N1×N2 ∈ {16..256}×{128,256}); parallel small-point NTTs ride the (batch, limb)
+  grid, which is how a "bootstrappable" 256-wide datapath serves many shallow jobs.
+
+Grid: (batch, limbs).  Per-program VMEM working set for N=2^16:
+x block 256 KB + V1/V2 limb matrices 2×1 MB + twiddles 2×256 KB ≈ 3 MB < VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.fhe.ntt import NDIAG, NLIMB8
+
+
+def _mulhi32(a, b):
+    al = a & 0xFFFF
+    ah = a >> 16
+    bl = b & 0xFFFF
+    bh = b >> 16
+    t = al * bl
+    u = ah * bl + (t >> 16)
+    v = al * bh + (u & 0xFFFF)
+    return ah * bh + (u >> 16) + (v >> 16)
+
+
+def _montmul(a, b, q, qinv_neg):
+    t_lo = a * b
+    t_hi = _mulhi32(a, b)
+    m = t_lo * qinv_neg
+    mq_hi = _mulhi32(m, q)
+    res = t_hi + mq_hi + (t_lo != 0).astype(jnp.uint32)
+    return jnp.where(res >= q, res - q, res)
+
+
+def _mod_matmul_left(v_limbs, x, c_mont, q, qinv_neg):
+    """(V @ x) mod q.  v_limbs: (NLIMB8, M, K) int32 8-bit limbs of V;
+    x: (K, N) uint32 < q.  Exact MXU path: int32 dot per (limb_v, limb_x) pair,
+    diagonals recombined via Montgomery mult by 2^(8s)·R."""
+    x_limbs = [((x >> (8 * k)) & 0xFF).astype(jnp.int32) for k in range(NLIMB8)]
+    diags = [None] * NDIAG
+    for kv in range(NLIMB8):
+        for kx in range(NLIMB8):
+            p = jax.lax.dot_general(
+                v_limbs[kv],
+                x_limbs[kx],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            s = kv + kx
+            diags[s] = p if diags[s] is None else diags[s] + p
+    acc = jnp.zeros(diags[0].shape, jnp.uint32)
+    for s in range(NDIAG):
+        term = _montmul(diags[s].astype(jnp.uint32), c_mont[s], q, qinv_neg)
+        acc = acc + term
+        acc = jnp.where(acc >= q, acc - q, acc)
+    return acc
+
+
+def _ntt_kernel_body(
+    x_ref, twa_ref, v2_ref, v1_ref, t_ref, c_ref, q_ref, qinv_ref, o_ref, *, n1, n2, inverse
+):
+    q = q_ref[0, 0]
+    qinv = qinv_ref[0, 0]
+    c = c_ref[0]  # (NDIAG,)
+    v2 = v2_ref[0]  # (NLIMB8, N2, N2)
+    v1 = v1_ref[0]  # (NLIMB8, N1, N1)
+    tm = t_ref[0]  # (N1, N2) mont
+    twa = twa_ref[0]  # (N1, N2) mont
+
+    x = x_ref[0, 0]  # (N,) uint32
+    if not inverse:
+        # A[n1_, n2_] = a[n1_ + N1·n2_]  (reshape (N2,N1) then transpose — the L1 transpose)
+        a = x.reshape(n2, n1).T
+        a = _montmul(a, twa, q, qinv)  # psi twist (A-layout)
+        # step 1: row NTTs (contract n2):  B = A @ V2  ⇒  (V2ᵀ @ Aᵀ)ᵀ ; V2 symmetric
+        b = _mod_matmul_left(v2, a.T, c, q, qinv).T
+        b = _montmul(b, tm, q, qinv)  # inter-step twiddle w^(n1·k2)
+        cmat = _mod_matmul_left(v1, b, c, q, qinv)  # col NTTs (contract n1)
+        o_ref[0, 0] = cmat.reshape(n1 * n2)  # X[N2·k1 + k2]
+    else:
+        xm = x.reshape(n1, n2)  # X[k1, k2]
+        cmat = _mod_matmul_left(v1, xm, c, q, qinv)  # contract k1 with V1^{-1}
+        cmat = _montmul(cmat, tm, q, qinv)  # w^{-n1·k2}
+        a = _mod_matmul_left(v2, cmat.T, c, q, qinv).T  # contract k2 with V2^{-1}
+        a = _montmul(a, twa, q, qinv)  # psi^{-i}·N^{-1} twist (A-layout)
+        o_ref[0, 0] = a.T.reshape(n1 * n2)  # a[n1_ + N1·n2_]
+
+
+@functools.partial(jax.jit, static_argnames=("n1", "n2", "inverse", "interpret"))
+def ntt_pallas(x, twa, v2, v1, t, c, q, qinv, *, n1, n2, inverse, interpret):
+    """x: (B, L, N) uint32.  Table args carry the leading (L, ...) limb axis."""
+    bsz, nlimb, n = x.shape
+    grid = (bsz, nlimb)
+    return pl.pallas_call(
+        functools.partial(_ntt_kernel_body, n1=n1, n2=n2, inverse=inverse),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, n), lambda b, l: (b, l, 0)),  # x
+            pl.BlockSpec((1, n1, n2), lambda b, l: (l, 0, 0)),  # twist (A layout)
+            pl.BlockSpec((1, NLIMB8, n2, n2), lambda b, l: (l, 0, 0, 0)),  # V2 limbs
+            pl.BlockSpec((1, NLIMB8, n1, n1), lambda b, l: (l, 0, 0, 0)),  # V1 limbs
+            pl.BlockSpec((1, n1, n2), lambda b, l: (l, 0, 0)),  # inter-step twiddle
+            pl.BlockSpec((1, NDIAG), lambda b, l: (l, 0)),  # diagonal mont consts
+            pl.BlockSpec((1, 1), lambda b, l: (l, 0)),  # q
+            pl.BlockSpec((1, 1), lambda b, l: (l, 0)),  # qinv_neg
+        ],
+        out_specs=pl.BlockSpec((1, 1, n), lambda b, l: (b, l, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, nlimb, n), jnp.uint32),
+        interpret=interpret,
+    )(x, twa, v2, v1, t, c, q, qinv)

@@ -1,0 +1,56 @@
+"""Public NTT ops: jit'd wrappers over the Pallas kernel / u64 reference.
+
+``backend``:
+  * "kernel" — the Pallas four-step MXU kernel (interpret=True off-TPU);
+  * "ref"    — vectorised uint64 XLA path (fast on CPU; exact oracle);
+  * "auto"   — kernel on TPU, ref elsewhere (keeps CPU tests fast while the
+               TPU target exercises the MXU datapath).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.fhe.ntt import NttPlan
+from . import kernel as _k
+from . import ref as _ref
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "ref"
+    return backend
+
+
+def _run_kernel(x, plan: NttPlan, inverse: bool):
+    l = x.shape[-2]
+    lead = x.shape[:-2]
+    xb = x.reshape((-1, l, plan.n)).astype(jnp.uint32)
+    twa = jnp.asarray((plan.twia_mont if inverse else plan.twa_mont)[:l])
+    v2 = jnp.asarray((plan.v2i_limbs if inverse else plan.v2_limbs)[:l])
+    v1 = jnp.asarray((plan.v1i_limbs if inverse else plan.v1_limbs)[:l])
+    t = jnp.asarray((plan.ti_mont if inverse else plan.t_mont)[:l])
+    c = jnp.asarray(plan.c_mont[:l])
+    q = jnp.asarray(plan.qs[:l]).reshape(l, 1)
+    qinv = jnp.asarray(plan.qinv_neg[:l]).reshape(l, 1)
+    out = _k.ntt_pallas(
+        xb, twa, v2, v1, t, c, q, qinv,
+        n1=plan.n1, n2=plan.n2, inverse=inverse,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return out.reshape(lead + (l, plan.n))
+
+
+def ntt_fwd(x, plan: NttPlan, backend: str = "auto"):
+    """Coefficients → NTT slots (natural order).  x: (..., l, N) uint32."""
+    if _resolve(backend) == "kernel":
+        return _run_kernel(x, plan, inverse=False)
+    return _ref.ntt_fwd_ref(x, plan)
+
+
+def ntt_inv(x, plan: NttPlan, backend: str = "auto"):
+    """NTT slots → coefficients.  x: (..., l, N) uint32."""
+    if _resolve(backend) == "kernel":
+        return _run_kernel(x, plan, inverse=True)
+    return _ref.ntt_inv_ref(x, plan)

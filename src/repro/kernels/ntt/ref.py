@@ -1,0 +1,96 @@
+"""Pure-jnp uint64 oracle for the negacyclic NTT (natural-order output).
+
+Iterative radix-2 decimation-in-time over the cyclic root w = psi^2, with the
+negacyclic psi-twist applied before (fwd) / after (inv).  O(N log N), fully
+vectorised in XLA — this is also the fast CPU execution path for the FHE library.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fhe import modmath as mm
+from repro.fhe.ntt import NttPlan, bit_reverse_indices
+
+
+@functools.lru_cache(maxsize=32)
+def _bitrev(n: int):
+    # numpy (not jnp): a jnp constant materialised inside a jit trace would be a
+    # tracer, and the lru_cache would leak it across traces.
+    return bit_reverse_indices(n)
+
+
+def _cyclic_ntt_u64(a, w_pows, qs):
+    """Cyclic NTT along last axis.  a: (..., L, N) u64; w_pows: (L, N); qs: (L,)."""
+    n = a.shape[-1]
+    q = qs.astype(jnp.uint64)[..., :, None]
+    a = jnp.take(a, _bitrev(n), axis=-1)
+    m = 1
+    while m < n:
+        span = 2 * m
+        tw = w_pows[..., :, :: n // span][..., :m]  # (L, m): w^((N/2m)·j)
+        ar = a.reshape(a.shape[:-1] + (n // span, 2, m))
+        even = ar[..., 0, :]  # (..., L, n//span, m)
+        odd = (ar[..., 1, :] * tw[..., :, None, :]) % q[..., None]
+        s = even + odd
+        plus = jnp.where(s >= q[..., None], s - q[..., None], s)
+        minus = jnp.where(even >= odd, even - odd, even + q[..., None] - odd)
+        a = jnp.concatenate([plus, minus], axis=-1)  # per-block [first half | second half]
+        a = a.reshape(a.shape[:-2] + (n,))
+        m = span
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _ntt_fwd_impl(x, psi_pows, w_pows, qs):
+    q = qs.astype(jnp.uint64)[..., :, None]
+    a = (x.astype(jnp.uint64) * psi_pows) % q
+    return _cyclic_ntt_u64(a, w_pows, qs)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _ntt_inv_impl(x, psiinv_ninv, winv_pows, qs):
+    q = qs.astype(jnp.uint64)[..., :, None]
+    a = _cyclic_ntt_u64(x.astype(jnp.uint64), winv_pows, qs)
+    return (a * psiinv_ninv) % q
+
+
+def ntt_fwd_ref(x, plan: NttPlan, level: int | None = None):
+    """x: (..., l, N) uint32/uint64 coefficients → (..., l, N) uint32 slots."""
+    l = x.shape[-2] if level is None else level
+    out = _ntt_fwd_impl(
+        x, jnp.asarray(plan.psi_pows[:l]), jnp.asarray(plan.w_pows[:l]), jnp.asarray(plan.qs[:l])
+    )
+    return out.astype(jnp.uint32)
+
+
+def ntt_inv_ref(x, plan: NttPlan, level: int | None = None):
+    l = x.shape[-2] if level is None else level
+    out = _ntt_inv_impl(
+        x,
+        jnp.asarray(plan.psiinv_ninv[:l]),
+        jnp.asarray(plan.winv_pows[:l]),
+        jnp.asarray(plan.qs[:l]),
+    )
+    return out.astype(jnp.uint32)
+
+
+def negacyclic_mul_schoolbook(a: np.ndarray, b: np.ndarray, q: int) -> np.ndarray:
+    """O(N^2) host oracle for ring multiplication in Z_q[x]/(x^N+1) (tiny N only)."""
+    n = a.shape[-1]
+    a = a.astype(object)
+    b = b.astype(object)
+    out = np.zeros(n, dtype=object)
+    for i in range(n):
+        for j in range(n):
+            k = i + j
+            v = a[i] * b[j]
+            if k >= n:
+                out[k - n] = (out[k - n] - v) % q
+            else:
+                out[k] = (out[k] + v) % q
+    return np.array([int(v) % q for v in out], dtype=np.uint64)

@@ -1,0 +1,358 @@
+"""Model building blocks (pure JAX, scan/remat-friendly, shard-constraint free —
+sharding is annotated at the block level in lm.py so layouts stay in one place).
+
+All compute in bfloat16 with float32 softmax/normalisation statistics.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .scan_util import maybe_scan
+
+BF16 = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# norms / positional
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x, w, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D) rotary over last dim; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (online-softmax, chunked — bounded memory at any sequence length)
+# ---------------------------------------------------------------------------
+
+
+NEG_INF = -1e30
+
+# Beyond-paper perf knob (§Perf hillclimb): statically skip fully-masked
+# causal blocks — halves attention FLOPs at long sequence.  Off by default so
+# the paper-faithful baseline is measured first.
+_BLOCK_SKIP: "contextvars.ContextVar[bool]"
+import contextlib as _contextlib
+import contextvars as _contextvars
+
+_BLOCK_SKIP = _contextvars.ContextVar("flash_block_skip", default=False)
+
+
+@_contextlib.contextmanager
+def causal_block_skipping():
+    tok = _BLOCK_SKIP.set(True)
+    try:
+        yield
+    finally:
+        _BLOCK_SKIP.reset(tok)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_chunk=512, k_chunk=1024,
+                    q_offset=0):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D), H = KV·G.
+
+    Online-softmax over KV chunks inside a scan over Q chunks: peak memory is
+    O(q_chunk·k_chunk) per head group instead of O(Sq·Sk).
+    ``q_offset``: absolute position of q[0] (prefill continuation / decode).
+    ``window`` > 0 ⇒ sliding-window attention (|i-j| < window).
+
+    Under `causal_block_skipping()` the q-chunk loop is a static python loop
+    and each q chunk only visits KV chunks that can be unmasked (j ≤ i, and
+    j ≥ i − ⌈window/ck⌉ for sliding windows).
+    """
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+    nq = -(-sq // q_chunk)
+    nk = -(-sk // k_chunk)
+    sq_pad = nq * q_chunk
+    sk_pad = nk * k_chunk
+    qp = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+    qp = qp.reshape(b, nq, q_chunk, kv, g, d)
+    kp = kp.reshape(b, nk, k_chunk, kv, d)
+    vp = vp.reshape(b, nk, k_chunk, kv, d)
+
+    q_pos_base = jnp.arange(q_chunk) + q_offset
+    k_pos_base = jnp.arange(k_chunk)
+
+    def q_step(_, qi):
+        qc, iq = qi  # (B, cq, KV, G, D), scalar chunk idx
+        qpos = q_pos_base + iq * q_chunk  # (cq,)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kc, vc, jk = kj
+            kpos = k_pos_base + jk * k_chunk  # (ck,)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qc.astype(BF16), kc.astype(BF16),
+                           preferred_element_type=jnp.float32) * scale
+            mask = kpos[None, :] <= qpos[:, None] if causal else \
+                jnp.ones((q_chunk, k_chunk), bool)
+            if window:
+                mask = mask & (qpos[:, None] - kpos[None, :] < window)
+            mask = mask & (kpos[None, :] < sk)  # padding
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(BF16), vc.astype(BF16),
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = maybe_scan(
+            kv_step, (m0, l0, a0),
+            (kp.transpose(1, 0, 2, 3, 4), vp.transpose(1, 0, 2, 3, 4), jnp.arange(nk)),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.transpose(0, 3, 1, 2, 4)  # (B, cq, KV, G, D)
+
+    if _BLOCK_SKIP.get() and causal:
+        # static python loop over q chunks; each visits only reachable blocks
+        kt = kp.transpose(1, 0, 2, 3, 4)
+        vt = vp.transpose(1, 0, 2, 3, 4)
+        outs = []
+        for iq in range(nq):
+            hi = min(nk, (iq + 1) * q_chunk // k_chunk + 1)  # j·ck ≤ (iq+1)·cq
+            lo = 0
+            if window:
+                lo = max(0, (iq * q_chunk - window) // k_chunk)
+            qc = qp[:, iq]
+            # inline online-softmax over the reachable block range
+            m_ = jnp.full((b, kv, g, q_chunk), NEG_INF, jnp.float32)
+            l_ = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
+            acc_ = jnp.zeros((b, kv, g, q_chunk, d), jnp.float32)
+            qpos = q_pos_base + iq * q_chunk
+            for j in range(lo, hi):
+                kc, vc = kt[j], vt[j]
+                kpos = k_pos_base + j * k_chunk
+                s = jnp.einsum("bqkgd,bckd->bkgqc", qc.astype(BF16), kc.astype(BF16),
+                               preferred_element_type=jnp.float32) * scale
+                mask = kpos[None, :] <= qpos[:, None]
+                if window:
+                    mask = mask & (qpos[:, None] - kpos[None, :] < window)
+                mask = mask & (kpos[None, :] < sk)
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m_, s.max(axis=-1))
+                pbl = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m_ - m_new)
+                l_ = l_ * corr + pbl.sum(axis=-1)
+                acc_ = acc_ * corr[..., None] + jnp.einsum(
+                    "bkgqc,bckd->bkgqd", pbl.astype(BF16), vc.astype(BF16),
+                    preferred_element_type=jnp.float32)
+                m_ = m_new
+            o = (acc_ / jnp.maximum(l_[..., None], 1e-30)).transpose(0, 3, 1, 2, 4)
+            outs.append(o)
+        out = jnp.stack(outs, axis=1).reshape(b, nq, q_chunk, h, d) \
+            .reshape(b, sq_pad, h, d)
+        return out[:, :sq].astype(q.dtype)
+
+    _, outs = maybe_scan(q_step, None,
+                         (qp.transpose(1, 0, 2, 3, 4, 5), jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq_pad, h, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, t, *, window=0):
+    """Single-token attention against a (B, Smax, KV, D) cache; t = current len.
+
+    Memory-bound flash-decoding shape: scores (B, KV, G, Smax) in fp32.
+    """
+    b, _, h, d = q.shape
+    _, smax, kv, _ = k_cache.shape
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+    qh = q.reshape(b, kv, g, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh.astype(BF16), k_cache.astype(BF16),
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(smax)
+    mask = pos[None, None, None, :] < t
+    if window:
+        mask = mask & (pos[None, None, None, :] >= t - window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(BF16), v_cache.astype(BF16),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# feed-forward / MoE
+# ---------------------------------------------------------------------------
+
+
+def ffn(x, w1, w2, w3=None, act="swiglu"):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ w1) * (x @ w3)
+    else:
+        h = jax.nn.gelu(x @ w1)
+    return h @ w2
+
+
+def moe_ffn(x, router_w, w1, w2, w3, *, top_k: int, capacity_factor: float = 1.25,
+            n_shared: int = 0, sw1=None, sw2=None, sw3=None):
+    """Capacity-based top-k MoE with token dropping (EP-shardable einsums).
+
+    x: (T, d); router_w: (d, E); w1/w3: (E, d, f); w2: (E, f, d).
+    """
+    t, d = x.shape
+    e = router_w.shape[1]
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, top_k)  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(capacity_factor * top_k * t / e) + 1
+    flat_e = idx.reshape(-1)  # (T·k,)
+    flat_tok = jnp.repeat(jnp.arange(t), top_k)
+    flat_gate = gate.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_tok[order], flat_gate[order]
+    counts = jnp.bincount(se, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * top_k) - starts[se]
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap)  # dropped tokens land in a spill row
+
+    buf = jnp.zeros((e, cap + 1, d), x.dtype).at[se, pos_c].set(x[st])
+    h = jnp.einsum("ecd,edf->ecf", buf, w1.astype(x.dtype))
+    if w3 is not None:
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, w3.astype(x.dtype))
+    else:
+        h = jax.nn.gelu(h)
+    eo = jnp.einsum("ecf,efd->ecd", h, w2.astype(x.dtype))
+
+    contrib = eo[se, pos_c] * (sg * keep)[:, None].astype(x.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[st].add(contrib)
+    if n_shared:
+        out = out + ffn(x, sw1.astype(x.dtype), sw2.astype(x.dtype),
+                        sw3.astype(x.dtype), act="swiglu")
+    return out, probs
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD (chunked state-space duality algorithm)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(xh, dt, a_log, b_in, c_in, d_skip, *, chunk: int = 128,
+                h0=None):
+    """Chunked SSD scan.  xh: (B, S, NH, HD); dt: (B, S, NH);
+    b_in/c_in: (B, S, NS); a_log: (NH,); d_skip: (NH,).
+
+    Returns (y: (B, S, NH, HD), h_final: (B, NH, HD, NS)).
+    Memory: O(S·NS + (S/chunk)·NH·HD·NS) — never the full outer-product history.
+    """
+    b, s, nh, hd = xh.shape
+    ns = b_in.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+    c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+
+    # per-step log-decay: log a_t = −exp(A_log)·dt  (Mamba2 scalar-identity A)
+    loga = (-jnp.exp(a_log.astype(jnp.float32))[None, None] * dt)  # (B, S', NH)
+    xdt = xh.astype(jnp.float32) * dt[..., None]  # dt-scaled input
+
+    def to_chunks(z):
+        return z.reshape((b, nc, chunk) + z.shape[2:]).transpose(1, 0, *range(2, z.ndim + 1))
+
+    xc = to_chunks(xdt)  # (nc, B, c, NH, HD)
+    lc = to_chunks(loga)  # (nc, B, c, NH)
+    bc = to_chunks(b_in.astype(jnp.float32))  # (nc, B, c, NS)
+    cc = to_chunks(c_in.astype(jnp.float32))
+
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, ns), jnp.float32)
+
+    def chunk_step(h, inp):
+        xcj, lcj, bcj, ccj = inp  # (B,c,NH,HD), (B,c,NH), (B,c,NS), (B,c,NS)
+        cum = jnp.cumsum(lcj, axis=1)  # (B, c, NH) inclusive
+        total = cum[:, -1]  # (B, NH)
+        # intra-chunk (quadratic within chunk):
+        # y[i] += Σ_{j≤i} exp(cum_i − cum_j)·(c_i·b_j)·xdt_j
+        li = cum[:, :, None, :] - cum[:, None, :, :]  # (B, ci, cj, NH)
+        iota = jnp.arange(chunk)
+        causal = (iota[:, None] >= iota[None, :])[None, :, :, None]
+        w = jnp.where(causal, jnp.exp(li), 0.0)
+        sbc = jnp.einsum("bis,bjs->bij", ccj, bcj)  # (B, ci, cj)
+        y_intra = jnp.einsum("bijh,bij,bjhd->bihd", w, sbc, xcj)
+        # inter-chunk: y[i] += c_i · (exp(cum_i)·h_prev)
+        y_inter = jnp.einsum("bis,bih,bhds->bihd", ccj, jnp.exp(cum), h)
+        # carried state: h' = exp(total)·h + Σ_j exp(total − cum_j)·b_j ⊗ xdt_j
+        decay_j = jnp.exp(total[:, None] - cum)  # (B, c, NH)
+        h_add = jnp.einsum("bjh,bjs,bjhd->bhds", decay_j, bcj, xcj)
+        h_new = jnp.exp(total)[..., None, None] * h + h_add
+        return h_new, (y_intra + y_inter)
+
+    h_final, ys = maybe_scan(chunk_step, h0, (xc, lc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, nh, hd)
+    y = y + xh.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y[:, :s].astype(BF16), h_final
+
+
+def ssd_decode_step(xh, dt, a_log, b_in, c_in, d_skip, h):
+    """One-token SSD update.  xh: (B, NH, HD); dt: (B, NH); b/c: (B, NS)."""
+    a = jnp.exp(-jnp.exp(a_log.astype(jnp.float32))[None] * dt)  # (B, NH)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    h_new = a[..., None, None] * h + jnp.einsum("bhd,bs->bhds", xdt, b_in.astype(jnp.float32))
+    y = jnp.einsum("bhds,bs->bhd", h_new, c_in.astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * d_skip[None, :, None]
+    return y.astype(BF16), h_new
+
+
+def causal_conv1d(x, w, b=None, state=None):
+    """Depthwise causal conv, kernel k.  x: (B, S, C); w: (C, k).
+
+    With ``state`` (B, k-1, C) performs streaming (decode) mode on S=1.
+    Returns (y, new_state).
+    """
+    k = w.shape[1]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    windows = jnp.stack([xp[:, i : i + x.shape[1]] for i in range(k)], axis=-1)
+    y = jnp.einsum("bsck,ck->bsc", windows, w.astype(x.dtype))
+    if b is not None:
+        y = y + b
+    new_state = xp[:, -(k - 1) :] if k > 1 else state
+    return jax.nn.silu(y), new_state

@@ -1,0 +1,530 @@
+"""Decoder-only LM family: dense / MoE / Mamba2-SSD / Hymba-hybrid.
+
+One implementation parameterised by ModelConfig:
+  mixer = "attn"  — llama-style GQA transformer (smollm, granite, qwen1.5,
+                    phi3-medium, phi-3-vision backbone, + MoE variants)
+  mixer = "mamba" — attention-free Mamba2/SSD stack (mamba2-1.3b)
+  mixer = "hymba" — parallel attention + SSD heads, outputs fused (hymba-1.5b)
+
+Layers are stacked and scanned (keeps HLO size flat across 30-80 layer
+configs); the block body is remat'ed at layer boundaries; losses fold the
+LM head into a sequence-chunked cross-entropy so (B, S, vocab) logits are
+never materialised.
+
+Sharding: weights via distributed.sharding.weight_spec (TP on feature axes,
+FSDP on the other), activations constrained per block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding as sh
+
+from . import layers as L
+from .config import ModelConfig
+from .scan_util import maybe_scan
+
+BF16 = jnp.bfloat16
+CONV_K = 4  # Mamba2 depthwise conv kernel
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _norm_init(shape):
+    return jnp.ones(shape, jnp.float32)
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    # python float, NOT np.float64 — a strongly-typed numpy scalar would
+    # promote the whole weight to f64 when x64 is enabled (the FHE package)
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+def init_block_params(cfg: ModelConfig, key) -> dict:
+    """One layer's parameters (unstacked)."""
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.hd
+    ks = jax.random.split(key, 24)
+    p: dict[str, Any] = {}
+    if cfg.mixer in ("attn", "hymba"):
+        n_qkv = (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+        p["attn"] = {
+            "ln": _norm_init((d,)),
+            "wqkv": _dense_init(ks[0], (d, n_qkv)),
+            "wo": _dense_init(ks[1], (cfg.n_heads * hd, d)),
+        }
+        if cfg.qkv_bias:
+            p["attn"]["bqkv"] = jnp.zeros((n_qkv,), jnp.float32)
+    if cfg.mixer in ("mamba", "hymba"):
+        di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+        conv_ch = di + 2 * ns
+        p["mamba"] = {
+            "ln": _norm_init((d,)),
+            "in_proj": _dense_init(ks[2], (d, 2 * di + 2 * ns + nh)),
+            "conv_w": _dense_init(ks[3], (conv_ch, CONV_K), scale=0.5),
+            "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+            "dt_bias": jnp.zeros((nh,), jnp.float32),
+            "a_log": jnp.zeros((nh,), jnp.float32),
+            "d_skip": jnp.ones((nh,), jnp.float32),
+            "out_norm": _norm_init((di,)),
+            "out_proj": _dense_init(ks[4], (di, d)),
+        }
+    if cfg.d_ff == 0:  # pure-Mamba blocks have no MLP
+        return p
+    p["ffn_ln"] = _norm_init((d,))
+    if cfg.is_moe:
+        e = cfg.n_experts
+        p["moe"] = {
+            "router": _dense_init(ks[5], (d, e)),
+            "w1": _dense_init(ks[6], (e, d, f)),
+            "w2": _dense_init(ks[7], (e, f, d)),
+            "w3": _dense_init(ks[8], (e, d, f)),
+        }
+        if cfg.n_shared_experts:
+            fs = f * cfg.n_shared_experts
+            p["moe"].update(
+                sw1=_dense_init(ks[9], (d, fs)),
+                sw2=_dense_init(ks[10], (fs, d)),
+                sw3=_dense_init(ks[11], (d, fs)),
+            )
+    else:
+        p["ffn"] = {
+            "w1": _dense_init(ks[12], (d, f)),
+            "w2": _dense_init(ks[13], (f, d)),
+        }
+        if cfg.act == "swiglu":
+            p["ffn"]["w3"] = _dense_init(ks[14], (d, f))
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kemb, khead, kblocks = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: init_block_params(cfg, k))(
+        jax.random.split(kblocks, cfg.n_layers)
+    )
+    params = {
+        "embed": _dense_init(kemb, (cfg.vocab, cfg.d_model), scale=0.02),
+        "final_ln": _norm_init((cfg.d_model,)),
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = _dense_init(khead, (cfg.d_model, cfg.vocab))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+
+
+def block_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    """PartitionSpecs matching init_block_params (stacked: leading layer dim)."""
+    W = lambda shape, tp, fsdp: _stacked(sh.weight_spec(mesh, shape, tp, fsdp))
+    V = lambda: _stacked(P(None))
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    p: dict[str, Any] = {}
+    if cfg.mixer in ("attn", "hymba"):
+        n_qkv = (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+        p["attn"] = {
+            "ln": V(),
+            "wqkv": W((d, n_qkv), 1, 0),
+            "wo": W((cfg.n_heads * hd, d), 0, 1),
+        }
+        if cfg.qkv_bias:
+            p["attn"]["bqkv"] = _stacked(sh.weight_spec(mesh, (n_qkv,), 0, None))
+    if cfg.mixer in ("mamba", "hymba"):
+        di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+        p["mamba"] = {
+            "ln": V(),
+            "in_proj": W((d, 2 * di + 2 * ns + nh), None, 0),
+            "conv_w": V(), "conv_b": V(), "dt_bias": V(),
+            "a_log": V(), "d_skip": V(),
+            "out_norm": V(),
+            "out_proj": W((di, d), 0, 1),
+        }
+    if cfg.d_ff == 0:
+        return p
+    p["ffn_ln"] = V()
+    if cfg.is_moe:
+        e = cfg.n_experts
+        p["moe"] = {
+            "router": W((d, e), None, 0),
+            "w1": _stacked(_expert_spec(mesh, (e, d, f))),
+            "w2": _stacked(_expert_spec(mesh, (e, f, d))),
+            "w3": _stacked(_expert_spec(mesh, (e, d, f))),
+        }
+        if cfg.n_shared_experts:
+            fs = f * cfg.n_shared_experts
+            p["moe"].update(
+                sw1=W((d, fs), 1, 0), sw2=W((fs, d), 0, 1), sw3=W((d, fs), 1, 0)
+            )
+    else:
+        p["ffn"] = {"w1": W((d, f), 1, 0), "w2": W((f, d), 0, 1)}
+        if cfg.act == "swiglu":
+            p["ffn"]["w3"] = W((d, f), 1, 0)
+    return p
+
+
+def _stacked(spec: P) -> P:
+    return P(None, *spec)
+
+
+def _expert_spec(mesh: Mesh, shape) -> P:
+    """Experts sharded over 'model' (EP), inner dim FSDP over 'data'."""
+    parts: list = [None] * len(shape)
+    if sh.divisible(shape[0], mesh, "model"):
+        parts[0] = "model"
+    if sh.divisible(shape[1], mesh, "data"):
+        parts[1] = "data"
+    return P(*parts)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    specs = {
+        "embed": sh.weight_spec(mesh, (cfg.vocab, cfg.d_model), 0, 1),
+        "final_ln": P(None),
+        "blocks": block_specs(cfg, mesh),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = sh.weight_spec(mesh, (cfg.d_model, cfg.vocab), 1, 0)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# block forward
+# ---------------------------------------------------------------------------
+
+
+def _split_qkv(cfg: ModelConfig, qkv):
+    hd = cfg.hd
+    nq = cfg.n_heads * hd
+    nkv = cfg.n_kv_heads * hd
+    q, k, v = jnp.split(qkv, [nq, nq + nkv], axis=-1)
+    b, s = q.shape[:2]
+    return (
+        q.reshape(b, s, cfg.n_heads, hd),
+        k.reshape(b, s, cfg.n_kv_heads, hd),
+        v.reshape(b, s, cfg.n_kv_heads, hd),
+    )
+
+
+def attn_forward(cfg: ModelConfig, p, x, positions, *, window: int):
+    h = L.rmsnorm(x, p["ln"].astype(x.dtype))
+    qkv = h @ p["wqkv"].astype(x.dtype)
+    if "bqkv" in p:
+        qkv = qkv + p["bqkv"].astype(x.dtype)
+    q, k, v = _split_qkv(cfg, qkv)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    out = L.flash_attention(q, k, v, causal=True, window=window)
+    b, s = x.shape[:2]
+    return out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+
+def mamba_forward(cfg: ModelConfig, p, x, h0=None, conv0=None):
+    """Returns (out, (ssm_state, conv_state))."""
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    h = L.rmsnorm(x, p["ln"].astype(x.dtype))
+    zxbcdt = h @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ns], axis=-1)
+    xbc, conv_state = L.causal_conv1d(xbc, p["conv_w"], p["conv_b"], state=conv0)
+    xs, b_in, c_in = jnp.split(xbc, [di, di + ns], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    bsz, s = x.shape[:2]
+    xh = xs.reshape(bsz, s, nh, cfg.ssm_head_dim)
+    y, h_final = L.ssd_chunked(xh, dt, p["a_log"], b_in, c_in, p["d_skip"], h0=h0)
+    y = y.reshape(bsz, s, di) * jax.nn.silu(z)
+    y = L.rmsnorm(y, p["out_norm"].astype(x.dtype))
+    return y @ p["out_proj"].astype(x.dtype), (h_final, conv_state)
+
+
+def ffn_forward(cfg: ModelConfig, p_block, x):
+    if cfg.d_ff == 0:
+        return jnp.zeros_like(x)
+    h = L.rmsnorm(x, p_block["ffn_ln"].astype(x.dtype))
+    if cfg.is_moe:
+        b, s, d = h.shape
+        m = p_block["moe"]
+        flat = h.reshape(b * s, d)
+        out, _ = L.moe_ffn(
+            flat, m["router"], m["w1"], m["w2"], m["w3"],
+            top_k=cfg.top_k, n_shared=cfg.n_shared_experts,
+            sw1=m.get("sw1"), sw2=m.get("sw2"), sw3=m.get("sw3"),
+        )
+        return out.reshape(b, s, d)
+    f = p_block["ffn"]
+    return L.ffn(h, f["w1"].astype(x.dtype), f["w2"].astype(x.dtype),
+                 f["w3"].astype(x.dtype) if "w3" in f else None, act=cfg.act)
+
+
+def block_forward(cfg: ModelConfig, p_block, x, positions, mesh: Mesh | None):
+    """Full-sequence block (train/prefill), no cache."""
+    window = cfg.sliding_window
+    if cfg.mixer == "attn":
+        mix = attn_forward(cfg, p_block["attn"], x, positions, window=window)
+    elif cfg.mixer == "mamba":
+        mix, _ = mamba_forward(cfg, p_block["mamba"], x)
+    else:  # hymba: parallel heads, mean-fused
+        a = attn_forward(cfg, p_block["attn"], x, positions, window=window)
+        m, _ = mamba_forward(cfg, p_block["mamba"], x)
+        mix = 0.5 * (a + m)
+    x = x + mix
+    x = x + ffn_forward(cfg, p_block, x)
+    if mesh is not None:
+        x = sh.constrain(x, mesh, sh.batch_spec(mesh, 3))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# full model: train / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def forward_hidden(cfg: ModelConfig, params, x, positions, mesh: Mesh | None,
+                   remat: bool = True):
+    """Embeddings → scanned blocks → final norm (returns hidden states)."""
+
+    def body(p_block, h):
+        return block_forward(cfg, p_block, h, positions, mesh)
+
+    if remat:
+        body = jax.checkpoint(body)  # activation checkpointing at block bounds
+
+    def scan_body(h, p_block):
+        return body(p_block, h), None
+
+    h, _ = maybe_scan(scan_body, x, params["blocks"])
+    return L.rmsnorm(h, params["final_ln"].astype(x.dtype))
+
+
+def embed(cfg: ModelConfig, params, tokens):
+    return params["embed"].astype(BF16)[tokens]
+
+
+def chunked_xent(cfg: ModelConfig, params, hidden, targets, mesh: Mesh | None,
+                 chunk: int = 512):
+    """Cross-entropy with the LM head folded into a scan over sequence chunks
+    — (B, S, vocab) logits are never materialised at once."""
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"]).astype(BF16)
+    b, s, d = hidden.shape
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    hp = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0))).reshape(b, nc, chunk, d)
+    tp = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1).reshape(b, nc, chunk)
+
+    def step(acc, inp):
+        hc, tc = inp  # (B, chunk, D), (B, chunk)
+        logits = (hc @ head).astype(jnp.float32)  # (B, chunk, V)
+        if mesh is not None:
+            logits = sh.constrain(logits, mesh, sh.batch_spec(mesh, 3))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(tc, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = tc >= 0
+        nll = jnp.where(valid, lse - gold, 0.0)
+        return (acc[0] + nll.sum(), acc[1] + valid.sum(dtype=jnp.int32)), None
+
+    (total, count), _ = maybe_scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (hp.transpose(1, 0, 2, 3), tp.transpose(1, 0, 2)),
+    )
+    return total / jnp.maximum(count, 1)
+
+
+def train_loss(cfg: ModelConfig, params, tokens, mesh: Mesh | None = None):
+    """tokens: (B, S+1) int32 — next-token xent averaged over positions."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    x = embed(cfg, params, inp)
+    if mesh is not None:
+        x = sh.constrain(x, mesh, sh.batch_spec(mesh, 3))
+    positions = jnp.broadcast_to(jnp.arange(inp.shape[1]), inp.shape)
+    h = forward_hidden(cfg, params, x, positions, mesh)
+    return chunked_xent(cfg, params, h, tgt, mesh)
+
+
+# --- serving -----------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """KV / SSM / conv decode state.  KV sharded (batch on data, seq on model)."""
+    cache: dict[str, Any] = {"t": jnp.zeros((), jnp.int32)}
+    nl = cfg.n_layers
+    if cfg.mixer in ("attn", "hymba"):
+        s_eff = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+        shape = (nl, batch, s_eff, cfg.n_kv_heads, cfg.hd)
+        cache["k"] = jnp.zeros(shape, BF16)
+        cache["v"] = jnp.zeros(shape, BF16)
+    if cfg.mixer in ("mamba", "hymba"):
+        cache["ssm"] = jnp.zeros(
+            (nl, batch, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        )
+        cache["conv"] = jnp.zeros(
+            (nl, batch, CONV_K - 1, cfg.d_inner + 2 * cfg.ssm_state), BF16
+        )
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    specs: dict[str, Any] = {"t": P()}
+    dp = sh.dp_axes(mesh)
+    seq_ax = None if "model" in dp else "model"  # no reuse under pure-DP policy
+    if cfg.mixer in ("attn", "hymba"):
+        # batch over data; SEQUENCE over model (flash-decoding / SP layout)
+        kv_spec = P(None, dp or None, seq_ax, None, None)
+        specs["k"] = kv_spec
+        specs["v"] = kv_spec
+    if cfg.mixer in ("mamba", "hymba"):
+        specs["ssm"] = P(None, sh.dp_axes(mesh) or None, None, None, None)
+        specs["conv"] = P(None, sh.dp_axes(mesh) or None, None, None)
+    return specs
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, mesh: Mesh | None = None):
+    """token: (B,) int32 → (logits (B, V), new cache).  One autoregressive step."""
+    b = token.shape[0]
+    t = cache["t"]
+    x = embed(cfg, params, token[:, None])  # (B, 1, D)
+    positions = jnp.full((b, 1), t, jnp.int32)
+    window = cfg.sliding_window
+
+    def body(carry, inp):
+        h, = carry
+        p_block, idx = inp
+        mix_parts = []
+        new_kv = new_ssm = new_conv = None
+        if cfg.mixer in ("attn", "hymba"):
+            pa = p_block["attn"]
+            hn = L.rmsnorm(h, pa["ln"].astype(h.dtype))
+            qkv = hn @ pa["wqkv"].astype(h.dtype)
+            if "bqkv" in pa:
+                qkv = qkv + pa["bqkv"].astype(h.dtype)
+            q, k, v = _split_qkv(cfg, qkv)
+            q = L.rope(q, positions, cfg.rope_theta)
+            k = L.rope(k, positions, cfg.rope_theta)
+            s_eff = cache["k"].shape[2]
+            slot = (t % s_eff if window else t).astype(jnp.int32)
+            zero = jnp.zeros((), jnp.int32)
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"][idx], k.astype(BF16), (zero, slot, zero, zero))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"][idx], v.astype(BF16), (zero, slot, zero, zero))
+            eff_t = jnp.minimum(t + 1, s_eff) if window else t + 1
+            ao = L.decode_attention(q, kc, vc, eff_t, window=0)
+            mix_parts.append(ao.reshape(b, 1, -1) @ pa["wo"].astype(h.dtype))
+            new_kv = (kc, vc)
+        if cfg.mixer in ("mamba", "hymba"):
+            pm = p_block["mamba"]
+            di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+            hn = L.rmsnorm(h, pm["ln"].astype(h.dtype))
+            zxbcdt = hn @ pm["in_proj"].astype(h.dtype)
+            z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ns], axis=-1)
+            xbc, conv_new = L.causal_conv1d(xbc, pm["conv_w"], pm["conv_b"],
+                                            state=cache["conv"][idx])
+            xs, b_in, c_in = jnp.split(xbc[:, 0], [di, di + ns], axis=-1)
+            dts = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + pm["dt_bias"])
+            xh = xs.reshape(b, nh, cfg.ssm_head_dim)
+            y, ssm_new = L.ssd_decode_step(xh, dts, pm["a_log"], b_in, c_in,
+                                           pm["d_skip"], cache["ssm"][idx])
+            y = y.reshape(b, 1, di) * jax.nn.silu(z)
+            y = L.rmsnorm(y, pm["out_norm"].astype(h.dtype))
+            mix_parts.append(y @ pm["out_proj"].astype(h.dtype))
+            new_ssm, new_conv = ssm_new, conv_new
+        mix = mix_parts[0] if len(mix_parts) == 1 else 0.5 * (mix_parts[0] + mix_parts[1])
+        h = h + mix
+        h = h + ffn_forward(cfg, p_block, h)
+        outs = (new_kv[0] if new_kv else None, new_kv[1] if new_kv else None,
+                new_ssm, new_conv)
+        return (h,), outs
+
+    idxs = jnp.arange(cfg.n_layers)
+    (h,), stacked = maybe_scan(body, (x,), (params["blocks"], idxs))
+    new_cache = dict(cache)
+    if cfg.mixer in ("attn", "hymba"):
+        new_cache["k"], new_cache["v"] = stacked[0], stacked[1]
+    if cfg.mixer in ("mamba", "hymba"):
+        new_cache["ssm"], new_cache["conv"] = stacked[2], stacked[3]
+    new_cache["t"] = t + 1
+    h = L.rmsnorm(h, params["final_ln"].astype(h.dtype))
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"]).astype(BF16)
+    logits = (h[:, 0] @ head).astype(jnp.float32)
+    if mesh is not None:
+        logits = sh.constrain(logits, mesh, P(sh.dp_axes(mesh) or None, "model"
+                                              if sh.divisible(cfg.vocab, mesh, "model") else None))
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, mesh: Mesh | None = None):
+    """Full-sequence prefill filling the KV cache; returns (last_logits, cache).
+
+    Implemented as hidden-state forward + cache write per layer (scan).
+    """
+    b, s = tokens.shape
+    x = embed(cfg, params, tokens)
+    if mesh is not None:
+        x = sh.constrain(x, mesh, sh.batch_spec(mesh, 3))
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    window = cfg.sliding_window
+
+    def body(h, inp):
+        p_block, idx = inp
+        mix_parts = []
+        kv_out = ssm_out = conv_out = None
+        if cfg.mixer in ("attn", "hymba"):
+            pa = p_block["attn"]
+            hn = L.rmsnorm(h, pa["ln"].astype(h.dtype))
+            qkv = hn @ pa["wqkv"].astype(h.dtype)
+            if "bqkv" in pa:
+                qkv = qkv + pa["bqkv"].astype(h.dtype)
+            q, k, v = _split_qkv(cfg, qkv)
+            q = L.rope(q, positions, cfg.rope_theta)
+            k = L.rope(k, positions, cfg.rope_theta)
+            ao = L.flash_attention(q, k, v, causal=True, window=window)
+            mix_parts.append(ao.reshape(b, s, -1) @ pa["wo"].astype(h.dtype))
+            s_eff = cache["k"].shape[2]
+            kl, vl = k[:, -s_eff:].astype(BF16), v[:, -s_eff:].astype(BF16)
+            if window and s >= s_eff:
+                # ring-buffer alignment: token position p lives at slot p % w
+                kl = jnp.roll(kl, s % s_eff, axis=1)
+                vl = jnp.roll(vl, s % s_eff, axis=1)
+            kv_out = (kl, vl)
+        if cfg.mixer in ("mamba", "hymba"):
+            mo, (ssm_out, conv_out) = mamba_forward(cfg, p_block["mamba"], h)
+            mix_parts.append(mo)
+        mix = mix_parts[0] if len(mix_parts) == 1 else 0.5 * (mix_parts[0] + mix_parts[1])
+        h = h + mix
+        h = h + ffn_forward(cfg, p_block, h)
+        if mesh is not None:
+            h = sh.constrain(h, mesh, sh.batch_spec(mesh, 3))
+        return h, (kv_out[0] if kv_out else None, kv_out[1] if kv_out else None,
+                   ssm_out, conv_out)
+
+    idxs = jnp.arange(cfg.n_layers)
+    h, stacked = maybe_scan(body, x, (params["blocks"], idxs))
+    new_cache = dict(cache)
+    if cfg.mixer in ("attn", "hymba"):
+        s_eff = cache["k"].shape[2]
+        pad = s_eff - min(s, s_eff)
+        k_st = jnp.pad(stacked[0], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v_st = jnp.pad(stacked[1], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        new_cache["k"], new_cache["v"] = k_st, v_st
+    if cfg.mixer in ("mamba", "hymba"):
+        new_cache["ssm"], new_cache["conv"] = stacked[2], stacked[3]
+    new_cache["t"] = jnp.asarray(s, jnp.int32)
+    h = L.rmsnorm(h, params["final_ln"].astype(h.dtype))
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"]).astype(BF16)
+    logits = (h[:, -1] @ head).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,138 @@
+"""Unified model API over the four implementation families.
+
+ModelApi exposes exactly what the launcher/dry-run needs:
+  init_params / param_specs / train_loss / prefill / decode_step /
+  init_cache / cache_specs / input_specs(shape_name)
+with a kwargs convention: multimodal inputs (patches, frames) ride alongside
+tokens and every entry has a ShapeDtypeStruct + PartitionSpec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding as sh
+
+from . import lm, vlm, whisper
+from .config import ModelConfig
+
+# The four canonical input shapes (per-arch cells).  LM shapes are
+# (seq_len, global_batch); decode shapes lower serve_step with a KV cache.
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ModelConfig
+    init_params: Callable
+    param_specs: Callable  # (mesh) -> spec pytree
+    train_loss: Callable  # (params, mesh=None, **batch) -> scalar
+    prefill: Callable  # (params, cache, mesh=None, **batch) -> (logits, cache)
+    decode_step: Callable  # (params, token, cache, mesh=None) -> (logits, cache)
+    init_cache: Callable  # (batch, max_seq) -> cache pytree
+    cache_specs: Callable  # (mesh) -> spec pytree
+
+    def supports_shape(self, shape_name: str) -> tuple[bool, str]:
+        info = SHAPES[shape_name]
+        if shape_name == "long_500k" and not self.cfg.supports_long_context():
+            return False, "O(S²) full attention at S=524288 is not a real configuration"
+        return True, ""
+
+    def input_specs(self, shape_name: str, mesh: Mesh) -> dict:
+        """{name: (ShapeDtypeStruct, PartitionSpec)} for the lowering entry."""
+        info = SHAPES[shape_name]
+        cfg = self.cfg
+        b, s = info["batch"], info["seq"]
+        dp = sh.dp_axes(mesh) or None
+        out: dict[str, Any] = {}
+        if info["kind"] == "train":
+            if cfg.family == "vlm":
+                s_txt = s - cfg.n_patches
+                out["tokens"] = (jax.ShapeDtypeStruct((b, s_txt + 1), jnp.int32), P(dp))
+                out["patches"] = (
+                    jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+                    P(dp, None, None),
+                )
+            elif cfg.family == "audio":
+                s_dec = s - cfg.enc_seq
+                out["frames"] = (
+                    jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16),
+                    P(dp, None, None),
+                )
+                out["tokens"] = (jax.ShapeDtypeStruct((b, s_dec + 1), jnp.int32), P(dp))
+            else:
+                out["tokens"] = (jax.ShapeDtypeStruct((b, s + 1), jnp.int32), P(dp))
+        elif info["kind"] == "prefill":
+            if cfg.family == "vlm":
+                s_txt = s - cfg.n_patches
+                out["tokens"] = (jax.ShapeDtypeStruct((b, s_txt), jnp.int32), P(dp))
+                out["patches"] = (
+                    jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+                    P(dp, None, None),
+                )
+            elif cfg.family == "audio":
+                s_dec = s - cfg.enc_seq
+                out["frames"] = (
+                    jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16),
+                    P(dp, None, None),
+                )
+                out["tokens"] = (jax.ShapeDtypeStruct((b, s_dec), jnp.int32), P(dp))
+            else:
+                out["tokens"] = (jax.ShapeDtypeStruct((b, s), jnp.int32), P(dp))
+        else:  # decode
+            out["token"] = (jax.ShapeDtypeStruct((b,), jnp.int32), P(dp))
+        return out
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    if cfg.family == "audio":
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key: whisper.init_params(cfg, key),
+            param_specs=lambda mesh: whisper.param_specs(cfg, mesh),
+            train_loss=lambda params, mesh=None, **kw: whisper.train_loss(
+                cfg, params, kw["frames"], kw["tokens"], mesh),
+            prefill=lambda params, cache, mesh=None, **kw: whisper.prefill(
+                cfg, params, kw["frames"], kw["tokens"], cache, mesh),
+            decode_step=lambda params, token, cache, mesh=None: whisper.decode_step(
+                cfg, params, token, cache, mesh),
+            init_cache=lambda batch, max_seq: whisper.init_cache(cfg, batch, max_seq),
+            cache_specs=lambda mesh: whisper.cache_specs(cfg, mesh),
+        )
+    if cfg.family == "vlm":
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key: vlm.init_params(cfg, key),
+            param_specs=lambda mesh: vlm.param_specs(cfg, mesh),
+            train_loss=lambda params, mesh=None, **kw: vlm.train_loss(
+                cfg, params, kw["tokens"], kw["patches"], mesh),
+            prefill=lambda params, cache, mesh=None, **kw: vlm.prefill(
+                cfg, params, kw["tokens"], kw["patches"], cache, mesh),
+            decode_step=lambda params, token, cache, mesh=None: vlm.decode_step(
+                cfg, params, token, cache, mesh),
+            init_cache=lambda batch, max_seq: vlm.init_cache(cfg, batch, max_seq),
+            cache_specs=lambda mesh: vlm.cache_specs(cfg, mesh),
+        )
+    return ModelApi(
+        cfg=cfg,
+        init_params=lambda key: lm.init_params(cfg, key),
+        param_specs=lambda mesh: lm.param_specs(cfg, mesh),
+        train_loss=lambda params, mesh=None, **kw: lm.train_loss(
+            cfg, params, kw["tokens"], mesh),
+        prefill=lambda params, cache, mesh=None, **kw: lm.prefill(
+            cfg, params, kw["tokens"], cache, mesh),
+        decode_step=lambda params, token, cache, mesh=None: lm.decode_step(
+            cfg, params, token, cache, mesh),
+        init_cache=lambda batch, max_seq: lm.init_cache(cfg, batch, max_seq),
+        cache_specs=lambda mesh: lm.cache_specs(cfg, mesh),
+    )

@@ -1,0 +1,52 @@
+"""maybe_scan: lax.scan that can be globally unrolled into a python loop.
+
+XLA's cost_analysis counts a while-loop body ONCE regardless of trip count, so
+roofline flop/byte numbers from scanned models are undercounted.  The dry-run
+therefore lowers small *probe* models under `unrolled()` — every scan becomes
+a straight-line program whose costs XLA counts exactly — and reconstructs the
+full-size costs from the exact polynomial structure (linear in layer count,
+quadratic in sequence for attention).  See launch/dryrun.py.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+
+_UNROLL: contextvars.ContextVar[bool] = contextvars.ContextVar("unroll_scans", default=False)
+
+
+@contextlib.contextmanager
+def unrolled():
+    tok = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(tok)
+
+
+def maybe_scan(f, init, xs, length: int | None = None):
+    """Drop-in for jax.lax.scan(f, init, xs) honoring the unroll flag."""
+    if not _UNROLL.get():
+        return jax.lax.scan(f, init, xs, length=length)
+    if xs is None:
+        n = length
+        slices = [None] * n
+    else:
+        leaves = jax.tree.leaves(xs)
+        n = leaves[0].shape[0] if leaves else length
+        slices = [jax.tree.map(lambda x: x[i], xs) for i in range(n)]
+    carry = init
+    ys = []
+    for s in slices:
+        carry, y = f(carry, s)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        import jax.numpy as jnp
+
+        stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        stacked = None
+    return carry, stacked

@@ -1,0 +1,86 @@
+"""Phi-3-vision backbone: phi3-mini decoder LM + stub CLIP patch embeddings.
+
+Per the assigned-architecture rules the modality frontend is a stub —
+``input_specs()`` supplies precomputed patch embeddings (B, n_patches, d_model)
+which are prepended to the token embeddings.  Loss is masked to text positions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.distributed import sharding as sh
+
+from . import layers as L
+from .scan_util import maybe_scan
+from . import lm
+from .config import ModelConfig
+from .lm import BF16
+
+
+init_params = lm.init_params
+param_specs = lm.param_specs
+init_cache = lm.init_cache
+cache_specs = lm.cache_specs
+decode_step = lm.decode_step  # decoding past the image tokens is plain LM
+
+
+def train_loss(cfg: ModelConfig, params, tokens, patches, mesh: Mesh | None = None):
+    """tokens: (B, S_txt+1) int32; patches: (B, n_patches, D) stub embeddings."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    b, s_txt = inp.shape
+    tok_emb = lm.embed(cfg, params, inp)
+    x = jnp.concatenate([patches.astype(BF16), tok_emb], axis=1)
+    if mesh is not None:
+        x = sh.constrain(x, mesh, sh.batch_spec(mesh, 3))
+    s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h = lm.forward_hidden(cfg, params, x, positions, mesh)
+    # next-token loss over the text region only
+    h_txt = h[:, patches.shape[1]:]
+    return lm.chunked_xent(cfg, params, h_txt, tgt, mesh)
+
+
+def prefill(cfg: ModelConfig, params, tokens, patches, cache, mesh=None):
+    """Prefill over (image patches + prompt tokens)."""
+    b, s_txt = tokens.shape
+    tok_emb = lm.embed(cfg, params, tokens)
+    x = jnp.concatenate([patches.astype(BF16), tok_emb], axis=1)
+    # reuse the LM prefill by substituting embeddings: build a token path that
+    # injects x directly (lm.prefill embeds internally, so we inline its body
+    # via the embedding hook below).
+    return _prefill_embedded(cfg, params, x, cache, mesh)
+
+
+def _prefill_embedded(cfg: ModelConfig, params, x, cache, mesh):
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(h, inp):
+        p_block, idx = inp
+        pa = p_block["attn"]
+        hn = L.rmsnorm(h, pa["ln"].astype(h.dtype))
+        qkv = hn @ pa["wqkv"].astype(h.dtype)
+        q, k, v = lm._split_qkv(cfg, qkv)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        ao = L.flash_attention(q, k, v, causal=True)
+        h = h + ao.reshape(b, s, -1) @ pa["wo"].astype(h.dtype)
+        h = h + lm.ffn_forward(cfg, p_block, h)
+        if mesh is not None:
+            h = sh.constrain(h, mesh, sh.batch_spec(mesh, 3))
+        smax = cache["k"].shape[2]
+        pad = smax - s
+        return h, (jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(BF16),
+                   jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(BF16))
+
+    h, (ks, vs) = maybe_scan(body, x, (params["blocks"], jnp.arange(cfg.n_layers)))
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = ks, vs
+    new_cache["t"] = jnp.asarray(s, jnp.int32)
+    h = L.rmsnorm(h, params["final_ln"].astype(h.dtype))
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"]).astype(BF16)
+    logits = (h[:, -1] @ head).astype(jnp.float32)
+    return logits, new_cache

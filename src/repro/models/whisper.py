@@ -1,0 +1,273 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a stub: the
+encoder consumes precomputed frame embeddings, as the assigned-architecture
+spec requires).
+
+Encoder: bidirectional attention + GELU FFN + layernorm + learned positions.
+Decoder: causal self-attention + cross-attention to encoder states.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding as sh
+
+from . import layers as L
+from .config import ModelConfig
+from .scan_util import maybe_scan
+from .lm import BF16, _dense_init, _norm_init, chunked_xent
+
+MAX_DEC_POS = 1 << 16
+
+
+def init_enc_block(cfg: ModelConfig, key):
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1_w": _norm_init((d,)), "ln1_b": jnp.zeros((d,), jnp.float32),
+        "wqkv": _dense_init(ks[0], (d, 3 * cfg.n_heads * hd)),
+        "wo": _dense_init(ks[1], (cfg.n_heads * hd, d)),
+        "ln2_w": _norm_init((d,)), "ln2_b": jnp.zeros((d,), jnp.float32),
+        "w1": _dense_init(ks[2], (d, f)),
+        "w2": _dense_init(ks[3], (f, d)),
+    }
+
+
+def init_dec_block(cfg: ModelConfig, key):
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    ks = jax.random.split(key, 8)
+    return {
+        "ln1_w": _norm_init((d,)), "ln1_b": jnp.zeros((d,), jnp.float32),
+        "wqkv": _dense_init(ks[0], (d, 3 * cfg.n_heads * hd)),
+        "wo": _dense_init(ks[1], (cfg.n_heads * hd, d)),
+        "lnx_w": _norm_init((d,)), "lnx_b": jnp.zeros((d,), jnp.float32),
+        "xq": _dense_init(ks[2], (d, cfg.n_heads * hd)),
+        "xkv": _dense_init(ks[3], (d, 2 * cfg.n_heads * hd)),
+        "xo": _dense_init(ks[4], (cfg.n_heads * hd, d)),
+        "ln2_w": _norm_init((d,)), "ln2_b": jnp.zeros((d,), jnp.float32),
+        "w1": _dense_init(ks[5], (d, f)),
+        "w2": _dense_init(ks[6], (f, d)),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    k = jax.random.split(key, 8)
+    enc = jax.vmap(lambda kk: init_enc_block(cfg, kk))(
+        jax.random.split(k[0], cfg.enc_layers))
+    dec = jax.vmap(lambda kk: init_dec_block(cfg, kk))(
+        jax.random.split(k[1], cfg.n_layers))
+    d = cfg.d_model
+    return {
+        "enc_pos": _dense_init(k[2], (cfg.enc_seq, d), scale=0.02),
+        "dec_pos": _dense_init(k[3], (MAX_DEC_POS, d), scale=0.02),
+        "embed": _dense_init(k[4], (cfg.vocab, d), scale=0.02),
+        "enc_blocks": enc,
+        "dec_blocks": dec,
+        "enc_ln_w": _norm_init((d,)), "enc_ln_b": jnp.zeros((d,), jnp.float32),
+        "dec_ln_w": _norm_init((d,)), "dec_ln_b": jnp.zeros((d,), jnp.float32),
+        "head": _dense_init(k[5], (d, cfg.vocab)),
+    }
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    W = lambda shape, tp, fs: P(None, *sh.weight_spec(mesh, shape, tp, fs))
+    V = P(None, None)
+    enc = {
+        "ln1_w": V, "ln1_b": V,
+        "wqkv": W((d, 3 * cfg.n_heads * hd), 1, 0),
+        "wo": W((cfg.n_heads * hd, d), 0, 1),
+        "ln2_w": V, "ln2_b": V,
+        "w1": W((d, f), 1, 0), "w2": W((f, d), 0, 1),
+    }
+    dec = dict(enc)
+    dec.update({
+        "lnx_w": V, "lnx_b": V,
+        "xq": W((d, cfg.n_heads * hd), 1, 0),
+        "xkv": W((d, 2 * cfg.n_heads * hd), 1, 0),
+        "xo": W((cfg.n_heads * hd, d), 0, 1),
+    })
+    return {
+        "enc_pos": sh.weight_spec(mesh, (cfg.enc_seq, d), None, 0),
+        "dec_pos": sh.weight_spec(mesh, (MAX_DEC_POS, d), None, 0),
+        "embed": sh.weight_spec(mesh, (cfg.vocab, d), 0, 1),
+        "enc_blocks": enc, "dec_blocks": dec,
+        "enc_ln_w": P(None), "enc_ln_b": P(None),
+        "dec_ln_w": P(None), "dec_ln_b": P(None),
+        "head": sh.weight_spec(mesh, (d, cfg.vocab), 1, 0),
+    }
+
+
+def _mha(x, p, cfg, causal, mesh):
+    b, s, _ = x.shape
+    h = L.layernorm(x, p["ln1_w"].astype(x.dtype), p["ln1_b"].astype(x.dtype))
+    qkv = h @ p["wqkv"].astype(x.dtype)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    hd = cfg.hd
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_heads, hd)
+    v = v.reshape(b, s, cfg.n_heads, hd)
+    out = L.flash_attention(q, k, v, causal=causal)
+    return out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+
+def _ffn(x, p, ln_w, ln_b):
+    h = L.layernorm(x, p[ln_w].astype(x.dtype), p[ln_b].astype(x.dtype))
+    return jax.nn.gelu(h @ p["w1"].astype(x.dtype)) @ p["w2"].astype(x.dtype)
+
+
+def encode(cfg: ModelConfig, params, frames, mesh: Mesh | None = None):
+    """frames: (B, enc_seq, D) stub frontend embeddings → encoder states."""
+    x = frames.astype(BF16) + params["enc_pos"][: frames.shape[1]].astype(BF16)
+
+    def body(h, p):
+        h = h + _mha(h, p, cfg, causal=False, mesh=mesh)
+        h = h + _ffn(h, p, "ln2_w", "ln2_b")
+        if mesh is not None:
+            h = sh.constrain(h, mesh, sh.batch_spec(mesh, 3))
+        return h, None
+
+    x, _ = maybe_scan(lambda h, p: body(h, p), x, params["enc_blocks"])
+    return L.layernorm(x, params["enc_ln_w"].astype(x.dtype),
+                       params["enc_ln_b"].astype(x.dtype))
+
+
+def _cross_attn(x, enc_out, p, cfg):
+    b, s, _ = x.shape
+    se = enc_out.shape[1]
+    h = L.layernorm(x, p["lnx_w"].astype(x.dtype), p["lnx_b"].astype(x.dtype))
+    hd = cfg.hd
+    q = (h @ p["xq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    kv = enc_out @ p["xkv"].astype(x.dtype)
+    k, v = jnp.split(kv, 2, axis=-1)
+    k = k.reshape(b, se, cfg.n_heads, hd)
+    v = v.reshape(b, se, cfg.n_heads, hd)
+    out = L.flash_attention(q, k, v, causal=False)
+    return out.reshape(b, s, -1) @ p["xo"].astype(x.dtype)
+
+
+def decoder_hidden(cfg: ModelConfig, params, tokens, enc_out, mesh=None):
+    b, s = tokens.shape
+    x = params["embed"].astype(BF16)[tokens] + params["dec_pos"][:s].astype(BF16)
+
+    def body(h, p):
+        h = h + _mha(h, p, cfg, causal=True, mesh=mesh)
+        h = h + _cross_attn(h, enc_out, p, cfg)
+        h = h + _ffn(h, p, "ln2_w", "ln2_b")
+        if mesh is not None:
+            h = sh.constrain(h, mesh, sh.batch_spec(mesh, 3))
+        return h, None
+
+    x, _ = maybe_scan(body, x, params["dec_blocks"])
+    return L.layernorm(x, params["dec_ln_w"].astype(x.dtype),
+                       params["dec_ln_b"].astype(x.dtype))
+
+
+def train_loss(cfg: ModelConfig, params, frames, tokens, mesh=None):
+    """frames: (B, enc_seq, D); tokens: (B, S_dec+1)."""
+    enc_out = encode(cfg, params, frames, mesh)
+    h = decoder_hidden(cfg, params, tokens[:, :-1], enc_out, mesh)
+    fake_cfg_head = {"head": params["head"], "embed": params["embed"]}
+    return chunked_xent(cfg, fake_cfg_head, h, tokens[:, 1:], mesh)
+
+
+# --- serving -----------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    nl, hd = cfg.n_layers, cfg.hd
+    return {
+        "t": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((nl, batch, max_seq, cfg.n_heads, hd), BF16),
+        "v": jnp.zeros((nl, batch, max_seq, cfg.n_heads, hd), BF16),
+        # cross-attention K/V precomputed at prefill
+        "xk": jnp.zeros((nl, batch, cfg.enc_seq, cfg.n_heads, hd), BF16),
+        "xv": jnp.zeros((nl, batch, cfg.enc_seq, cfg.n_heads, hd), BF16),
+    }
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    dp_t = sh.dp_axes(mesh)
+    dp = dp_t or None
+    seq_ax = None if "model" in dp_t else "model"
+    kv = P(None, dp, seq_ax, None, None)
+    return {"t": P(), "k": kv, "v": kv,
+            "xk": P(None, dp, None, None, None), "xv": P(None, dp, None, None, None)}
+
+
+def prefill(cfg: ModelConfig, params, frames, tokens, cache, mesh=None):
+    """Encode frames, precompute cross-KV, run decoder prompt; fill caches."""
+    enc_out = encode(cfg, params, frames, mesh)
+    b, s = tokens.shape
+    x = params["embed"].astype(BF16)[tokens] + params["dec_pos"][:s].astype(BF16)
+    hd, nh = cfg.hd, cfg.n_heads
+    se = enc_out.shape[1]
+    smax = cache["k"].shape[2]
+
+    def body(h, p):
+        hn = L.layernorm(h, p["ln1_w"].astype(h.dtype), p["ln1_b"].astype(h.dtype))
+        qkv = hn @ p["wqkv"].astype(h.dtype)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, s, nh, hd); k = k.reshape(b, s, nh, hd); v = v.reshape(b, s, nh, hd)
+        ao = L.flash_attention(q, k, v, causal=True)
+        h = h + ao.reshape(b, s, -1) @ p["wo"].astype(h.dtype)
+        h = h + _cross_attn(h, enc_out, p, cfg)
+        h = h + _ffn(h, p, "ln2_w", "ln2_b")
+        kv_x = enc_out @ p["xkv"].astype(h.dtype)
+        xk, xv = jnp.split(kv_x, 2, axis=-1)
+        pad = smax - s
+        return h, (jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(BF16),
+                   jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(BF16),
+                   xk.reshape(b, se, nh, hd).astype(BF16),
+                   xv.reshape(b, se, nh, hd).astype(BF16))
+
+    h, stacked = maybe_scan(body, x, params["dec_blocks"])
+    cache = dict(cache)
+    cache["k"], cache["v"], cache["xk"], cache["xv"] = stacked
+    cache["t"] = jnp.asarray(s, jnp.int32)
+    h = L.layernorm(h, params["dec_ln_w"].astype(h.dtype), params["dec_ln_b"].astype(h.dtype))
+    logits = (h[:, -1] @ params["head"].astype(BF16)).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, mesh=None):
+    b = token.shape[0]
+    t = cache["t"]
+    hd, nh = cfg.hd, cfg.n_heads
+    x = params["embed"].astype(BF16)[token[:, None]] + \
+        jnp.take(params["dec_pos"], t[None], axis=0).astype(BF16)[None]
+
+    def body(carry, inp):
+        (h,) = carry
+        p, idx = inp
+        hn = L.layernorm(h, p["ln1_w"].astype(h.dtype), p["ln1_b"].astype(h.dtype))
+        qkv = hn @ p["wqkv"].astype(h.dtype)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, 1, nh, hd)
+        zero = jnp.zeros((), jnp.int32)
+        t32 = t.astype(jnp.int32)
+        kc = jax.lax.dynamic_update_slice(cache["k"][idx], k.reshape(b, 1, nh, hd).astype(BF16),
+                                          (zero, t32, zero, zero))
+        vc = jax.lax.dynamic_update_slice(cache["v"][idx], v.reshape(b, 1, nh, hd).astype(BF16),
+                                          (zero, t32, zero, zero))
+        h = h + L.decode_attention(q, kc, vc, t + 1).reshape(b, 1, -1) @ p["wo"].astype(h.dtype)
+        # cross-attention against precomputed encoder KV
+        hx = L.layernorm(h, p["lnx_w"].astype(h.dtype), p["lnx_b"].astype(h.dtype))
+        qx = (hx @ p["xq"].astype(h.dtype)).reshape(b, 1, nh, hd)
+        xo = L.decode_attention(qx, cache["xk"][idx], cache["xv"][idx], cache["xk"].shape[2])
+        h = h + xo.reshape(b, 1, -1) @ p["xo"].astype(h.dtype)
+        h = h + _ffn(h, p, "ln2_w", "ln2_b")
+        return (h,), (kc, vc)
+
+    (h,), (ks, vs) = maybe_scan(body, (x,), (params["dec_blocks"], jnp.arange(cfg.n_layers)))
+    cache = dict(cache)
+    cache["k"], cache["v"] = ks, vs
+    cache["t"] = t + 1
+    h = L.layernorm(h, params["dec_ln_w"].astype(h.dtype), params["dec_ln_b"].astype(h.dtype))
+    logits = (h[:, 0] @ params["head"].astype(BF16)).astype(jnp.float32)
+    return logits, cache

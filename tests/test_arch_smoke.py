@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests: reduced configs of the same family run one
+forward/train step + one prefill/decode step on CPU, asserting shapes + no NaNs.
+The full configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import registry
+
+ARCHS = configs.ARCH_IDS
+
+
+def _batch_for(api, kind, b, s):
+    cfg = api.cfg
+    kr = jax.random.PRNGKey(7)
+    if cfg.family == "vlm":
+        s_txt = s - cfg.n_patches
+        n = s_txt + (1 if kind == "train" else 0)
+        return {
+            "tokens": jax.random.randint(kr, (b, n), 0, cfg.vocab),
+            "patches": jax.random.normal(kr, (b, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+        }
+    if cfg.family == "audio":
+        s_dec = s - cfg.enc_seq
+        n = s_dec + (1 if kind == "train" else 0)
+        return {
+            "frames": jax.random.normal(kr, (b, cfg.enc_seq, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.random.randint(kr, (b, n), 0, cfg.vocab),
+        }
+    n = s + (1 if kind == "train" else 0)
+    return {"tokens": jax.random.randint(kr, (b, n), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = configs.get_config(arch, smoke=True)
+    api = registry.build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    batch = _batch_for(api, "train", b=2, s=64)
+    loss = jax.jit(lambda p, **kw: api.train_loss(p, **kw))(params, **batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: loss={loss}"
+    # untrained loss should be near ln(vocab)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 2.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_smoke(arch):
+    cfg = configs.get_config(arch, smoke=True)
+    api = registry.build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    b, s = 2, 48
+    batch = _batch_for(api, "prefill", b=b, s=s)
+    cache = api.init_cache(b, 64)
+    logits, cache = jax.jit(lambda p, c, **kw: api.prefill(p, c, **kw))(
+        params, cache, **batch)
+    assert logits.shape == (b, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits2, cache = jax.jit(api.decode_step)(params, tok, cache)
+    assert logits2.shape == (b, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits2)))
+    # vlm counts patch positions in t; whisper counts decoder positions only
+    expected_t = (s - cfg.enc_seq if cfg.family == "audio" else s) + 1
+    assert int(cache["t"]) == expected_t
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mamba2-1.3b", "hymba-1.5b"])
+def test_prefill_decode_consistency(arch):
+    """decode-after-prefill must match an all-at-once prefill (teacher forcing)."""
+    cfg = configs.get_config(arch, smoke=True)
+    api = registry.build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 17), 0, cfg.vocab)
+    # full prefill of 17 tokens
+    cache_a = api.init_cache(1, 32)
+    logits_full, _ = jax.jit(lambda p, c, **kw: api.prefill(p, c, **kw))(
+        params, cache_a, tokens=toks)
+    # prefill 16 then decode token 17
+    cache_b = api.init_cache(1, 32)
+    _, cache_b = jax.jit(lambda p, c, **kw: api.prefill(p, c, **kw))(
+        params, cache_b, tokens=toks[:, :16])
+    logits_step, _ = jax.jit(api.decode_step)(params, toks[:, 16], cache_b)
+    lf, ls = np.asarray(logits_full), np.asarray(logits_step)
+    np.testing.assert_allclose(lf, ls, atol=0.55, rtol=0.15)
+    # same ranking structure (argmax on near-flat random-init logits is noise)
+    assert np.corrcoef(lf.ravel(), ls.ravel())[0, 1] > 0.98
+
+
+def test_param_counts_match_names():
+    """Full configs' parameter counts are in the ballpark their names claim."""
+    expect = {
+        "hymba-1.5b": (0.9e9, 2.2e9),
+        "phi-3-vision-4.2b": (3.3e9, 5.2e9),
+        # NOTE: the assigned spec (48L × 64 experts × d_ff 1408) totals ~29B —
+        # we implement the assignment verbatim rather than HF's 27-layer card.
+        "moonshot-v1-16b-a3b": (12e9, 31e9),
+        "deepseek-moe-16b": (12e9, 21e9),
+        "mamba2-1.3b": (0.9e9, 1.8e9),
+        "smollm-135m": (0.1e9, 0.18e9),
+        "granite-20b": (15e9, 26e9),
+        "qwen1.5-110b": (85e9, 135e9),
+        "phi3-medium-14b": (11e9, 18e9),
+        "whisper-medium": (0.25e9, 1.0e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = configs.get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]"
+
+
+def test_long_context_support_flags():
+    """long_500k runs only for sub-quadratic mixers (DESIGN.md §4)."""
+    runs = {a for a in ARCHS
+            if registry.build(configs.get_config(a)).supports_shape("long_500k")[0]}
+    assert runs == {"mamba2-1.3b", "hymba-1.5b"}

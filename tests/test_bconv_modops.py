@@ -1,0 +1,75 @@
+"""Kernel-vs-oracle tests for BConv and fused pointwise modops."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fhe import modmath as mm
+from repro.kernels.bconv import ops as bconv_ops
+from repro.kernels.modops import ops as modops
+
+
+PRIMES = mm.gen_ntt_primes(30, 8, 2 << 16) + mm.gen_ntt_primes(26, 8, 2 << 16)
+
+
+@pytest.mark.parametrize("k,m,n", [(3, 2, 256), (8, 5, 512), (13, 7, 4096), (60, 8, 4096)])
+def test_bconv_kernel_matches_ref(k, m, n):
+    rng = np.random.default_rng(k * 1000 + m)
+    assert k + m <= len(PRIMES) or k > 8  # reuse primes for big k
+    bs = [PRIMES[i % 8] for i in range(k)]
+    cs = np.array(PRIMES[8 : 8 + m], np.uint32)
+    xhat = np.stack([rng.integers(0, b, size=n, dtype=np.uint32) for b in bs])
+    w = np.stack([rng.integers(0, cs, dtype=np.uint32) for _ in range(k)])  # (k, m)
+    got_k = bconv_ops.bconv(jnp.asarray(xhat), jnp.asarray(w), cs, backend="kernel")
+    got_r = bconv_ops.bconv(jnp.asarray(xhat), jnp.asarray(w), cs, backend="ref")
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(got_r))
+    # independent check against slow exact host computation on a few columns
+    for col in (0, n // 2, n - 1):
+        for j in range(m):
+            expect = sum(int(xhat[i, col]) * int(w[i, j]) for i in range(k)) % int(cs[j])
+            assert int(got_r[j, col]) == expect
+
+
+@pytest.mark.parametrize("shape", [(2, 256), (3, 4096), (2, 3, 1024)])
+def test_pointwise_ops_kernel_matches_ref(shape):
+    rng = np.random.default_rng(42)
+    l = shape[-2]
+    qs = np.array(PRIMES[:l], np.uint32)
+    consts = mm.mont_constants_array(qs.tolist())
+    a = (rng.integers(0, 1 << 31, size=shape + (0,)[:0]).astype(np.uint64) % qs.reshape((1,) * (len(shape) - 2) + (l, 1))).astype(np.uint32)
+    b = (rng.integers(0, 1 << 31, size=shape).astype(np.uint64) % qs.reshape((1,) * (len(shape) - 2) + (l, 1))).astype(np.uint32)
+    a = a.reshape(shape)
+    mk = modops.pointwise_mulmod(
+        jnp.asarray(a), jnp.asarray(b), qs, consts["qinv_neg"], consts["r2"], backend="kernel"
+    )
+    mr = modops.pointwise_mulmod(jnp.asarray(a), jnp.asarray(b), qs, backend="ref")
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
+    ak = modops.pointwise_addmod(jnp.asarray(a), jnp.asarray(b), qs, backend="kernel")
+    ar = modops.pointwise_addmod(jnp.asarray(a), jnp.asarray(b), qs, backend="ref")
+    np.testing.assert_array_equal(np.asarray(ak), np.asarray(ar))
+    sk = modops.pointwise_submod(jnp.asarray(a), jnp.asarray(b), qs, backend="kernel")
+    sr = modops.pointwise_submod(jnp.asarray(a), jnp.asarray(b), qs, backend="ref")
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_bconv_exact_crt_property(seed):
+    """BConv of x in basis B to C equals x + u·B for small u ≥ 0 (CRT property)."""
+    rng = np.random.default_rng(seed)
+    bs = PRIMES[:3]
+    cs = PRIMES[8:10]
+    B = int(np.prod([int(b) for b in bs], dtype=object))
+    x = int(rng.integers(0, min(B, 1 << 60)))
+    bhat_inv = [pow(B // b, -1, b) for b in bs]
+    xhat = np.array([[x % b * bhat_inv[i] % b] for i, b in enumerate(bs)], np.uint32)
+    w = np.array([[(B // b) % c for c in cs] for b in bs], np.uint32)
+    got = np.asarray(bconv_ops.bconv(jnp.asarray(xhat), jnp.asarray(w), np.array(cs, np.uint32), backend="ref"))
+    # exact value mod c_j must be (x + u·B) mod c_j for some 0 ≤ u < 3
+    ok = False
+    for u in range(len(bs)):
+        if all(int(got[j, 0]) == (x + u * B) % c for j, c in enumerate(cs)):
+            ok = True
+            break
+    assert ok

@@ -1,0 +1,86 @@
+"""Bootstrapping correctness (reduced ring N=2^8; full-size runs via planner).
+
+This is the paper's Packed Bootstrapping workload executed for real: every slot
+occupied, ModRaise → CoeffToSlot → EvalMod (Chebyshev sine) → SlotToCoeff, all
+rotations/relinearisations through hybrid key-switching.
+"""
+
+import numpy as np
+import pytest
+
+from repro.fhe import bootstrap as B
+from repro.fhe import ops
+from repro.fhe import params as P
+from repro.fhe import polyeval, trace
+
+
+@pytest.fixture(scope="module")
+def btctx():
+    p = P.make_params(1 << 8, 18, 1, check_security=False)
+    return p, B.build_context(p, seed=0, h=32)
+
+
+@pytest.fixture(scope="module")
+def boot_result(btctx):
+    p, ctx = btctx
+    rng = np.random.default_rng(7)
+    z = rng.normal(size=p.slots) * 0.4 + 1j * rng.normal(size=p.slots) * 0.4
+    ct = ops.encrypt(p, ctx.keys.pk, ops.encode(p, z))
+    att = 1 / 64.0
+    ct = ops.level_drop(ops.mul_const(p, ct, att), 0)
+    with trace.capture_trace() as t:
+        out = B.bootstrap(ctx, ct, post_scale=1 / att)
+    return p, ctx, z, out, list(t)
+
+
+def test_bootstrap_refreshes_levels(boot_result):
+    p, ctx, z, out, _ = boot_result
+    assert out.level >= 5, f"bootstrap must leave usable depth, got level {out.level}"
+
+
+def test_bootstrap_value_correct(boot_result):
+    p, ctx, z, out, _ = boot_result
+    got = ops.decrypt_decode(p, ctx.keys.sk, out)
+    np.testing.assert_allclose(got, z, atol=5e-2)
+
+
+def test_post_bootstrap_multiplication(boot_result):
+    p, ctx, z, out, _ = boot_result
+    sq = ops.square(p, out, ctx.keys.rlk)
+    got = ops.decrypt_decode(p, ctx.keys.sk, sq)
+    np.testing.assert_allclose(got, z * z, atol=1e-1)
+
+
+def test_bootstrap_trace_structure(boot_result):
+    _, _, _, _, t = boot_result
+    names = [i.op for i in t]
+    assert names[0] == "BOOTSTRAP_BEGIN" and names[-1] == "BOOTSTRAP_END"
+    assert "MODRAISE" in names
+    # the deep-workload signature: many iNTT→BConv→NTT key-switch pipelines
+    assert names.count("BCONV") > 50
+    assert names.count("AUTO") > 20  # rotation-heavy CtS/StC
+
+
+def test_eval_mod_precision(btctx):
+    """Homomorphic sine matches the numpy Chebyshev evaluation."""
+    p, ctx = btctx
+    rng = np.random.default_rng(3)
+    x = rng.uniform(-0.95, 0.95, size=p.slots)
+    xct = ops.encrypt(p, ctx.keys.pk, ops.encode(p, x))
+    basis = polyeval.ChebyshevBasis(p, xct, ctx.keys, ctx.eval_mod_degree)
+    out = polyeval.eval_chebyshev(p, basis, ctx.sine_coeffs, ctx.keys)
+    want = np.polynomial.chebyshev.Chebyshev(ctx.sine_coeffs)(x)
+    got = ops.decrypt_decode(p, ctx.keys.sk, out).real
+    np.testing.assert_allclose(got, want, atol=1e-3)
+
+
+def test_force_to_exactness(btctx):
+    """force_to's mul-by-one fold is value-preserving across multi-level drops."""
+    p, ctx = btctx
+    rng = np.random.default_rng(11)
+    z = rng.normal(size=p.slots) * 0.3
+    ct = ops.encrypt(p, ctx.keys.pk, ops.encode(p, z))
+    dropped = polyeval.force_to(p, ct, ct.level - 5, p.scale * 1.01)
+    assert dropped.level == ct.level - 5
+    assert dropped.scale == p.scale * 1.01
+    np.testing.assert_allclose(ops.decrypt_decode(p, ctx.keys.sk, dropped), z, atol=2e-3)

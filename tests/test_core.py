@@ -1,0 +1,216 @@
+"""core/ tests: planner↔execution consistency, scheduler policy, simulator."""
+
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core import hardware as H
+from repro.core import jobs as J
+from repro.core import planner as PL
+from repro.core import scheduler as S
+from repro.core.cache import MB, LruCache
+from repro.core.simulator import lanes_deep, lanes_shallow, lanes_whole_chip, simulate_stream
+from repro.fhe import keys as K
+from repro.fhe import ops
+from repro.fhe import params as P
+from repro.fhe import trace
+
+
+def _sig(instrs):
+    """Multiset signature of (op, n, limbs) triples (ignoring meta)."""
+    return collections.Counter((i.op, i.n, i.limbs) for i in instrs)
+
+
+@pytest.fixture(scope="module")
+def small():
+    p = P.make_params(1 << 9, 6, 2, check_security=False)
+    ks = K.full_keyset(p, seed=0, rotations=(1, 3), conjugate=True)
+    rng = np.random.default_rng(5)
+    z = rng.normal(size=p.slots) * 0.4
+    a = ops.encrypt(p, ks.pk, ops.encode(p, z))
+    b = ops.encrypt(p, ks.pk, ops.encode(p, z * 0.5), seed=31)
+    return p, ks, a, b
+
+
+# ---------------------------------------------------------------------------
+# planner validation: analytic streams == captured execution traces
+# ---------------------------------------------------------------------------
+
+
+def test_planner_hmul_matches_execution(small):
+    p, ks, a, b = small
+    with trace.capture_trace() as t:
+        ops.mul(p, a, b, ks.rlk)
+    pp = PL.PlanParams.of(p)
+    assert _sig(t) == _sig(PL.hmul(pp, a.level))
+
+
+def test_planner_rotate_matches_execution(small):
+    p, ks, a, _ = small
+    with trace.capture_trace() as t:
+        ops.rotate(p, a, 3, ks)
+    pp = PL.PlanParams.of(p)
+    assert _sig(t) == _sig(PL.rotate(pp, a.level))
+
+
+def test_planner_keyswitch_level_dependence(small):
+    """β (digit count) shrinks at lower levels — fewer BCONV/NTT stages."""
+    p, _, _, _ = small
+    pp = PL.PlanParams.of(p)
+    hi = PL.key_switch(pp, p.L)
+    lo = PL.key_switch(pp, p.alpha - 1)  # single digit active
+    n_bconv_hi = sum(1 for i in hi if i.op == "BCONV")
+    n_bconv_lo = sum(1 for i in lo if i.op == "BCONV")
+    assert n_bconv_hi == p.num_digits + 2  # β digits + ModDown on (ks0, ks1)
+    assert n_bconv_lo == 3  # 1 digit + ModDown on (ks0, ks1)
+
+
+def test_planner_mul_plain_matches_execution(small):
+    p, ks, a, _ = small
+    pt_z = np.ones(p.slots) * 0.5
+    with trace.capture_trace() as t:
+        ops.mul_plain(p, a, ops.encode(p, pt_z, level=a.level), rescale_after=True)
+    pp = PL.PlanParams.of(p)
+    assert _sig(t) == _sig(PL.mul_plain(pp, a.level, rescale_after=True, mode="exec"))
+
+
+def test_planner_bootstrap_structure():
+    """hw-mode bootstrap: factored DFT ⇒ ~100 key-switches, not ~1500."""
+    p = P.workload_params("packed_bootstrap")
+    pp = PL.PlanParams.of(p)
+    hw = PL.bootstrap(pp, degree=63, mode="hw")
+    ks_count = sum(1 for i in hw if i.op == "LOAD_KSK")
+    assert 50 <= ks_count <= 400
+    assert any(i.op == "MODRAISE" for i in hw)
+
+
+def test_workload_streams_exist():
+    for name in PL.available_workloads():
+        p = P.workload_params(name)
+        st = PL.workload_stream(name, p, mode="hw")
+        assert len(st) > 10
+        # hw streams carry working-set annotations for every key-switch
+        n_ksk = sum(1 for i in st if i.op == "LOAD_KSK")
+        n_tws = sum(1 for i in st if i.op == "TOUCH_WS")
+        assert n_ksk == n_tws
+
+
+# ---------------------------------------------------------------------------
+# simulator
+# ---------------------------------------------------------------------------
+
+
+def test_simulator_paper_deep_claims():
+    """Deep workloads: FLASH-FHE ≈ 1.4× CraterLake, ≈ 11× F1+ (geomean)."""
+    rs_cl, rs_f1 = [], []
+    for w in P.DEEP_WORKLOADS:
+        job = J.make_job(w)
+        t = {c.name: S.schedule([job], c)[0].sim.time_s
+             for c in (H.FLASH_FHE, H.CRATERLAKE, H.F1PLUS)}
+        rs_cl.append(t["craterlake"] / t["flash-fhe"])
+        rs_f1.append(t["f1plus"] / t["flash-fhe"])
+    gm_cl = float(np.exp(np.mean(np.log(rs_cl))))
+    gm_f1 = float(np.exp(np.mean(np.log(rs_f1))))
+    assert 1.1 <= gm_cl <= 2.0, f"CL geomean {gm_cl} (paper: 1.4)"
+    assert 7.0 <= gm_f1 <= 17.0, f"F1+ geomean {gm_f1} (paper: 11.2)"
+
+
+def test_simulator_multi_job_scaling():
+    """8 concurrent shallow jobs: makespan speedup reaches 8× (Fig 12)."""
+    jobs = [J.make_job("lola_mnist_plain", job_id=i) for i in range(8)]
+    ff = S.schedule(jobs, H.FLASH_FHE)
+    cl = S.schedule(jobs, H.CRATERLAKE)
+    speedup = S.makespan(cl) / S.makespan(ff)
+    assert speedup >= 7.5, f"multi-job speedup {speedup} (paper: up to 8.0)"
+    # FLASH-FHE runs them in parallel on distinct affiliations
+    assert len({s.lanes for s in ff}) == 8
+
+
+def test_simulator_unfused_roundtrips_hurt():
+    """F1+-style unfused key-switch must be strictly slower on deep work."""
+    job = J.make_job("packed_bootstrap")
+    st = PL.workload_stream(job.workload, job.params, mode="hw")
+    fused = simulate_stream(st, H.CRATERLAKE, lanes_whole_chip(H.CRATERLAKE))
+    unfused = simulate_stream(st, H.F1PLUS, lanes_whole_chip(H.F1PLUS))
+    assert unfused.cycles > 3 * fused.cycles
+
+
+def test_cache_sweep_saturates_at_design_point():
+    """Fig 8: dnum=1 key-switch performance saturates by ~320 MB."""
+    p = P.workload_params("packed_bootstrap")
+    pp = PL.PlanParams.of(p)
+    stream = PL.add_hw_annotations(PL.key_switch(pp, p.L) * 10, pp)
+    times = {}
+    for cap in (128, 256, 320, 512):
+        r = simulate_stream(stream, H.FLASH_FHE, lanes_deep(H.FLASH_FHE),
+                            cache_bytes=cap * MB)
+        times[cap] = r.cycles
+    assert times[128] > times[256] > times[320]
+    assert times[320] == times[512]  # saturated at the paper's design point
+
+
+def test_lru_cache_model():
+    c = LruCache(10 * MB)
+    assert c.access("a", 6 * MB) == 6 * MB  # miss
+    assert c.access("a", 6 * MB) == 0.0  # hit
+    assert c.access("b", 6 * MB) == 6 * MB  # miss, evicts a
+    assert c.access("a", 6 * MB) == 6 * MB  # miss again
+    assert c.access("huge", 20 * MB) == 20 * MB  # streams, never cached
+    assert c.access("huge", 20 * MB) == 20 * MB
+
+
+# ---------------------------------------------------------------------------
+# scheduler policy
+# ---------------------------------------------------------------------------
+
+
+def test_classifier():
+    assert J.make_job("lola_mnist_plain").kind == "shallow"
+    assert J.make_job("resnet20").kind == "deep"
+
+
+def test_deep_job_takes_all_affiliations():
+    sched = S.schedule([J.make_job("lstm")], H.FLASH_FHE)
+    assert "deep(8×boot)" in sched[0].lanes
+
+
+def test_preemption_avoids_convoy():
+    """High-priority shallow job arriving behind a deep job must not wait for
+    it (preemptive scheduling, §4.2) — unlike the sequential baseline."""
+    deep = J.make_job("resnet20", priority=0, arrival_cycle=0, job_id=0)
+    sh = J.make_job("matmul", priority=5, arrival_cycle=1000, job_id=1)
+    ff = S.schedule([deep, sh], H.FLASH_FHE)
+    cl = S.schedule([deep, sh], H.CRATERLAKE)
+    sh_ff = next(s for s in ff if s.job.job_id == 1)
+    sh_cl = next(s for s in cl if s.job.job_id == 1)
+    deep_ff = next(s for s in ff if s.job.job_id == 0)
+    assert sh_ff.turnaround < 0.01 * sh_cl.turnaround  # no convoy effect
+    assert deep_ff.preempted_cycles > 0  # deep job paid the spill
+
+
+def test_priority_respected_in_sequential_baseline():
+    j0 = J.make_job("matmul", priority=0, arrival_cycle=0, job_id=0)
+    j1 = J.make_job("matmul", priority=9, arrival_cycle=0, job_id=1)
+    cl = S.schedule([j0, j1], H.CRATERLAKE)
+    first = min(cl, key=lambda s: s.start_cycle)
+    assert first.job.job_id == 1
+
+
+# ---------------------------------------------------------------------------
+# area / power (Table 3, Fig 13)
+# ---------------------------------------------------------------------------
+
+
+def test_area_claims():
+    assert H.swift_logic_fraction("14nm") < 0.075  # "< 7% extra area"
+    assert abs(H.area_total_mm2("14nm") - 519.34) < 1e-6
+    assert H.area_total_mm2("14nm") < H.BASELINE_AREAS_MM2["f1plus"]
+
+
+def test_power_breakdown():
+    total = sum(H.POWER_BREAKDOWN_W.values())
+    assert abs(total - H.TOTAL_POWER_W) / H.TOTAL_POWER_W < 0.01
+    assert H.POWER_BREAKDOWN_W["bootstrappable_clusters"] / H.TOTAL_POWER_W == pytest.approx(0.60, abs=0.02)
+    assert H.POWER_BREAKDOWN_W["swift_clusters"] / H.TOTAL_POWER_W == pytest.approx(0.11, abs=0.02)
+    assert H.TOTAL_POWER_W < H.BASELINE_POWER_W["craterlake"]

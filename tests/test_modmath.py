@@ -1,0 +1,99 @@
+"""Unit + property tests for the two modular-arithmetic backends."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fhe import modmath as mm
+
+
+PRIMES = mm.gen_ntt_primes(30, 4, 2 << 16) + mm.gen_ntt_primes(26, 4, 2 << 16)
+
+
+def test_primes_are_ntt_friendly():
+    for q in PRIMES:
+        assert mm.is_prime(q)
+        assert (q - 1) % (2 << 16) == 0
+        assert q < (1 << 31)
+
+
+def test_root_of_unity_orders():
+    q = PRIMES[0]
+    for logn in (4, 8, 12):
+        order = 2 << logn  # 2N
+        w = mm.root_of_unity(order, q)
+        assert pow(w, order, q) == 1
+        assert pow(w, order // 2, q) == q - 1
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    a=st.integers(0, (1 << 31) - 1),
+    b=st.integers(0, (1 << 31) - 1),
+    qi=st.integers(0, len(PRIMES) - 1),
+)
+def test_montmul_matches_u64(a, b, qi):
+    q = PRIMES[qi]
+    a %= q
+    b %= q
+    c = mm.MontConstants(q)
+    au = jnp.uint32(a)
+    bu = jnp.uint32(b)
+    qu = jnp.uint32(q)
+    qinv = jnp.uint32(c.qinv_neg)
+    r2 = jnp.uint32(c.r2)
+    got = int(mm.mul_mod_u32(au, bu, qu, qinv, r2))
+    assert got == (a * b) % q
+    # mont form roundtrip
+    am = mm.to_mont_u32(au, qu, qinv, r2)
+    assert int(mm.from_mont_u32(am, qu, qinv)) == a
+    # montmul with mont-form twiddle equals plain product
+    bm = jnp.uint32(c.to_mont_int(b))
+    assert int(mm.mont_mul_u32(au, bm, qu, qinv)) == (a * b) % q
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    a=st.integers(0, (1 << 62) - 1),
+    b=st.integers(0, (1 << 62) - 1),
+)
+def test_mulhi32(a, b):
+    a &= 0xFFFFFFFF
+    b &= 0xFFFFFFFF
+    got = int(mm.mulhi32(jnp.uint32(a), jnp.uint32(b)))
+    assert got == (a * b) >> 32
+
+
+def test_vectorised_backends_agree():
+    rng = np.random.default_rng(0)
+    q = PRIMES[1]
+    c = mm.MontConstants(q)
+    a = rng.integers(0, q, size=(4, 257), dtype=np.uint32)
+    b = rng.integers(0, q, size=(4, 257), dtype=np.uint32)
+    qu = jnp.uint32(q)
+    got32 = mm.mul_mod_u32(jnp.asarray(a), jnp.asarray(b), qu, jnp.uint32(c.qinv_neg), jnp.uint32(c.r2))
+    got64 = mm.mul_mod_u64(a, b, q)
+    np.testing.assert_array_equal(np.asarray(got32, np.uint64), np.asarray(got64))
+    np.testing.assert_array_equal(
+        np.asarray(mm.add_mod_u32(jnp.asarray(a), jnp.asarray(b), qu), np.uint64),
+        np.asarray(mm.add_mod_u64(a, b, q)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(mm.sub_mod_u32(jnp.asarray(a), jnp.asarray(b), qu), np.uint64),
+        np.asarray(mm.sub_mod_u64(a, b, q)),
+    )
+
+
+def test_mont_constants_array():
+    arrs = mm.mont_constants_array(PRIMES)
+    assert arrs["q"].dtype == np.uint32
+    for i, q in enumerate(PRIMES):
+        c = mm.MontConstants(q)
+        assert arrs["qinv_neg"][i] == c.qinv_neg
+        assert arrs["r2"][i] == c.r2
+        assert (int(arrs["q"][i]) * pow(int(arrs["q"][i]), -1, 1 << 32)) % (1 << 32) == 1
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,107 @@
+"""NTT correctness: kernel vs ref oracle vs schoolbook, shape/dtype sweeps, properties."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fhe import modmath as mm
+from repro.fhe.ntt import build_plan, galois_eval_perm, galois_coeff_map, fourstep_split
+from repro.kernels.ntt import ops as ntt_ops
+from repro.kernels.ntt import ref as ntt_ref
+
+MAXN = 1 << 16
+PRIMES = tuple(mm.gen_ntt_primes(30, 3, 2 * MAXN) + mm.gen_ntt_primes(26, 3, 2 * MAXN))
+
+
+def rand_poly(rng, l, n):
+    qs = np.array(PRIMES[:l], np.uint32).reshape(l, 1)
+    return (rng.integers(0, 1 << 31, size=(l, n)) % qs).astype(np.uint32)
+
+
+def test_fourstep_split():
+    assert fourstep_split(1 << 16) == (256, 256)
+    assert fourstep_split(1 << 14) == (128, 128)
+    assert fourstep_split(1 << 11) == (16, 128)
+    assert fourstep_split(1 << 12) == (32, 128)
+    assert fourstep_split(1 << 15) == (128, 256)
+
+
+@pytest.mark.parametrize("n", [256, 512, 1024])
+def test_ref_roundtrip_and_schoolbook(n):
+    rng = np.random.default_rng(n)
+    plan = build_plan(n, PRIMES[:2])
+    x = rand_poly(rng, 2, n)
+    fw = ntt_ref.ntt_fwd_ref(jnp.asarray(x), plan)
+    back = ntt_ref.ntt_inv_ref(fw, plan)
+    np.testing.assert_array_equal(np.asarray(back), x)
+
+    # ring multiplication property against O(N^2) schoolbook (single limb)
+    y = rand_poly(rng, 2, n)
+    fy = ntt_ref.ntt_fwd_ref(jnp.asarray(y), plan)
+    q0 = int(PRIMES[0])
+    prod_slots = mm.mul_mod_u64(np.asarray(fw)[0], np.asarray(fy)[0], q0)
+    prod = ntt_ref.ntt_inv_ref(
+        jnp.asarray(np.asarray(prod_slots, np.uint32)[None, :]), build_plan(n, PRIMES[:1])
+    )
+    expect = ntt_ref.negacyclic_mul_schoolbook(x[0], y[0], q0)
+    np.testing.assert_array_equal(np.asarray(prod)[0].astype(np.uint64), expect)
+
+
+@pytest.mark.parametrize("n", [1 << 11, 1 << 12, 1 << 13, 1 << 14, 1 << 15, 1 << 16])
+def test_kernel_matches_ref_sweep(n):
+    """Per-kernel shape sweep: Pallas four-step (interpret) vs uint64 oracle."""
+    rng = np.random.default_rng(n)
+    nl = 3 if n <= (1 << 13) else 2
+    plan = build_plan(n, PRIMES[:nl])
+    x = np.stack([rand_poly(rng, nl, n) for _ in range(2)])  # (B=2, L, N)
+    xk = jnp.asarray(x)
+    fw_k = ntt_ops.ntt_fwd(xk, plan, backend="kernel")
+    fw_r = ntt_ops.ntt_fwd(xk, plan, backend="ref")
+    np.testing.assert_array_equal(np.asarray(fw_k), np.asarray(fw_r))
+    inv_k = ntt_ops.ntt_inv(fw_k, plan, backend="kernel")
+    np.testing.assert_array_equal(np.asarray(inv_k), x)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), logn=st.sampled_from([8, 9, 10, 11]))
+def test_property_linearity_and_roundtrip(seed, logn):
+    """NTT is linear and invertible for random inputs (property-based)."""
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    plan = build_plan(n, PRIMES[:2])
+    a = rand_poly(rng, 2, n)
+    b = rand_poly(rng, 2, n)
+    qs = np.array(PRIMES[:2], np.uint64).reshape(2, 1)
+    fa = np.asarray(ntt_ref.ntt_fwd_ref(jnp.asarray(a), plan), np.uint64)
+    fb = np.asarray(ntt_ref.ntt_fwd_ref(jnp.asarray(b), plan), np.uint64)
+    s = ((a.astype(np.uint64) + b) % qs).astype(np.uint32)
+    fs = np.asarray(ntt_ref.ntt_fwd_ref(jnp.asarray(s), plan), np.uint64)
+    np.testing.assert_array_equal(fs, (fa + fb) % qs)
+    back = np.asarray(ntt_ref.ntt_inv_ref(jnp.asarray(fs.astype(np.uint32)), plan))
+    np.testing.assert_array_equal(back, s)
+
+
+@pytest.mark.parametrize("t", [3, 5, 25, -1])
+def test_galois_eval_perm_matches_coeff_map(t):
+    """Automorphism in eval domain (slot permutation) ≡ coefficient-domain map."""
+    n = 512
+    tt = t % (2 * n)
+    rng = np.random.default_rng(7)
+    plan = build_plan(n, PRIMES[:1])
+    q = int(PRIMES[0])
+    a = rand_poly(rng, 1, n)
+    # coefficient domain automorphism
+    dst, neg = galois_coeff_map(n, tt)
+    sa = np.zeros_like(a)
+    vals = np.where(neg == 1, (q - a[0].astype(np.int64)) % q, a[0].astype(np.int64))
+    sa[0, dst] = vals.astype(np.uint32)
+    f_sa = np.asarray(ntt_ref.ntt_fwd_ref(jnp.asarray(sa), plan))
+    # eval domain permutation
+    fa = np.asarray(ntt_ref.ntt_fwd_ref(jnp.asarray(a), plan))
+    perm = galois_eval_perm(n, tt)
+    np.testing.assert_array_equal(f_sa[0], fa[0][perm])
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

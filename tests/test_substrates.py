@@ -1,0 +1,204 @@
+"""training / data / checkpoint / serving substrate tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.checkpoint import failures, manager
+from repro.data import pipeline
+from repro.models import registry
+from repro.serving.engine import Engine, SamplerConfig
+from repro.training import compress, optimizer as opt, train_step as ts
+
+
+# --- optimizer ---------------------------------------------------------------
+
+
+def test_adamw_reduces_loss():
+    cfg = configs.get_config("smollm-135m", smoke=True)
+    api = registry.build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    acfg = opt.AdamWConfig(lr_peak=3e-3, warmup_steps=5, total_steps=40)
+    state = opt.init_state(params)
+    corpus = pipeline.ByteCorpus(vocab=cfg.vocab)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: api.train_loss(p, tokens=batch))(params)
+        params, state, gn = opt.apply_updates(acfg, params, grads, state)
+        return params, state, loss
+
+    losses = []
+    for i in range(30):
+        batch = jnp.asarray(corpus.batch(seed=1, step=i, batch=8, seq=32))
+        params, state, loss = step(params, state, batch)
+        losses.append(float(loss))
+    assert all(np.isfinite(losses))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5, losses[:3] + losses[-3:]
+
+
+def test_lr_schedule():
+    acfg = opt.AdamWConfig(lr_peak=1e-3, warmup_steps=10, total_steps=100)
+    assert float(opt.lr_at(acfg, 0)) < float(opt.lr_at(acfg, 9))
+    assert float(opt.lr_at(acfg, 10)) == pytest.approx(1e-3, rel=0.01)
+    assert float(opt.lr_at(acfg, 99)) < 1e-4
+
+
+def test_grad_accumulation_equivalence():
+    """microbatched gradients == full-batch gradients (linearity of mean)."""
+    cfg = configs.get_config("smollm-135m", smoke=True)
+    api = registry.build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    acfg = opt.AdamWConfig()
+    tokens = jnp.asarray(pipeline.synthetic_lm_batch(0, 0, 8, 32, cfg.vocab))
+    st1 = ts.build_train_step(api, mesh, acfg, microbatch=0)
+    st4 = ts.build_train_step(api, mesh, acfg, microbatch=4)
+    state = opt.init_state(params)
+    p1, _, m1 = jax.jit(st1)(params, state, {"tokens": tokens})
+    p4, _, m4 = jax.jit(st4)(params, state, {"tokens": tokens})
+    # losses match; updated weights match to accumulation-order tolerance
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 2e-2
+    d = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), p1, p4)
+    assert max(jax.tree.leaves(d)) < 5e-3
+
+
+# --- gradient compression ----------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4000), st.floats(0.01, 100.0))
+def test_quantize_roundtrip_property(n, scale_mag):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(scale=scale_mag, size=(n,)), jnp.float32)
+    q, s = compress.quantize(x)
+    back = compress.dequantize(q, s, x.shape, x.dtype)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    # per-block bound: half a quantisation step of that block's absmax
+    blocks = np.asarray(compress._blocked(x))
+    bound = np.repeat(np.abs(blocks).max(1) / 127.0, compress.BLOCK)[: n] * 0.5 + 1e-12
+    assert (err <= bound + 1e-7).all()
+
+
+def test_compressed_psum_multiprocess_math():
+    """Shared-scale int8 psum equals the true mean within 1/127 per block."""
+    rng = np.random.default_rng(3)
+    pods = 4
+    gs = [rng.normal(size=(1000,)).astype(np.float32) for _ in range(pods)]
+    true_mean = np.mean(gs, axis=0)
+    # emulate the protocol without a mesh
+    blocks = [np.asarray(compress._blocked(jnp.asarray(g))) for g in gs]
+    shared = np.max([np.abs(b).max(1) for b in blocks], axis=0) / 127.0
+    qs = [np.asarray(compress.quantize(jnp.asarray(g), jnp.asarray(shared))[0],
+                     dtype=np.int32) for g in gs]
+    q_sum = np.sum(qs, axis=0, dtype=np.int64)
+    approx = np.asarray(compress.dequantize(
+        jnp.asarray(q_sum / pods, jnp.float32), jnp.asarray(shared),
+        (1000,), jnp.float32))
+    assert np.abs(approx - true_mean).max() <= shared.max() * 0.51 + 1e-7
+    assert compress.compression_ratio((1000,)) > 3.5
+
+
+# --- data pipeline -----------------------------------------------------------
+
+
+def test_pipeline_determinism_and_shards():
+    a = pipeline.synthetic_lm_batch(1, 5, 16, 32, 1000, shard=0, n_shards=4)
+    b = pipeline.synthetic_lm_batch(1, 5, 16, 32, 1000, shard=0, n_shards=4)
+    np.testing.assert_array_equal(a, b)  # recomputable (straggler mitigation)
+    full = pipeline.synthetic_lm_batch(1, 5, 16, 32, 1000)
+    shards = [pipeline.synthetic_lm_batch(1, 5, 16, 32, 1000, shard=i, n_shards=4)
+              for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate(shards), full)
+    c = pipeline.synthetic_lm_batch(1, 6, 16, 32, 1000)
+    assert not np.array_equal(full, c)  # different step ⇒ different data
+    assert full.min() >= 0 and full.max() < 1000
+
+
+# --- checkpointing -----------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_atomic(tmp_path):
+    tree = {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "nested": {"b": np.ones((2,), np.int32)}}
+    d = manager.save(str(tmp_path), 7, tree)
+    assert os.path.exists(os.path.join(d, "COMMIT"))
+    step, got = manager.restore(str(tmp_path))
+    assert step == 7
+    np.testing.assert_array_equal(got["a"], tree["a"])
+    np.testing.assert_array_equal(got["nested"]["b"], tree["nested"]["b"])
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    for s in (1, 2, 3, 4, 5):
+        manager.save(str(tmp_path), s, {"x": np.array([s])}, keep=3)
+    assert manager.latest_step(str(tmp_path)) == 5
+    steps = sorted(os.listdir(tmp_path))
+    assert len(steps) == 3  # retention
+
+
+def test_checkpoint_ignores_uncommitted(tmp_path):
+    manager.save(str(tmp_path), 1, {"x": np.array([1])})
+    # simulate a torn write: step dir without COMMIT
+    os.makedirs(tmp_path / "step_00000009")
+    assert manager.latest_step(str(tmp_path)) == 1
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Restore onto a different (1-device) sharding than the writer implied."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    tree = {"w": np.arange(64, dtype=np.float32).reshape(8, 8)}
+    manager.save(str(tmp_path), 3, tree)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    _, got = manager.restore(str(tmp_path), shardings=sh)
+    np.testing.assert_array_equal(np.asarray(got["w"]), tree["w"])
+    assert got["w"].sharding == sh["w"]
+
+
+# --- failure handling --------------------------------------------------------
+
+
+def test_heartbeat_failure_and_straggler_flow():
+    mon = failures.HeartbeatMonitor(4, deadline=10.0, strike_limit=2)
+    for h in range(4):
+        mon.beat(h, now=0.0, step_time=1.0)
+    mon.set_median_step_time(1.0)
+    # host 2 straggles twice → quarantine; host 3 goes silent → dead
+    for now in (1.0, 2.0):
+        for h in (0, 1):
+            mon.beat(h, now, step_time=1.0)
+        mon.beat(2, now, step_time=5.0)
+    rep = mon.check(now=10.5)  # hosts 0-2 beat at t=2 (alive); host 3 silent since 0
+    assert rep["dead"] == [3]
+    assert rep["quarantine"] == [2]
+    plan = failures.plan_restart(mon, latest_ckpt_step=42)
+    assert plan.restore_step == 42
+    assert 3 not in plan.mesh_hosts
+    # shard indices are contiguous over survivors (deterministic pipeline)
+    assert sorted(plan.new_shard_of_host.values()) == list(range(3))
+
+
+# --- serving engine ----------------------------------------------------------
+
+
+def test_engine_generates():
+    cfg = configs.get_config("smollm-135m", smoke=True)
+    api = registry.build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    eng = Engine(api, params, batch=2, max_seq=64)
+    prompts = np.asarray(pipeline.synthetic_lm_batch(0, 0, 2, 15, cfg.vocab))[:, :16]
+    out = eng.generate(prompts, n_tokens=8)
+    assert out.shape == (2, 8)
+    out2 = eng.generate(prompts, n_tokens=8)
+    np.testing.assert_array_equal(out, out2)  # greedy is deterministic
+    out3 = eng.generate(prompts, n_tokens=8, sampler=SamplerConfig(temperature=1.0, seed=1))
+    assert out3.shape == (2, 8)

@@ -1,0 +1,29 @@
+"""Regression: model training must be dtype-stable when repro.fhe (which
+enables x64) is imported first — the combined-framework configuration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.fhe  # noqa: F401  — enables x64, the trigger
+
+
+def test_params_and_grads_stay_f32_under_x64():
+    assert jax.config.read("jax_enable_x64")
+    from jax.sharding import Mesh
+
+    from repro import configs
+    from repro.data import pipeline
+    from repro.models import registry
+    from repro.training import optimizer as opt, train_step as ts
+
+    cfg = configs.get_config("smollm-135m", smoke=True)
+    api = registry.build(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    assert all(l.dtype == jnp.float32 for l in jax.tree.leaves(params))
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    tokens = jnp.asarray(pipeline.synthetic_lm_batch(0, 0, 8, 32, cfg.vocab))
+    step = ts.build_train_step(api, mesh, opt.AdamWConfig(), microbatch=4)
+    p, s, m = jax.jit(step)(params, opt.init_state(params), {"tokens": tokens})
+    assert m["loss"].dtype == jnp.float32
+    assert np.isfinite(float(m["loss"]))

@@ -6,7 +6,6 @@ dry-run artifacts.  Idempotent: replaces everything below the marker line.
 
 from __future__ import annotations
 
-import json
 
 from . import roofline_table as rt
 

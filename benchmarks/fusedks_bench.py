@@ -1,0 +1,97 @@
+"""Fused vs staged key-switch: dispatch counts, wall-clock, bit-exactness.
+
+The fusion claim is measured, not asserted: for each configuration we run the
+same `key_switch` through the fused pipeline (one `pallas_call` for the digit
+region + one for the ModDown tails) and the staged pipeline (one launch per
+stage per digit), and report
+
+  * kernel dispatches per call (the architectural win — intermediates that no
+    longer round-trip between launches),
+  * median wall-clock per call (meaningful on TPU; on CPU the fused kernel
+    runs in Pallas interpret mode, so dispatch counts are the honest metric
+    there),
+  * bit-exactness of the fused result against the staged u64 oracle.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fhe import keys as K
+from repro.fhe import keyswitch as KS
+from repro.fhe import params as P
+from repro.kernels import dispatch
+
+
+def _rand_eval(p, level, seed=3):
+    rng = np.random.default_rng(seed)
+    qs = np.array(p.q_primes[: level + 1], np.uint64)
+    d = rng.integers(0, 1 << 31, size=(level + 1, p.n)) % qs[:, None]
+    return jnp.asarray(d.astype(np.uint32))
+
+
+def _time_call(fn, iters: int) -> float:
+    """Median wall-clock seconds per call (after one warmup/compile call)."""
+    out = fn()
+    for arr in out:
+        arr.block_until_ready()
+    times = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        out = fn()
+        for arr in out:
+            arr.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def bench_key_switch(n: int, L: int, dnum: int, iters: int = 3, seed: int = 0) -> dict:
+    """One fused-vs-staged comparison; returns flat CSV-ready metrics."""
+    p = P.make_params(n, L, dnum, check_security=False)
+    sk = K.keygen(p, seed)
+    rlk = K.relin_keygen(p, sk)
+    level = p.L
+    d = _rand_eval(p, level, seed=seed + 1)
+
+    fused = KS.key_switch(d, p, level, rlk, backend="fused")
+    ref = KS.key_switch(d, p, level, rlk, backend="ref")
+    bitexact = int(
+        bool(jnp.array_equal(fused[0], ref[0])) and bool(jnp.array_equal(fused[1], ref[1]))
+    )
+
+    with dispatch.count_dispatches() as cf:
+        KS.key_switch(d, p, level, rlk, backend="fused")
+    with dispatch.count_dispatches() as cs:
+        KS.key_switch(d, p, level, rlk, backend="staged")
+    disp_fused, disp_staged = dispatch.total(cf), dispatch.total(cs)
+
+    t_fused = _time_call(lambda: KS.key_switch(d, p, level, rlk, backend="fused"), iters)
+    t_staged = _time_call(lambda: KS.key_switch(d, p, level, rlk, backend="staged"), iters)
+
+    return {
+        "n": n,
+        "L": L,
+        "dnum": dnum,
+        "beta": p.beta(level),
+        "bitexact": bitexact,
+        "dispatches_fused": disp_fused,
+        "dispatches_staged": disp_staged,
+        "dispatch_reduction": disp_staged / disp_fused,
+        "wall_ms_fused": t_fused * 1e3,
+        "wall_ms_staged": t_staged * 1e3,
+    }
+
+
+SMOKE_CONFIGS = [(1 << 9, 5, 2)]
+FULL_CONFIGS = [(1 << 9, 5, 2), (1 << 10, 8, 2), (1 << 10, 8, 3), (1 << 11, 11, 3)]
+
+
+def run(smoke: bool = False, iters: int = 3) -> dict[str, dict]:
+    configs = SMOKE_CONFIGS if smoke else FULL_CONFIGS
+    out = {}
+    for n, L, dnum in configs:
+        out[f"n{n}_L{L}_dnum{dnum}"] = bench_key_switch(n, L, dnum, iters=iters)
+    return out

@@ -1,82 +1,126 @@
 """Benchmark harness: one entry per paper table/figure + the roofline table.
 
-Prints ``name,value,derived`` CSV rows (derived=1 marks numbers reconstructed
+Emits ``name,value,derived`` CSV rows (derived=1 marks numbers reconstructed
 from the paper's reported ratios rather than simulated from architecture).
+
+  python -m benchmarks.run                 # full paper-figure suite + fused-KS bench
+  python -m benchmarks.run --smoke         # fast fused-vs-staged key-switch smoke
+  python -m benchmarks.run --out FILE.csv  # also write the rows to FILE.csv
 """
 
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
-from . import paper_figs, roofline_table
+from . import fusedks_bench
 
 
-def _emit(name: str, value, derived: int = 0):
-    if isinstance(value, float):
-        value = f"{value:.6g}"
-    print(f"{name},{value},{derived}")
+class _Emitter:
+    def __init__(self, out_path: str | None):
+        self._fh = open(out_path, "w") if out_path else None
+
+    def __call__(self, name: str, value, derived: int = 0):
+        if isinstance(value, float):
+            value = f"{value:.6g}"
+        row = f"{name},{value},{derived}"
+        print(row)
+        if self._fh:
+            self._fh.write(row + "\n")
+
+    def close(self):
+        if self._fh:
+            self._fh.close()
 
 
-def main() -> None:
-    t0 = time.time()
+def emit_fusedks(emit, smoke: bool, iters: int) -> None:
+    """Fused vs staged key-switch: the dispatch-count/wall-clock comparison."""
+    for cfg, row in fusedks_bench.run(smoke=smoke, iters=iters).items():
+        for key in (
+            "bitexact", "dispatches_fused", "dispatches_staged",
+            "dispatch_reduction", "wall_ms_fused", "wall_ms_staged",
+        ):
+            emit(f"fusedks.{cfg}.{key}", row[key])
+
+
+def emit_paper_figs(emit) -> None:
+    from . import paper_figs, roofline_table
 
     fig9 = paper_figs.fig9_single_workload()
-    _emit("fig9.deep_geomean_vs_craterlake", fig9["deep_geomean_vs_craterlake"])
-    _emit("fig9.deep_geomean_vs_f1plus", fig9["deep_geomean_vs_f1plus"])
+    emit("fig9.deep_geomean_vs_craterlake", fig9["deep_geomean_vs_craterlake"])
+    emit("fig9.deep_geomean_vs_f1plus", fig9["deep_geomean_vs_f1plus"])
     for w, row in fig9["rows"].items():
-        _emit(f"fig9.{w}.flash_fhe_ms", row["flash_fhe_ms"])
-        _emit(f"fig9.{w}.craterlake_over_ff", row["craterlake_over_ff"])
-        _emit(f"fig9.{w}.f1plus_over_ff", row["f1plus_over_ff"])
+        emit(f"fig9.{w}.flash_fhe_ms", row["flash_fhe_ms"])
+        emit(f"fig9.{w}.craterlake_over_ff", row["craterlake_over_ff"])
+        emit(f"fig9.{w}.f1plus_over_ff", row["f1plus_over_ff"])
 
     fig10 = paper_figs.fig10_7nm()
-    _emit("fig10.ff_logreg_ms", fig10["ff_logreg_ms"])
-    _emit("fig10.ff_resnet20_ms", fig10["ff_resnet20_ms"])
-    _emit("fig10.ark_logreg_ms", fig10["ark_logreg_ms_derived"], 1)
-    _emit("fig10.perf_per_area_vs_ark_logreg", fig10["perf_per_area_vs_ark_logreg"], 1)
+    emit("fig10.ff_logreg_ms", fig10["ff_logreg_ms"])
+    emit("fig10.ff_resnet20_ms", fig10["ff_resnet20_ms"])
+    emit("fig10.ark_logreg_ms", fig10["ark_logreg_ms_derived"], 1)
+    emit("fig10.perf_per_area_vs_ark_logreg", fig10["perf_per_area_vs_ark_logreg"], 1)
 
     fig11 = paper_figs.fig11_ntt_hmul()
-    _emit("fig11.ntt_ops_per_s", fig11["ntt_ops_per_s"])
-    _emit("fig11.hmul_ops_per_s", fig11["hmul_ops_per_s"])
-    _emit("fig11.tensorfhe_ntt_ops_per_s", fig11["tensorfhe_ntt_derived"], 1)
+    emit("fig11.ntt_ops_per_s", fig11["ntt_ops_per_s"])
+    emit("fig11.hmul_ops_per_s", fig11["hmul_ops_per_s"])
+    emit("fig11.tensorfhe_ntt_ops_per_s", fig11["tensorfhe_ntt_derived"], 1)
 
     fig12 = paper_figs.fig12_multi_shallow()
-    _emit("fig12.peak_multi_job_speedup", fig12["peak_speedup"])
+    emit("fig12.peak_multi_job_speedup", fig12["peak_speedup"])
     for k, v in fig12["per_job_count"].items():
-        _emit(f"fig12.jobs{k}.makespan_speedup", v["makespan_speedup"])
+        emit(f"fig12.jobs{k}.makespan_speedup", v["makespan_speedup"])
 
     fig8 = paper_figs.fig8_cache_sweep()
-    _emit("fig8.dnum1_saturates_at_320MB", int(fig8["dnum1_saturates_at_320MB"]))
+    emit("fig8.dnum1_saturates_at_320MB", int(fig8["dnum1_saturates_at_320MB"]))
     for dnum, curve in fig8["curves_ms"].items():
         for cap, ms in curve.items():
-            _emit(f"fig8.{dnum}.cache{cap}MB_ms", ms)
+            emit(f"fig8.{dnum}.cache{cap}MB_ms", ms)
 
     t3 = paper_figs.table3_area()
-    _emit("table3.total_14nm_mm2", t3["total_14nm_mm2"])
-    _emit("table3.swift_logic_fraction", t3["swift_logic_fraction"])
-    _emit("table3.claim_under_7pct", int(t3["claim_under_7pct"]))
+    emit("table3.total_14nm_mm2", t3["total_14nm_mm2"])
+    emit("table3.swift_logic_fraction", t3["swift_logic_fraction"])
+    emit("table3.claim_under_7pct", int(t3["claim_under_7pct"]))
 
     fig13 = paper_figs.fig13_power()
-    _emit("fig13.total_w", fig13["total_w"])
-    _emit("fig13.vs_craterlake", fig13["vs_craterlake"])
+    emit("fig13.total_w", fig13["total_w"])
+    emit("fig13.vs_craterlake", fig13["vs_craterlake"])
 
     pre = paper_figs.preemption_study()
-    _emit("preemption.shallow_turnaround_speedup", pre["shallow_avg_turnaround_speedup"])
+    emit("preemption.shallow_turnaround_speedup", pre["shallow_avg_turnaround_speedup"])
 
     perf = paper_figs.perf_beyond_paper()
     for w, row in perf.items():
-        _emit(f"perf.{w}.baseline_ms", row["baseline_ms"])
-        _emit(f"perf.{w}.optimized_ms", row["optimized_ms"])
-        _emit(f"perf.{w}.speedup", row["speedup"])
+        emit(f"perf.{w}.baseline_ms", row["baseline_ms"])
+        emit(f"perf.{w}.optimized_ms", row["optimized_ms"])
+        emit(f"perf.{w}.speedup", row["speedup"])
 
     rt = roofline_table.main()
-    _emit("roofline.cells_ok", rt["summary"]["ok"])
-    _emit("roofline.cells_skipped", rt["summary"]["skipped"])
-    _emit("roofline.cells_failed", rt["summary"]["failed"])
+    emit("roofline.cells_ok", rt["summary"]["ok"])
+    emit("roofline.cells_skipped", rt["summary"]["skipped"])
+    emit("roofline.cells_failed", rt["summary"]["failed"])
     for dom, n in rt["dominant_histogram"].items():
-        _emit(f"roofline.dominant.{dom}", n)
+        emit(f"roofline.dominant.{dom}", n)
 
-    _emit("bench.total_seconds", time.time() - t0)
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI pass: fused-vs-staged key-switch only, small ring")
+    ap.add_argument("--out", default=None, help="also write CSV rows to this file")
+    ap.add_argument("--iters", type=int, default=3, help="timing iterations per config")
+    args = ap.parse_args(argv)
+
+    emit = _Emitter(args.out)
+    t0 = time.time()
+    try:
+        emit_fusedks(emit, smoke=args.smoke, iters=args.iters)
+        if not args.smoke:
+            emit_paper_figs(emit)
+        emit("bench.total_seconds", time.time() - t0)
+    finally:
+        emit.close()
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -7,9 +7,6 @@ steps on byte-level text, checkpoint, restore, and generate.
 import argparse
 import tempfile
 
-import jax
-import numpy as np
-
 from repro import configs
 from repro.checkpoint import manager
 from repro.data import pipeline

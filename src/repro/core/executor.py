@@ -20,7 +20,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.fhe import keyswitch, ops
+from repro.fhe import ops
 from repro.fhe.keys import KeySet
 from repro.fhe.params import CkksParams
 

@@ -54,7 +54,19 @@ def I(op: str, n: int, limbs: int, **meta) -> Instr:
 # ---------------------------------------------------------------------------
 
 
-def key_switch(pp: PlanParams, level: int) -> list[Instr]:
+def _ws(n: int, limbs: int, fused: bool) -> list[Instr]:
+    """Stage-boundary working-set round-trip: only the staged pipeline pays it.
+
+    Mirrors ``repro.fhe.keyswitch``: a fused key-switch keeps every per-digit
+    intermediate in VMEM, while the staged dispatch train stores + reloads it
+    through HBM-equivalent buffers between kernel launches.
+    """
+    if fused:
+        return []
+    return [I("STORE_WS", n, limbs), I("LOAD_WS", n, limbs)]
+
+
+def key_switch(pp: PlanParams, level: int, fused: bool = True) -> list[Instr]:
     n = pp.n
     beta = pp.beta(level)
     nq = level + 1
@@ -63,14 +75,16 @@ def key_switch(pp: PlanParams, level: int) -> list[Instr]:
     out.append(I("INTT", n, nq))
     for j in range(beta):
         k = pp.digit_size(j, level)
-        out += [
-            I("PMULT", n, k),  # B̂⁻¹ prescale
-            I("BCONV", n, k, dst=ext),
-            I("NTT", n, ext),
-            I("PMULT", n, 2 * ext, mac=True),  # ksk MAC rides the NTT exit
-            I("PADD", n, 2 * ext, mac=True),   # when the chip fuses it
-        ]
-    out += mod_down(pp, level) * 2
+        out += [I("PMULT", n, k, fused=fused)]  # B̂⁻¹ prescale
+        out += _ws(n, k, fused)
+        out += [I("BCONV", n, k, dst=ext, fused=fused)]
+        out += _ws(n, ext, fused)
+        out += [I("NTT", n, ext, fused=fused)]
+        out += _ws(n, ext, fused)
+        out += [I("PMULT", n, 2 * ext, mac=True, fused=fused)]  # ksk MAC rides the NTT exit
+        out += _ws(n, 2 * ext, fused)
+        out += [I("PADD", n, 2 * ext, mac=True, fused=fused)]   # when the chip fuses it
+    out += mod_down(pp, level, fused) * 2
     return out
 
 
@@ -114,16 +128,19 @@ def hoisted_rotations(pp: PlanParams, level: int, n_rots: int,
     return out
 
 
-def mod_down(pp: PlanParams, level: int) -> list[Instr]:
+def mod_down(pp: PlanParams, level: int, fused: bool = True) -> list[Instr]:
     n, nq, a = pp.n, level + 1, pp.alpha
-    return [
-        I("INTT", n, a),
-        I("PMULT", n, a),  # P̂⁻¹ prescale
-        I("BCONV", n, a, dst=nq),
-        I("NTT", n, nq),
-        I("PSUB", n, nq, mac=True),   # post-NTT elementwise stage — rides the
-        I("PMULT", n, nq, mac=True),  # exit MACs on fused_exit_mac chips
-    ]
+    out = [I("INTT", n, a)]
+    out += [I("PMULT", n, a, fused=fused)]  # P̂⁻¹ prescale
+    out += _ws(n, a, fused)
+    out += [I("BCONV", n, a, dst=nq, fused=fused)]
+    out += _ws(n, nq, fused)
+    out += [I("NTT", n, nq, fused=fused)]
+    out += _ws(n, nq, fused)
+    out += [I("PSUB", n, nq, mac=True, fused=fused)]   # post-NTT elementwise stage — rides the
+    out += _ws(n, nq, fused)
+    out += [I("PMULT", n, nq, mac=True, fused=fused)]  # exit MACs on fused_exit_mac chips
+    return out
 
 
 def rescale(pp: PlanParams, level: int) -> list[Instr]:
@@ -133,10 +150,10 @@ def rescale(pp: PlanParams, level: int) -> list[Instr]:
     return one * 2  # c0 and c1
 
 
-def hmul(pp: PlanParams, level: int, rescale_after: bool = True) -> list[Instr]:
+def hmul(pp: PlanParams, level: int, rescale_after: bool = True, fused: bool = True) -> list[Instr]:
     n, nq = pp.n, level + 1
     out = [I("PMULT", n, 4 * nq), I("PADD", n, nq)]
-    out += key_switch(pp, level)
+    out += key_switch(pp, level, fused)
     out += [I("PADD", n, 2 * nq)]
     if rescale_after:
         out += rescale(pp, level)
@@ -158,11 +175,11 @@ def add_ct(pp: PlanParams, level: int) -> list[Instr]:
     return [I("PADD", pp.n, 2 * (level + 1))]
 
 
-def rotate(pp: PlanParams, level: int) -> list[Instr]:
+def rotate(pp: PlanParams, level: int, fused: bool = True) -> list[Instr]:
     n, nq = pp.n, level + 1
     return (
         [I("AUTO", n, nq), I("AUTO", n, nq)]
-        + key_switch(pp, level)
+        + key_switch(pp, level, fused)
         + [I("PADD", n, nq)]
     )
 

@@ -17,9 +17,8 @@ priority-then-arrival FIFO, no preemption.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 
-from .cache import LruCache, MB
+from .cache import MB
 from .hardware import ChipConfig
 from .jobs import FheJob
 from .planner import workload_stream

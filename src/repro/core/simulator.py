@@ -14,6 +14,13 @@ so job time ≈ max over unit totals (+HBM).  Without fusion (F1+) intermediates
 round-trip through memory: time ≈ sum of unit totals and every BCONV/NTT
 boundary adds HBM traffic — this is the ">10× slower than expected" F1+
 behaviour the paper cites.
+
+Captured *software* traces additionally carry explicit STORE_WS/LOAD_WS
+records when the staged key-switch dispatcher ran (one pair per stage
+boundary); each costs its working set through HBM regardless of the chip,
+because the round-trip happens between kernel launches.  Fused-pipeline
+traces (``repro.kernels.fusedks``) emit none — `tests/test_fusedks.py`
+validates this accounting against both captured streams.
 """
 
 from __future__ import annotations
@@ -160,6 +167,15 @@ def simulate_stream(
                 ksk_counter[key] = (idx + 1) % max(1, ins.meta.get("n_keys", 8))
                 key = f"{key}#{idx}"
             hbm_bytes += cache.access(key, nbytes)
+        elif ins.op in ("STORE_WS", "LOAD_WS"):
+            # staged-software dispatch boundary: the intermediate polynomial
+            # round-trips through HBM-equivalent buffers between kernel
+            # launches (the fused key-switch pipeline emits none of these).
+            # On chips WITHOUT a fused key-switch pipeline the NTT/BCONV
+            # branches above already charge the same round-trips implicitly,
+            # so the explicit records only bill fused-pipeline chips.
+            if chip.fused_keyswitch:
+                hbm_bytes += float(limbs) * n * wb
         elif ins.op == "TOUCH_WS":
             # key-switch working set vs on-chip capacity (Fig 8 mechanism):
             # whatever doesn't fit spills to HBM and returns

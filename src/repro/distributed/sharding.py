@@ -16,7 +16,6 @@ import contextlib
 import contextvars
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # Sharding policy (perf hillclimb knob):

@@ -23,7 +23,7 @@ import functools
 import numpy as np
 
 from . import encoder, linear, ops, poly, polyeval, trace
-from .keys import KeySet, SecretKey, full_keyset, galois_keygen
+from .keys import KeySet, full_keyset
 from .params import CkksParams
 
 
@@ -106,35 +106,38 @@ def _default_degree(K: int) -> int:
     return int(np.ceil(1.25 * c + 12))
 
 
-def mod_raise(ctx: BootstrapContext, ct: ops.Ciphertext) -> ops.Ciphertext:
+def mod_raise(ctx: BootstrapContext, ct: ops.Ciphertext, backend: str = "auto") -> ops.Ciphertext:
     """Level-0 ciphertext → top level; plaintext becomes m + q0·I."""
     params = ctx.params
     assert ct.level == 0, "mod_raise expects an exhausted (level-0) ciphertext"
     q0 = int(params.q_primes[0])
     L = params.L
     trace.record("MODRAISE", params.n, L + 1)
+    bk = ops._stage(backend)
 
     def raise_poly(c_eval):
-        c = poly.to_coeff(c_eval, params, (0,))  # (1, N) residues mod q0
+        c = poly.to_coeff(c_eval, params, (0,), bk)  # (1, N) residues mod q0
         v = np.asarray(c[0], np.uint64)
         centered = v.astype(np.int64) - np.where(v > q0 // 2, q0, 0)
         rns = poly.to_rns_signed(centered, params.q_primes)
-        return poly.to_eval(rns, params, poly.q_idx(params, L))
+        return poly.to_eval(rns, params, poly.q_idx(params, L), bk)
 
     return ops.Ciphertext(
         c0=raise_poly(ct.c0), c1=raise_poly(ct.c1), level=L, scale=ct.scale
     )
 
 
-def coeff_to_slot(ctx: BootstrapContext, ct: ops.Ciphertext) -> tuple[ops.Ciphertext, ops.Ciphertext]:
+def coeff_to_slot(ctx: BootstrapContext, ct: ops.Ciphertext,
+                  backend: str = "auto") -> tuple[ops.Ciphertext, ops.Ciphertext]:
     """Slots become the coefficient halves a0, a1 (each real)."""
     p, keys = ctx.params, ctx.keys
-    u0 = linear.apply_bsgs(p, ct, ctx.cts_plans[0], keys)
-    u1 = linear.apply_bsgs(p, ct, ctx.cts_plans[1], keys)
-    return linear.real_part(p, u0, keys), linear.real_part(p, u1, keys)
+    u0 = linear.apply_bsgs(p, ct, ctx.cts_plans[0], keys, backend=backend)
+    u1 = linear.apply_bsgs(p, ct, ctx.cts_plans[1], keys, backend=backend)
+    return linear.real_part(p, u0, keys, backend), linear.real_part(p, u1, keys, backend)
 
 
-def eval_mod(ctx: BootstrapContext, ct: ops.Ciphertext, coeff_scale: float) -> ops.Ciphertext:
+def eval_mod(ctx: BootstrapContext, ct: ops.Ciphertext, coeff_scale: float,
+             backend: str = "auto") -> ops.Ciphertext:
     """Remove the q0·I component: slot values v = a/coeff_scale → (q0/Δ)·sin(2π·a/q0)/(2π) ≈ m/Δ.
 
     ``coeff_scale`` is the ModRaise'd ciphertext's scale — the factor relating
@@ -146,37 +149,41 @@ def eval_mod(ctx: BootstrapContext, ct: ops.Ciphertext, coeff_scale: float) -> o
     norm = coeff_scale / ((ctx.K + 0.5) * q0)  # v·norm = a/((K+½)·q0) ∈ [-1, 1]
     # exact-scale normalisation: seeds the Chebyshev tree at scale Δ so the
     # multiplicative scale-doubling dynamics stay bounded
-    x = ops.mul_const_exact(p, ct, norm, p.scale)
-    basis = polyeval.ChebyshevBasis(p, x, keys, ctx.eval_mod_degree)
-    return polyeval.eval_chebyshev(p, basis, ctx.sine_coeffs, keys)
+    x = ops.mul_const_exact(p, ct, norm, p.scale, backend)
+    basis = polyeval.ChebyshevBasis(p, x, keys, ctx.eval_mod_degree, backend)
+    return polyeval.eval_chebyshev(p, basis, ctx.sine_coeffs, keys, backend)
 
 
-def slot_to_coeff(ctx: BootstrapContext, a0: ops.Ciphertext, a1: ops.Ciphertext) -> ops.Ciphertext:
+def slot_to_coeff(ctx: BootstrapContext, a0: ops.Ciphertext, a1: ops.Ciphertext,
+                  backend: str = "auto") -> ops.Ciphertext:
     p, keys = ctx.params, ctx.keys
-    v0 = linear.apply_bsgs(p, a0, ctx.stc_plans[0], keys)
-    v1 = linear.apply_bsgs(p, a1, ctx.stc_plans[1], keys)
-    return polyeval.add_any(p, v0, v1)
+    v0 = linear.apply_bsgs(p, a0, ctx.stc_plans[0], keys, backend=backend)
+    v1 = linear.apply_bsgs(p, a1, ctx.stc_plans[1], keys, backend=backend)
+    return polyeval.add_any(p, v0, v1, backend)
 
 
 def bootstrap(
-    ctx: BootstrapContext, ct: ops.Ciphertext, post_scale: float | None = None
+    ctx: BootstrapContext, ct: ops.Ciphertext, post_scale: float | None = None,
+    backend: str = "auto",
 ) -> ops.Ciphertext:
     """Refresh an exhausted ciphertext to level L − depth.
 
     ``post_scale``: uniform-prime adaptation (DESIGN.md §6) — with 30-bit q0 ≈ Δ
     the message must enter bootstrapping attenuated (|m| ≪ q0); the caller
     divides before exhaustion and passes the same factor here to restore it.
+    ``backend`` selects the key-switch pipeline for every rotation/relin inside
+    (see ``keyswitch.resolve_pipeline``).
     """
     trace.record("BOOTSTRAP_BEGIN", ctx.params.n, ctx.params.L + 1)
     in_scale = ct.scale
-    raised = mod_raise(ctx, ct)
-    a0, a1 = coeff_to_slot(ctx, raised)
-    m0 = eval_mod(ctx, a0, raised.scale)
-    m1 = eval_mod(ctx, a1, raised.scale)
-    out = slot_to_coeff(ctx, m0, m1)
+    raised = mod_raise(ctx, ct, backend)
+    a0, a1 = coeff_to_slot(ctx, raised, backend)
+    m0 = eval_mod(ctx, a0, raised.scale, backend)
+    m1 = eval_mod(ctx, a1, raised.scale, backend)
+    out = slot_to_coeff(ctx, m0, m1, backend)
     # amplitude bookkeeping: the sine was fitted for input scale = params.scale
     out = ops.Ciphertext(out.c0, out.c1, out.level, out.scale * in_scale / ctx.params.scale)
     if post_scale is not None:
-        out = ops.mul_const(ctx.params, out, float(post_scale), rescale_after=True)
+        out = ops.mul_const(ctx.params, out, float(post_scale), rescale_after=True, backend=backend)
     trace.record("BOOTSTRAP_END", ctx.params.n, out.level + 1)
     return out

@@ -10,6 +10,24 @@ basis q_0..q_ℓ) multiplied by s' into a pair under s:
     4. accumulate  Σ_j  d̂_j ∘ ksk_j                       (MAC stage)
     5. ModDown by P: INTT(P limbs) → BConv P→Q → NTT → subtract, ×[P^{-1}]_q
 
+Two pipeline shapes execute the same math:
+
+  * **fused** — stages 2–4 run as ONE `pallas_call` per key-switch (and one
+    more for the ModDown tails of both accumulators) via
+    ``repro.kernels.fusedks``; intermediates stay in VMEM, and the trace
+    carries the fused per-stage records with no working-set boundaries.
+    This is FLASH-FHE's fused key-switch datapath.
+  * **staged** — one kernel launch per stage per digit (the F1+-style
+    software pipeline); every stage boundary emits STORE_WS/LOAD_WS trace
+    records because the intermediate polynomial round-trips through
+    HBM-equivalent buffers between launches.
+
+``backend`` selects both the pipeline and the stage numerics:
+  "fused"/"kernel" → fused Pallas pipeline (interpret off-TPU);
+  "staged"         → staged pipeline, per-stage auto backends;
+  "ref"            → staged pipeline, u64 oracle stages (jit-traceable);
+  "auto"           → fused on TPU, staged-ref elsewhere (CPU tests stay fast).
+
 Every stage records trace instructions; this function *is* the workload the
 bootstrappable clusters are shaped around.
 """
@@ -18,15 +36,41 @@ from __future__ import annotations
 
 import functools
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.bconv import ops as bconv_ops
+from repro.kernels.fusedks import ops as fused_ops
 from repro.kernels.modops import ops as mo
+from repro.kernels.ntt import ops as ntt_ops
 
 from . import poly, rns, trace
 from .keys import SwitchingKey
 from .params import CkksParams
+
+
+def resolve_pipeline(backend: str) -> tuple[str, str]:
+    """Map a backend choice to (pipeline, stage_backend)."""
+    if backend == "fused":
+        return "fused", "auto"
+    if backend == "kernel":
+        return "fused", "kernel"
+    if backend == "staged":
+        return "staged", "auto"
+    if backend == "ref":
+        return "staged", "ref"
+    if backend == "auto":
+        if jax.default_backend() == "tpu":
+            return "fused", "auto"
+        return "staged", "ref"
+    raise ValueError(f"unknown key-switch backend {backend!r}")
+
+
+def _boundary(n: int, limbs: int) -> None:
+    """A staged-dispatch boundary: the intermediate round-trips through memory."""
+    trace.record("STORE_WS", n, limbs)
+    trace.record("LOAD_WS", n, limbs)
 
 
 @functools.lru_cache(maxsize=2048)
@@ -45,9 +89,7 @@ def _moddown_tables(params: CkksParams, level: int):
     p_primes = poly.primes_for(params, poly.p_idx(params))
     q_primes = poly.primes_for(params, poly.q_idx(params, level))
     bhat_inv, w = rns.bconv_tables(p_primes, q_primes)
-    P = 1
-    for p in p_primes:
-        P *= int(p)
+    P = rns.product(p_primes)
     pinv = np.array([pow(P % int(q), -1, int(q)) for q in q_primes], np.uint64)
     return jnp.asarray(bhat_inv), jnp.asarray(w), np.array(q_primes, np.uint64), jnp.asarray(
         pinv[:, None].astype(np.uint32)
@@ -58,59 +100,130 @@ def _scale_limbs(x, consts, qs, backend):
     """x ∘ diag(consts) per limb — consts: (k,) broadcast over N."""
     trace.record("PMULT", x.shape[-1], x.shape[-2])
     c = jnp.broadcast_to(jnp.asarray(consts, jnp.uint32)[:, None], x.shape)
-    return mo.pointwise_mulmod(x, c, qs, backend="ref" if backend == "ref" else backend)
+    return mo.pointwise_mulmod(x, c, qs, backend=backend)
+
+
+def _select_ksk(ksk: SwitchingKey, params: CkksParams, level: int, beta: int):
+    """(β, 2, |ext|, N): key limbs restricted to active + special moduli."""
+    return jnp.concatenate(
+        [ksk.k[:, :, : level + 1], ksk.k[:, :, params.L + 1 :]], axis=2
+    )[:beta]
+
+
+def _record_fused_digits(params: CkksParams, level: int) -> None:
+    """Trace the fused per-digit pipeline (planner `key_switch(fused=True)`)."""
+    n = params.n
+    m = len(poly.ext_idx(params, level))
+    for j in range(params.beta(level)):
+        k = len(tuple(i for i in params.digit(j) if i <= level))
+        trace.record("PMULT", n, k, fused=True)
+        trace.record("BCONV", n, k, dst=m, fused=True)
+        trace.record("NTT", n, m, fused=True)
+        trace.record("PMULT", n, 2 * m, mac=True, fused=True)
+        trace.record("PADD", n, 2 * m, mac=True, fused=True)
+
+
+def _record_fused_moddown(params: CkksParams, level: int) -> None:
+    n, nq, a = params.n, level + 1, params.alpha
+    trace.record("INTT", n, a)
+    trace.record("PMULT", n, a, fused=True)
+    trace.record("BCONV", n, a, dst=nq, fused=True)
+    trace.record("NTT", n, nq, fused=True)
+    trace.record("PSUB", n, nq, mac=True, fused=True)
+    trace.record("PMULT", n, nq, mac=True, fused=True)
 
 
 def mod_down(acc_ext, params: CkksParams, level: int, backend: str = "auto"):
-    """Extended-basis eval-domain poly → q-basis, divided (rounded) by P."""
+    """Extended-basis eval-domain poly → q-basis, divided (rounded) by P.
+
+    Staged pipeline for one accumulator; the fused path batches both
+    accumulators through ``mod_down_pair`` instead.
+    """
+    _, stage = resolve_pipeline(backend)
+    n = params.n
     nq = level + 1
+    alpha = params.alpha
     q_part, p_part = acc_ext[:nq], acc_ext[nq:]
     bhat_inv, w, q_np, pinv = _moddown_tables(params, level)
     p_np = np.array(poly.primes_for(params, poly.p_idx(params)), np.uint64)
 
-    p_coeff = poly.to_coeff(p_part, params, poly.p_idx(params), backend)
-    xhat = _scale_limbs(p_coeff, bhat_inv, p_np, backend)
-    trace.record("BCONV", params.n, len(p_np), dst=nq)
-    conv = bconv_ops.bconv(xhat, w, q_np, backend="ref" if backend == "ref" else "auto")
-    conv_eval = poly.to_eval(conv, params, poly.q_idx(params, level), backend)
-
-    trace.record("PSUB", params.n, nq)
-    diff = mo.pointwise_submod(q_part, conv_eval, q_np, backend="ref")
-    trace.record("PMULT", params.n, nq)
+    p_coeff = poly.to_coeff(p_part, params, poly.p_idx(params), stage)
+    xhat = _scale_limbs(p_coeff, bhat_inv, p_np, stage)
+    _boundary(n, alpha)
+    trace.record("BCONV", n, alpha, dst=nq)
+    conv = bconv_ops.bconv(xhat, w, q_np, backend=stage)
+    _boundary(n, nq)
+    conv_eval = poly.to_eval(conv, params, poly.q_idx(params, level), stage)
+    _boundary(n, nq)
+    trace.record("PSUB", n, nq, mac=True)
+    diff = mo.pointwise_submod(q_part, conv_eval, q_np, backend=stage)
+    _boundary(n, nq)
+    trace.record("PMULT", n, nq, mac=True)
     pinv_b = jnp.broadcast_to(pinv, diff.shape)
-    return mo.pointwise_mulmod(diff, pinv_b, q_np, backend="ref")
+    return mo.pointwise_mulmod(diff, pinv_b, q_np, backend=stage)
+
+
+def mod_down_pair(acc0, acc1, params: CkksParams, level: int, backend: str = "auto"):
+    """ModDown both MAC accumulators; fused path shares one kernel launch."""
+    pipeline, stage = resolve_pipeline(backend)
+    if pipeline != "fused":
+        return (
+            mod_down(acc0, params, level, backend),
+            mod_down(acc1, params, level, backend),
+        )
+    nq = level + 1
+    _record_fused_moddown(params, level)
+    _record_fused_moddown(params, level)
+    p_part = jnp.stack([acc0[nq:], acc1[nq:]])
+    plan = poly.plan_for(params, poly.p_idx(params))
+    p_coeff = ntt_ops.ntt_inv(p_part, plan, stage)
+    q_part = jnp.stack([acc0[:nq], acc1[:nq]])
+    out = fused_ops.mod_down_digits(p_coeff, q_part, params, level, backend="kernel")
+    return out[0], out[1]
 
 
 def key_switch(d_eval, params: CkksParams, level: int, ksk: SwitchingKey, backend: str = "auto"):
     """d (eval, basis q_0..q_ℓ) ⊗ s' → (ks0, ks1) eval over q_0..q_ℓ under s."""
+    pipeline, stage = resolve_pipeline(backend)
     n = params.n
     beta = params.beta(level)
     ext = poly.ext_idx(params, level)
     ext_primes = np.array(poly.primes_for(params, ext), np.uint64)
-    nq = level + 1
+    m = len(ext)
 
-    trace.record("LOAD_KSK", n, beta * 2 * len(ext))
-    d_coeff = poly.to_coeff(d_eval, params, poly.q_idx(params, level), backend)
+    trace.record("LOAD_KSK", n, beta * 2 * m)
+    d_coeff = poly.to_coeff(d_eval, params, poly.q_idx(params, level), stage)
+    ksk_sel = _select_ksk(ksk, params, level, beta)
 
-    acc0 = jnp.zeros((len(ext), n), jnp.uint32)
-    acc1 = jnp.zeros((len(ext), n), jnp.uint32)
-    ksk_sel = jnp.concatenate(
-        [ksk.k[:, :, : level + 1], ksk.k[:, :, params.L + 1 :]], axis=2
-    )  # (dnum, 2, |ext|, N) restricted to active + special limbs
+    if pipeline == "fused":
+        # stages 2–4 for all β digits and both key components: ONE launch
+        _record_fused_digits(params, level)
+        acc0, acc1 = fused_ops.key_switch_digits(
+            d_coeff, ksk_sel, params, level, backend="kernel"
+        )
+        return mod_down_pair(acc0, acc1, params, level, backend)
+
+    acc0 = jnp.zeros((m, n), jnp.uint32)
+    acc1 = jnp.zeros((m, n), jnp.uint32)
     for j in range(beta):
         digit_idx, bhat_inv, w, dst = _digit_tables(params, level, j)
+        k = len(digit_idx)
         src_np = np.array(poly.primes_for(params, digit_idx), np.uint64)
         dj = d_coeff[digit_idx[0] : digit_idx[-1] + 1]
-        xhat = _scale_limbs(dj, bhat_inv, src_np, backend)
-        trace.record("BCONV", n, len(digit_idx), dst=len(ext))
-        dj_ext = bconv_ops.bconv(xhat, w, dst, backend="ref" if backend == "ref" else "auto")
-        dj_eval = poly.to_eval(dj_ext, params, ext, backend)
-        trace.record("PMULT", n, 2 * len(ext))
-        t0 = mo.pointwise_mulmod(dj_eval, ksk_sel[j, 0], ext_primes, backend="ref")
-        t1 = mo.pointwise_mulmod(dj_eval, ksk_sel[j, 1], ext_primes, backend="ref")
-        trace.record("PADD", n, 2 * len(ext))
-        acc0 = mo.pointwise_addmod(acc0, t0, ext_primes, backend="ref")
-        acc1 = mo.pointwise_addmod(acc1, t1, ext_primes, backend="ref")
+        xhat = _scale_limbs(dj, bhat_inv, src_np, stage)
+        _boundary(n, k)
+        trace.record("BCONV", n, k, dst=m)
+        dj_ext = bconv_ops.bconv(xhat, w, dst, backend=stage)
+        _boundary(n, m)
+        dj_eval = poly.to_eval(dj_ext, params, ext, stage)
+        _boundary(n, m)
+        trace.record("PMULT", n, 2 * m, mac=True)
+        t0 = mo.pointwise_mulmod(dj_eval, ksk_sel[j, 0], ext_primes, backend=stage)
+        t1 = mo.pointwise_mulmod(dj_eval, ksk_sel[j, 1], ext_primes, backend=stage)
+        _boundary(n, 2 * m)
+        trace.record("PADD", n, 2 * m, mac=True)
+        acc0 = mo.pointwise_addmod(acc0, t0, ext_primes, backend=stage)
+        acc1 = mo.pointwise_addmod(acc1, t1, ext_primes, backend=stage)
 
     ks0 = mod_down(acc0, params, level, backend)
     ks1 = mod_down(acc1, params, level, backend)

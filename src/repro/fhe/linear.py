@@ -15,7 +15,7 @@ import math
 
 import numpy as np
 
-from . import ops, polyeval
+from . import ops
 from .keys import KeySet
 from .params import CkksParams
 
@@ -59,6 +59,7 @@ def apply_bsgs(
     plan: BsgsPlan,
     keys: KeySet,
     scale: float | None = None,
+    backend: str = "auto",
 ) -> ops.Ciphertext:
     """Homomorphic M·v.  Consumes one level (single rescale at the end)."""
     n = params.slots
@@ -69,7 +70,7 @@ def apply_bsgs(
     needed_b = sorted({d % plan.n1 for d in plan.diags})
     for b in needed_b:
         if b and b not in babies:
-            babies[b] = ops.rotate(params, ct, b, keys)
+            babies[b] = ops.rotate(params, ct, b, keys, backend)
 
     by_giant: dict[int, list[int]] = {}
     for d in plan.diags:
@@ -81,14 +82,14 @@ def apply_bsgs(
         for d in ds:
             b = d % plan.n1
             u = np.roll(plan.diags[d], g * plan.n1)  # pre-rotate the diagonal
-            pt = ops.encode(params, u, level=lv, scale=scale)
-            term = ops.mul_plain(params, babies[b], pt, rescale_after=False)
-            acc = term if acc is None else ops.add(params, acc, term)
+            pt = ops.encode(params, u, level=lv, scale=scale, backend=backend)
+            term = ops.mul_plain(params, babies[b], pt, rescale_after=False, backend=backend)
+            acc = term if acc is None else ops.add(params, acc, term, backend)
         if g:
-            acc = ops.rotate(params, acc, g * plan.n1, keys)
-        total = acc if total is None else ops.add(params, total, acc)
+            acc = ops.rotate(params, acc, g * plan.n1, keys, backend)
+        total = acc if total is None else ops.add(params, total, acc, backend)
 
-    return ops.rescale(params, total)
+    return ops.rescale(params, total, backend)
 
 
 def apply_bsgs_pair(
@@ -97,23 +98,26 @@ def apply_bsgs_pair(
     plans: tuple[BsgsPlan, BsgsPlan],
     keys: KeySet,
     scale: float | None = None,
+    backend: str = "auto",
 ) -> tuple[ops.Ciphertext, ops.Ciphertext]:
     """Two transforms of the same input sharing the baby rotations."""
     # (simple composition; baby-step sharing is an optimisation the scheduler
     # models — numerically we just apply twice)
     return (
-        apply_bsgs(params, ct, plans[0], keys, scale),
-        apply_bsgs(params, ct, plans[1], keys, scale),
+        apply_bsgs(params, ct, plans[0], keys, scale, backend),
+        apply_bsgs(params, ct, plans[1], keys, scale, backend),
     )
 
 
-def real_part(params: CkksParams, ct: ops.Ciphertext, keys: KeySet) -> ops.Ciphertext:
+def real_part(params: CkksParams, ct: ops.Ciphertext, keys: KeySet,
+              backend: str = "auto") -> ops.Ciphertext:
     """(ct + conj(ct)) / 2 — scale the ½ into the bookkeeping (free)."""
-    s = ops.add(params, ct, ops.conjugate(params, ct, keys))
+    s = ops.add(params, ct, ops.conjugate(params, ct, keys, backend), backend)
     return ops.Ciphertext(s.c0, s.c1, s.level, s.scale * 2.0)
 
 
-def imag_part(params: CkksParams, ct: ops.Ciphertext, keys: KeySet) -> ops.Ciphertext:
+def imag_part(params: CkksParams, ct: ops.Ciphertext, keys: KeySet,
+              backend: str = "auto") -> ops.Ciphertext:
     """(ct − conj(ct)) / 2i — fold 1/(2i) into a plaintext mul."""
-    d = ops.sub(params, ct, ops.conjugate(params, ct, keys))
-    return ops.mul_const(params, d, -0.5j, rescale_after=True)
+    d = ops.sub(params, ct, ops.conjugate(params, ct, keys, backend), backend)
+    return ops.mul_const(params, d, -0.5j, rescale_after=True, backend=backend)

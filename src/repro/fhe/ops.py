@@ -4,6 +4,10 @@ Ciphertexts are pairs of (level+1, N) uint32 eval-domain polynomials with a
 tracked floating-point scale (Lattigo-style scale management).  All heavy ops
 dispatch through the kernel wrappers (Pallas on TPU, u64 oracle elsewhere) and
 record trace instructions for the core scheduler/simulator.
+
+Every op takes a ``backend`` choice and threads it through to the kernel layer
+("auto" = Pallas kernels on TPU, u64 oracle elsewhere); key-switching ops
+additionally understand "fused"/"staged"/"ref" — see ``keyswitch``.
 """
 
 from __future__ import annotations
@@ -43,68 +47,80 @@ def _qs(params: CkksParams, level: int) -> np.ndarray:
     return np.array(params.q_primes[: level + 1], np.uint64)
 
 
+def _stage(backend: str) -> str:
+    """Pointwise-stage backend for an op-level backend choice."""
+    _, stage = keyswitch.resolve_pipeline(backend)
+    return stage
+
+
 # ---------------------------------------------------------------------------
 # encode / encrypt / decrypt
 # ---------------------------------------------------------------------------
 
 
-def encode(params: CkksParams, z, level: int | None = None, scale: float | None = None) -> Plaintext:
+def encode(params: CkksParams, z, level: int | None = None, scale: float | None = None,
+           backend: str = "auto") -> Plaintext:
     level = params.L if level is None else level
     scale = params.scale if scale is None else scale
     primes = params.q_primes[: level + 1]
     coeffs = encoder.encode(np.asarray(z), params.n, scale, primes)
-    data = poly.to_eval(coeffs, params, poly.q_idx(params, level))
+    data = poly.to_eval(coeffs, params, poly.q_idx(params, level), _stage(backend))
     return Plaintext(data=data, level=level, scale=scale)
 
 
-def encode_const(params: CkksParams, c, level: int, scale: float) -> Plaintext:
+def encode_const(params: CkksParams, c, level: int, scale: float,
+                 backend: str = "auto") -> Plaintext:
     primes = params.q_primes[: level + 1]
     coeffs = encoder.encode_const(c, params.n, scale, primes)
-    data = poly.to_eval(coeffs, params, poly.q_idx(params, level))
+    data = poly.to_eval(coeffs, params, poly.q_idx(params, level), _stage(backend))
     return Plaintext(data=data, level=level, scale=scale)
 
 
-def decode(params: CkksParams, pt: Plaintext) -> np.ndarray:
-    coeffs = poly.to_coeff(pt.data, params, poly.q_idx(params, pt.level))
+def decode(params: CkksParams, pt: Plaintext, backend: str = "auto") -> np.ndarray:
+    coeffs = poly.to_coeff(pt.data, params, poly.q_idx(params, pt.level), _stage(backend))
     limbs = min(pt.level + 1, 4)
     return encoder.decode(np.asarray(coeffs), params.q_primes[: pt.level + 1], pt.scale, max_limbs=limbs)
 
 
-def encrypt(params: CkksParams, pk: PublicKey, pt: Plaintext, seed: int = 17) -> Ciphertext:
+def encrypt(params: CkksParams, pk: PublicKey, pt: Plaintext, seed: int = 17,
+            backend: str = "auto") -> Ciphertext:
     rng = np.random.default_rng(seed)
     level = pt.level
     idx = poly.q_idx(params, level)
     qs = _qs(params, level)
+    bk = _stage(backend)
     v = poly.to_eval(
         poly.to_rns_signed(poly.sample_ternary(rng, params.n, params.n // 2), params.q_primes[: level + 1]),
-        params, idx,
+        params, idx, bk,
     )
     e0 = poly.to_eval(
-        poly.to_rns_signed(poly.sample_gaussian(rng, params.n), params.q_primes[: level + 1]), params, idx
+        poly.to_rns_signed(poly.sample_gaussian(rng, params.n), params.q_primes[: level + 1]), params, idx, bk
     )
     e1 = poly.to_eval(
-        poly.to_rns_signed(poly.sample_gaussian(rng, params.n), params.q_primes[: level + 1]), params, idx
+        poly.to_rns_signed(poly.sample_gaussian(rng, params.n), params.q_primes[: level + 1]), params, idx, bk
     )
     trace.record("PMULT", params.n, 2 * (level + 1))
     c0 = mo.pointwise_addmod(
-        mo.pointwise_addmod(mo.pointwise_mulmod(v, pk.b[: level + 1], qs, backend="ref"), e0, qs, backend="ref"),
-        pt.data, qs, backend="ref",
+        mo.pointwise_addmod(mo.pointwise_mulmod(v, pk.b[: level + 1], qs, backend=bk), e0, qs, backend=bk),
+        pt.data, qs, backend=bk,
     )
-    c1 = mo.pointwise_addmod(mo.pointwise_mulmod(v, pk.a[: level + 1], qs, backend="ref"), e1, qs, backend="ref")
+    c1 = mo.pointwise_addmod(mo.pointwise_mulmod(v, pk.a[: level + 1], qs, backend=bk), e1, qs, backend=bk)
     return Ciphertext(c0=c0, c1=c1, level=level, scale=pt.scale)
 
 
-def decrypt(params: CkksParams, sk: SecretKey, ct: Ciphertext) -> Plaintext:
+def decrypt(params: CkksParams, sk: SecretKey, ct: Ciphertext, backend: str = "auto") -> Plaintext:
     qs = _qs(params, ct.level)
+    bk = _stage(backend)
     trace.record("PMULT", params.n, ct.level + 1)
     m = mo.pointwise_addmod(
-        ct.c0, mo.pointwise_mulmod(ct.c1, sk.s_eval[: ct.level + 1], qs, backend="ref"), qs, backend="ref"
+        ct.c0, mo.pointwise_mulmod(ct.c1, sk.s_eval[: ct.level + 1], qs, backend=bk), qs, backend=bk
     )
     return Plaintext(data=m, level=ct.level, scale=ct.scale)
 
 
-def decrypt_decode(params: CkksParams, sk: SecretKey, ct: Ciphertext) -> np.ndarray:
-    return decode(params, decrypt(params, sk, ct))
+def decrypt_decode(params: CkksParams, sk: SecretKey, ct: Ciphertext,
+                   backend: str = "auto") -> np.ndarray:
+    return decode(params, decrypt(params, sk, ct, backend), backend)
 
 
 # ---------------------------------------------------------------------------
@@ -128,52 +144,55 @@ def level_drop(ct: Ciphertext, level: int) -> Ciphertext:
     return Ciphertext(c0=ct.c0[: level + 1], c1=ct.c1[: level + 1], level=level, scale=ct.scale)
 
 
-def add(params: CkksParams, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+def add(params: CkksParams, a: Ciphertext, b: Ciphertext, backend: str = "auto") -> Ciphertext:
     a, b = _align(params, a, b)
     qs = _qs(params, a.level)
+    bk = _stage(backend)
     trace.record("PADD", params.n, 2 * (a.level + 1))
     return Ciphertext(
-        c0=mo.pointwise_addmod(a.c0, b.c0, qs, backend="ref"),
-        c1=mo.pointwise_addmod(a.c1, b.c1, qs, backend="ref"),
+        c0=mo.pointwise_addmod(a.c0, b.c0, qs, backend=bk),
+        c1=mo.pointwise_addmod(a.c1, b.c1, qs, backend=bk),
         level=a.level, scale=a.scale,
     )
 
 
-def sub(params: CkksParams, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+def sub(params: CkksParams, a: Ciphertext, b: Ciphertext, backend: str = "auto") -> Ciphertext:
     a, b = _align(params, a, b)
     qs = _qs(params, a.level)
+    bk = _stage(backend)
     trace.record("PSUB", params.n, 2 * (a.level + 1))
     return Ciphertext(
-        c0=mo.pointwise_submod(a.c0, b.c0, qs, backend="ref"),
-        c1=mo.pointwise_submod(a.c1, b.c1, qs, backend="ref"),
+        c0=mo.pointwise_submod(a.c0, b.c0, qs, backend=bk),
+        c1=mo.pointwise_submod(a.c1, b.c1, qs, backend=bk),
         level=a.level, scale=a.scale,
     )
 
 
-def negate(params: CkksParams, a: Ciphertext) -> Ciphertext:
+def negate(params: CkksParams, a: Ciphertext, backend: str = "auto") -> Ciphertext:
     qs = _qs(params, a.level)
+    bk = _stage(backend)
     z = jnp.zeros_like(a.c0)
     trace.record("PSUB", params.n, 2 * (a.level + 1))
     return Ciphertext(
-        c0=mo.pointwise_submod(z, a.c0, qs, backend="ref"),
-        c1=mo.pointwise_submod(z, a.c1, qs, backend="ref"),
+        c0=mo.pointwise_submod(z, a.c0, qs, backend=bk),
+        c1=mo.pointwise_submod(z, a.c1, qs, backend=bk),
         level=a.level, scale=a.scale,
     )
 
 
-def add_plain(params: CkksParams, a: Ciphertext, pt: Plaintext) -> Ciphertext:
+def add_plain(params: CkksParams, a: Ciphertext, pt: Plaintext, backend: str = "auto") -> Ciphertext:
     assert pt.level >= a.level
     qs = _qs(params, a.level)
     trace.record("PADD", params.n, a.level + 1)
     return Ciphertext(
-        c0=mo.pointwise_addmod(a.c0, pt.data[: a.level + 1], qs, backend="ref"),
+        c0=mo.pointwise_addmod(a.c0, pt.data[: a.level + 1], qs, backend=_stage(backend)),
         c1=a.c1, level=a.level, scale=a.scale,
     )
 
 
-def add_const(params: CkksParams, a: Ciphertext, c) -> Ciphertext:
-    pt = encode_const(params, c, a.level, a.scale)
-    return add_plain(params, a, pt)
+def add_const(params: CkksParams, a: Ciphertext, c, backend: str = "auto") -> Ciphertext:
+    pt = encode_const(params, c, a.level, a.scale, backend)
+    return add_plain(params, a, pt, backend)
 
 
 # ---------------------------------------------------------------------------
@@ -181,33 +200,37 @@ def add_const(params: CkksParams, a: Ciphertext, c) -> Ciphertext:
 # ---------------------------------------------------------------------------
 
 
-def mul_plain(params: CkksParams, a: Ciphertext, pt: Plaintext, rescale_after: bool = True) -> Ciphertext:
+def mul_plain(params: CkksParams, a: Ciphertext, pt: Plaintext, rescale_after: bool = True,
+              backend: str = "auto") -> Ciphertext:
     assert pt.level >= a.level
     qs = _qs(params, a.level)
+    bk = _stage(backend)
     trace.record("PMULT", params.n, 2 * (a.level + 1))
     d = pt.data[: a.level + 1]
     out = Ciphertext(
-        c0=mo.pointwise_mulmod(a.c0, d, qs, backend="ref"),
-        c1=mo.pointwise_mulmod(a.c1, d, qs, backend="ref"),
+        c0=mo.pointwise_mulmod(a.c0, d, qs, backend=bk),
+        c1=mo.pointwise_mulmod(a.c1, d, qs, backend=bk),
         level=a.level, scale=a.scale * pt.scale,
     )
-    return rescale(params, out) if rescale_after else out
+    return rescale(params, out, backend) if rescale_after else out
 
 
-def mul_const(params: CkksParams, a: Ciphertext, c, rescale_after: bool = True) -> Ciphertext:
-    pt = encode_const(params, c, a.level, params.scale)
-    return mul_plain(params, a, pt, rescale_after)
+def mul_const(params: CkksParams, a: Ciphertext, c, rescale_after: bool = True,
+              backend: str = "auto") -> Ciphertext:
+    pt = encode_const(params, c, a.level, params.scale, backend)
+    return mul_plain(params, a, pt, rescale_after, backend)
 
 
-def mul_const_exact(params: CkksParams, a: Ciphertext, c, target_scale: float) -> Ciphertext:
+def mul_const_exact(params: CkksParams, a: Ciphertext, c, target_scale: float,
+                    backend: str = "auto") -> Ciphertext:
     """a·c with the constant's encoding scale chosen so the rescaled result has
     exactly ``target_scale`` — the anchor that keeps scale bookkeeping from
     drifting through multiplicative trees (see polyeval)."""
     q = float(params.q_primes[a.level])
     enc_scale = target_scale * q / a.scale
     assert enc_scale > 256.0, f"enc_scale underflow ({enc_scale}); scale drift upstream"
-    pt = encode_const(params, c, a.level, enc_scale)
-    out = mul_plain(params, a, pt, rescale_after=True)
+    pt = encode_const(params, c, a.level, enc_scale, backend)
+    out = mul_plain(params, a, pt, rescale_after=True, backend=backend)
     return Ciphertext(out.c0, out.c1, out.level, target_scale)
 
 
@@ -216,21 +239,22 @@ def mul(params: CkksParams, a: Ciphertext, b: Ciphertext, rlk: SwitchingKey,
     """Full homomorphic multiplication with relinearisation (key-switch of d2)."""
     a, b = _align_mul(params, a, b)
     qs = _qs(params, a.level)
+    bk = _stage(backend)
     trace.record("PMULT", params.n, 4 * (a.level + 1))
-    d0 = mo.pointwise_mulmod(a.c0, b.c0, qs, backend="ref")
-    d2 = mo.pointwise_mulmod(a.c1, b.c1, qs, backend="ref")
-    cross1 = mo.pointwise_mulmod(a.c0, b.c1, qs, backend="ref")
-    cross2 = mo.pointwise_mulmod(a.c1, b.c0, qs, backend="ref")
+    d0 = mo.pointwise_mulmod(a.c0, b.c0, qs, backend=bk)
+    d2 = mo.pointwise_mulmod(a.c1, b.c1, qs, backend=bk)
+    cross1 = mo.pointwise_mulmod(a.c0, b.c1, qs, backend=bk)
+    cross2 = mo.pointwise_mulmod(a.c1, b.c0, qs, backend=bk)
     trace.record("PADD", params.n, a.level + 1)
-    d1 = mo.pointwise_addmod(cross1, cross2, qs, backend="ref")
+    d1 = mo.pointwise_addmod(cross1, cross2, qs, backend=bk)
     ks0, ks1 = keyswitch.key_switch(d2, params, a.level, rlk, backend)
     trace.record("PADD", params.n, 2 * (a.level + 1))
     out = Ciphertext(
-        c0=mo.pointwise_addmod(d0, ks0, qs, backend="ref"),
-        c1=mo.pointwise_addmod(d1, ks1, qs, backend="ref"),
+        c0=mo.pointwise_addmod(d0, ks0, qs, backend=bk),
+        c1=mo.pointwise_addmod(d1, ks1, qs, backend=bk),
         level=a.level, scale=a.scale * b.scale,
     )
-    return rescale(params, out) if rescale_after else out
+    return rescale(params, out, backend) if rescale_after else out
 
 
 def _align_mul(params: CkksParams, a: Ciphertext, b: Ciphertext):
@@ -238,32 +262,34 @@ def _align_mul(params: CkksParams, a: Ciphertext, b: Ciphertext):
     return level_drop(a, lv), level_drop(b, lv)
 
 
-def square(params: CkksParams, a: Ciphertext, rlk: SwitchingKey, rescale_after: bool = True) -> Ciphertext:
-    return mul(params, a, a, rlk, rescale_after)
+def square(params: CkksParams, a: Ciphertext, rlk: SwitchingKey, rescale_after: bool = True,
+           backend: str = "auto") -> Ciphertext:
+    return mul(params, a, a, rlk, rescale_after, backend)
 
 
-def rescale(params: CkksParams, ct: Ciphertext) -> Ciphertext:
+def rescale(params: CkksParams, ct: Ciphertext, backend: str = "auto") -> Ciphertext:
     """Divide by q_ℓ and drop a level (eval-domain RNS rescale)."""
     lv = ct.level
     assert lv >= 1, "cannot rescale at level 0"
     q_last = int(params.q_primes[lv])
     qs_rem = _qs(params, lv - 1)
     rem_primes = params.q_primes[:lv]
+    bk = _stage(backend)
     qinv = np.array([pow(q_last % int(q), -1, int(q)) for q in rem_primes], np.uint64)
     qinv_b = jnp.asarray(qinv[:, None].astype(np.uint32))
 
     def _one(c):
         # iNTT the dropped limb, re-embed its (centred) coefficients in every
         # remaining basis, NTT back, subtract, multiply by q_ℓ^{-1}.
-        last_coeff = poly.to_coeff(c[lv : lv + 1], params, (lv,))
+        last_coeff = poly.to_coeff(c[lv : lv + 1], params, (lv,), bk)
         v = last_coeff[0].astype(jnp.uint64)
         centered = jnp.where(v > q_last // 2, v + jnp.asarray(qs_rem[:, None]) - q_last, v)
         rem = (centered % jnp.asarray(qs_rem[:, None])).astype(jnp.uint32)
-        rem_eval = poly.to_eval(rem, params, poly.q_idx(params, lv - 1))
+        rem_eval = poly.to_eval(rem, params, poly.q_idx(params, lv - 1), bk)
         trace.record("PSUB", params.n, lv)
-        diff = mo.pointwise_submod(c[:lv], rem_eval, qs_rem, backend="ref")
+        diff = mo.pointwise_submod(c[:lv], rem_eval, qs_rem, backend=bk)
         trace.record("PMULT", params.n, lv)
-        return mo.pointwise_mulmod(diff, jnp.broadcast_to(qinv_b, diff.shape), qs_rem, backend="ref")
+        return mo.pointwise_mulmod(diff, jnp.broadcast_to(qinv_b, diff.shape), qs_rem, backend=bk)
 
     return Ciphertext(c0=_one(ct.c0), c1=_one(ct.c1), level=lv - 1, scale=ct.scale / q_last)
 
@@ -293,6 +319,6 @@ def _apply_galois(params: CkksParams, ct: Ciphertext, t: int, gk: SwitchingKey, 
     ks0, ks1 = keyswitch.key_switch(p1, params, ct.level, gk, backend)
     trace.record("PADD", params.n, ct.level + 1)
     return Ciphertext(
-        c0=mo.pointwise_addmod(p0, ks0, qs, backend="ref"),
+        c0=mo.pointwise_addmod(p0, ks0, qs, backend=_stage(backend)),
         c1=ks1, level=ct.level, scale=ct.scale,
     )

@@ -32,7 +32,8 @@ def chebyshev_fit(f, degree: int, k: float = 1.0) -> np.ndarray:
     return cheb.coef
 
 
-def force_to(params: CkksParams, ct: ops.Ciphertext, level: int, scale: float) -> ops.Ciphertext:
+def force_to(params: CkksParams, ct: ops.Ciphertext, level: int, scale: float,
+             backend: str = "auto") -> ops.Ciphertext:
     """Bring ct to exactly (level, scale).
 
     Exact whenever ≥1 level is consumed: the scale ratio is folded into a
@@ -51,51 +52,55 @@ def force_to(params: CkksParams, ct: ops.Ciphertext, level: int, scale: float) -
     ct = ops.level_drop(ct, level + 1)
     q = float(params.q_primes[level + 1])
     enc_scale = scale * q / ct.scale
-    pt = ops.encode_const(params, 1.0, ct.level, enc_scale)
-    out = ops.mul_plain(params, ct, pt, rescale_after=True)
+    pt = ops.encode_const(params, 1.0, ct.level, enc_scale, backend)
+    out = ops.mul_plain(params, ct, pt, rescale_after=True, backend=backend)
     return ops.Ciphertext(out.c0, out.c1, out.level, scale)  # exact by construction
 
 
-def add_any(params: CkksParams, a: ops.Ciphertext, b: ops.Ciphertext) -> ops.Ciphertext:
+def add_any(params: CkksParams, a: ops.Ciphertext, b: ops.Ciphertext,
+            backend: str = "auto") -> ops.Ciphertext:
     """Add ciphertexts at arbitrary levels (aligns to the deeper one, exactly)."""
     if a.level < b.level:
-        b = force_to(params, b, a.level, a.scale)
+        b = force_to(params, b, a.level, a.scale, backend)
     elif b.level < a.level:
-        a = force_to(params, a, b.level, b.scale)
+        a = force_to(params, a, b.level, b.scale, backend)
     elif a.scale != b.scale:
-        b = force_to(params, b, a.level, a.scale)  # asserts near-equality
-    return ops.add(params, a, b)
+        b = force_to(params, b, a.level, a.scale, backend)  # asserts near-equality
+    return ops.add(params, a, b, backend)
 
 
 class ChebyshevBasis:
     """T_1..T_degree over a normalised input x ∈ [-1, 1] (log-depth tree)."""
 
-    def __init__(self, params: CkksParams, x: ops.Ciphertext, keys: KeySet, degree: int):
+    def __init__(self, params: CkksParams, x: ops.Ciphertext, keys: KeySet, degree: int,
+                 backend: str = "auto"):
         self.params = params
         self.keys = keys
         self.degree = degree
+        self.backend = backend
         self.t: dict[int, ops.Ciphertext] = {1: x}
         for j in range(2, degree + 1):
             self.t[j] = self._pair(j)
 
     def _pair(self, j: int) -> ops.Ciphertext:
         """T_j = 2·T_a·T_b − T_{|a−b|},  a = ⌊j/2⌋."""
-        p, keys = self.params, self.keys
+        p, keys, bk = self.params, self.keys, self.backend
         a = j // 2
         b = j - a
-        prod = ops.mul(p, self.t[a], self.t[b], keys.rlk)  # rescaled
-        two = ops.add(p, prod, prod)
+        prod = ops.mul(p, self.t[a], self.t[b], keys.rlk, backend=bk)  # rescaled
+        two = ops.add(p, prod, prod, bk)
         if a == b:
-            return ops.add_const(p, two, -1.0)
+            return ops.add_const(p, two, -1.0, bk)
         # T_{|a-b|} = T_{b-a} was built earlier ⇒ strictly higher level ⇒ exact
-        return add_any(p, two, ops.negate(p, self.t[b - a]))
+        return add_any(p, two, ops.negate(p, self.t[b - a], bk), bk)
 
     def min_level(self) -> int:
         return min(ct.level for ct in self.t.values())
 
 
 def eval_chebyshev(
-    params: CkksParams, basis: ChebyshevBasis, coeffs: np.ndarray, keys: KeySet
+    params: CkksParams, basis: ChebyshevBasis, coeffs: np.ndarray, keys: KeySet,
+    backend: str = "auto",
 ) -> ops.Ciphertext:
     """Σ c_i·T_i(x) as one exact plaintext linear combination."""
     c = np.asarray(coeffs, dtype=np.float64)
@@ -111,14 +116,14 @@ def eval_chebyshev(
         # encode so the rescaled product lands at exactly (ti.level-1, s*)
         enc_scale = s_star * float(params.q_primes[ti.level]) / ti.scale
         assert enc_scale > 256.0, f"enc_scale underflow at T_{i} (scale drift)"
-        pt = ops.encode_const(params, float(c[i]), ti.level, enc_scale)
-        term = ops.mul_plain(params, ti, pt, rescale_after=True)
+        pt = ops.encode_const(params, float(c[i]), ti.level, enc_scale, backend)
+        term = ops.mul_plain(params, ti, pt, rescale_after=True, backend=backend)
         term = ops.Ciphertext(term.c0, term.c1, term.level, s_star)  # exact
-        term = force_to(params, term, lv_star, s_star)
-        acc = term if acc is None else ops.add(params, acc, term)
+        term = force_to(params, term, lv_star, s_star, backend)
+        acc = term if acc is None else ops.add(params, acc, term, backend)
     if acc is None:
-        z = ops.mul_const(params, basis.t[1], 0.0)
-        acc = force_to(params, ops.Ciphertext(z.c0, z.c1, z.level, s_star), lv_star, s_star)
+        z = ops.mul_const(params, basis.t[1], 0.0, backend=backend)
+        acc = force_to(params, ops.Ciphertext(z.c0, z.c1, z.level, s_star), lv_star, s_star, backend)
     if abs(c[0]) > 1e-14:
-        acc = ops.add_const(params, acc, float(c[0]))
+        acc = ops.add_const(params, acc, float(c[0]), backend)
     return acc

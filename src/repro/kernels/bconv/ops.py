@@ -2,12 +2,14 @@
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.fhe import modmath as mm
 from repro.fhe.ntt import NDIAG
+from repro.kernels import dispatch
+
 from . import kernel as _k
 from . import ref as _ref
 
@@ -24,6 +26,7 @@ def bconv(xhat, w, cs, backend: str = "auto"):
     cs:   (m,)  target moduli.
     Returns (m, N) uint32.
     """
+    dispatch.record("bconv")
     if backend == "auto":
         backend = "kernel" if jax.default_backend() == "tpu" else "ref"
     if backend == "ref":

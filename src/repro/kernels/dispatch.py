@@ -1,0 +1,47 @@
+"""Kernel-dispatch counting — the measurable half of the fusion story.
+
+Every public op wrapper (ntt, bconv, modops, fusedks) records one dispatch per
+device-kernel launch it issues.  The fused key-switch pipeline's whole point is
+collapsing the staged per-digit launch train (prescale, BConv, NTT, two MACs,
+two accumulates — each a separate launch whose intermediates round-trip through
+HBM-equivalent buffers) into one `pallas_call`; this module lets benchmarks and
+tests *measure* that collapse instead of asserting it.
+
+Counting happens at Python call time, so inside an enclosing `jax.jit` the
+counts reflect trace-time launches (once per compilation), which is exactly
+the static dispatch count of the compiled program.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_COUNTS: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "kernel_dispatch_counts", default=None
+)
+
+
+def record(op: str) -> None:
+    """Count one kernel dispatch under ``op`` when a counter is active."""
+    c = _COUNTS.get()
+    if c is not None:
+        c[op] = c.get(op, 0) + 1
+
+
+@contextlib.contextmanager
+def count_dispatches():
+    """Collect {op: dispatch_count} for every kernel launched in the block."""
+    token = _COUNTS.set({})
+    try:
+        yield _COUNTS.get()
+    finally:
+        _COUNTS.reset(token)
+
+
+def total(counts: dict) -> int:
+    return sum(counts.values())
+
+
+def counting() -> bool:
+    return _COUNTS.get() is not None

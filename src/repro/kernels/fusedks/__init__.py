@@ -1,0 +1,1 @@
+"""Fused key-switch pipeline kernels (prescale→BConv→NTT→KSK-MAC)."""

@@ -1,0 +1,211 @@
+"""Pallas TPU kernel: the fused prescale→BConv→NTT→KSK-MAC key-switch pipeline.
+
+This is the kernel-level realisation of FLASH-FHE's fused key-switch datapath
+(the iNTT→BConv→NTT pipeline the bootstrappable clusters are built around).
+The staged software path launches one kernel per stage per digit, so every
+intermediate polynomial round-trips through HBM-equivalent host buffers; here
+the whole per-digit pipeline runs inside one ``pallas_call`` and intermediates
+never leave VMEM:
+
+  grid = (ext_limb e, digit j) — j innermost, so each output limb's pair of
+  accumulators stays resident in VMEM while all β digits stream through it.
+  One program:
+
+    1. prescale   x̂_i = x_i ∘ [B̂_i⁻¹]_{b_i}        (one Montgomery mul/limb)
+    2. BConv row  y_e = Σ_i x̂_i · (B̂_i mod c_e)     (8-bit limb MXU dot)
+    3. NTT        ŷ_e = NTT_{c_e}(y_e)               (four-step MXU matmuls)
+    4. KSK MAC    acc_{0,1}[e] += ŷ_e ∘ ksk_{j,{0,1}}[e]   (both components)
+
+Digits are padded to a uniform k8 source-limb count (zero rows with a dummy
+modulus are exact no-ops through every stage), so all β digits and both key
+components ride one grid.  A second entry point runs the same pipeline with a
+ModDown epilogue — (q_part − ŷ) ∘ P⁻¹ — for both accumulators at once.
+
+VMEM per program is dominated by the digit block (k8·N·4 B) plus the two NTT
+limb matrices (~2 MB at N=2^16); deep dnum=1 chains exceed VMEM on real TPUs
+and are served by the staged path — the dispatcher in ``ops`` stays honest
+about that limit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.fhe.ntt import NDIAG, NLIMB8
+from repro.kernels.ntt.kernel import _mod_matmul_left, _montmul
+
+
+def _prescale_bconv_row(x, bh, b, binv, wcol, cm, q, qinv):
+    """Stages 1+2: one BConv output row, straight out of the prescale.
+
+    x: (k8, N) digit source limbs; bh: (k8, 1) [B̂⁻¹]·R mod b (Montgomery);
+    b/binv: (k8, 1) source moduli + their -b⁻¹ mod 2³²; wcol: (1, k8) B̂ mod c_e;
+    cm: (NDIAG,) Montgomery 2^(8s) mod c_e.  Returns (1, N) uint32 < c_e.
+    """
+    xhat = _montmul(x, bh, b, binv)  # x·B̂⁻¹ mod b, still (k8, N)
+    w_limbs = [((wcol >> (8 * k)) & 0xFF).astype(jnp.int32) for k in range(NLIMB8)]
+    x_limbs = [((xhat >> (8 * k)) & 0xFF).astype(jnp.int32) for k in range(NLIMB8)]
+    diags = [None] * NDIAG
+    for kw in range(NLIMB8):
+        for kx in range(NLIMB8):
+            p = jax.lax.dot_general(
+                w_limbs[kw],
+                x_limbs[kx],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )  # (1, N), exact: 255²·k8 < 2^22
+            s = kw + kx
+            diags[s] = p if diags[s] is None else diags[s] + p
+    acc = jnp.zeros(diags[0].shape, jnp.uint32)
+    for s in range(NDIAG):
+        term = _montmul(diags[s].astype(jnp.uint32), cm[s], q, qinv)
+        acc = acc + term
+        acc = jnp.where(acc >= q, acc - q, acc)
+    return acc
+
+
+def _ntt_fwd_inline(y, twa, v2, v1, tm, cm, q, qinv, n1, n2):
+    """Stage 3: forward four-step negacyclic NTT of one limb, all in VMEM.
+
+    Mirrors ``repro.kernels.ntt.kernel._ntt_kernel_body`` (inverse=False).
+    """
+    a = y.reshape(n2, n1).T
+    a = _montmul(a, twa, q, qinv)  # psi twist (A-layout)
+    b = _mod_matmul_left(v2, a.T, cm, q, qinv).T  # row NTTs
+    b = _montmul(b, tm, q, qinv)  # inter-step twiddle
+    c = _mod_matmul_left(v1, b, cm, q, qinv)  # col NTTs
+    return c.reshape(n1 * n2)
+
+
+def _fused_ks_body(
+    xd_ref, bh_ref, b_ref, binv_ref, w_ref, twa_ref, v2_ref, v1_ref, t_ref,
+    c_ref, q_ref, qinv_ref, r2_ref, ksk_ref, o_ref, *, n1, n2,
+):
+    j = pl.program_id(1)  # digit index — innermost, accumulates into o_ref
+    q = q_ref[0, 0]
+    qinv = qinv_ref[0, 0]
+    r2 = r2_ref[0, 0]
+    cm = c_ref[0]  # (NDIAG,)
+
+    y = _prescale_bconv_row(
+        xd_ref[0], bh_ref[0], b_ref[0], binv_ref[0], w_ref[0].T, cm, q, qinv
+    )
+    yhat = _ntt_fwd_inline(
+        y.reshape(-1), twa_ref[0], v2_ref[0], v1_ref[0], t_ref[0], cm, q, qinv, n1, n2
+    )
+
+    # stage 4: plain products ŷ∘ksk via Montgomery double-multiply, accumulate
+    k0 = ksk_ref[0, 0, 0]
+    k1 = ksk_ref[0, 1, 0]
+    t0 = _montmul(_montmul(yhat, k0, q, qinv), r2, q, qinv)
+    t1 = _montmul(_montmul(yhat, k1, q, qinv), r2, q, qinv)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[0, 0] = t0
+        o_ref[0, 1] = t1
+
+    @pl.when(j > 0)
+    def _():
+        s0 = o_ref[0, 0] + t0
+        o_ref[0, 0] = jnp.where(s0 >= q, s0 - q, s0)
+        s1 = o_ref[0, 1] + t1
+        o_ref[0, 1] = jnp.where(s1 >= q, s1 - q, s1)
+
+
+@functools.partial(jax.jit, static_argnames=("n1", "n2", "interpret"))
+def fused_ks_pallas(xd, bh, b, binv, w, twa, v2, v1, t, cm, q, qinv, r2, ksk, *, n1, n2, interpret):
+    """All β digits × both key components of one key-switch in one launch.
+
+    xd:  (β, k8, N) digit source limbs (coeff domain, rows zero-padded)
+    bh/b/binv: (β, k8, 1) per-digit prescale constants
+    w:   (β, k8, m) BConv weights B̂_i mod c_e
+    twa/v2/v1/t/cm/q/qinv/r2: ext-basis NTT plan tables, leading (m, ...) axis
+    ksk: (β, 2, m, N) switching-key limbs (eval domain)
+    Returns (m, 2, N): the two MAC accumulators over the extended basis.
+    """
+    beta, k8, n = xd.shape
+    m = w.shape[2]
+    return pl.pallas_call(
+        functools.partial(_fused_ks_body, n1=n1, n2=n2),
+        grid=(m, beta),
+        in_specs=[
+            pl.BlockSpec((1, k8, n), lambda e, j: (j, 0, 0)),  # xd
+            pl.BlockSpec((1, k8, 1), lambda e, j: (j, 0, 0)),  # bh
+            pl.BlockSpec((1, k8, 1), lambda e, j: (j, 0, 0)),  # b
+            pl.BlockSpec((1, k8, 1), lambda e, j: (j, 0, 0)),  # binv
+            pl.BlockSpec((1, k8, 1), lambda e, j: (j, 0, e)),  # w column e
+            pl.BlockSpec((1, n1, n2), lambda e, j: (e, 0, 0)),  # twist
+            pl.BlockSpec((1, NLIMB8, n2, n2), lambda e, j: (e, 0, 0, 0)),  # V2
+            pl.BlockSpec((1, NLIMB8, n1, n1), lambda e, j: (e, 0, 0, 0)),  # V1
+            pl.BlockSpec((1, n1, n2), lambda e, j: (e, 0, 0)),  # inter-step twiddle
+            pl.BlockSpec((1, NDIAG), lambda e, j: (e, 0)),  # diagonal mont consts
+            pl.BlockSpec((1, 1), lambda e, j: (e, 0)),  # q
+            pl.BlockSpec((1, 1), lambda e, j: (e, 0)),  # qinv_neg
+            pl.BlockSpec((1, 1), lambda e, j: (e, 0)),  # r2
+            pl.BlockSpec((1, 2, 1, n), lambda e, j: (j, 0, e, 0)),  # ksk
+        ],
+        out_specs=pl.BlockSpec((1, 2, n), lambda e, j: (e, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 2, n), jnp.uint32),
+        interpret=interpret,
+    )(xd, bh, b, binv, w, twa, v2, v1, t, cm, q, qinv, r2, ksk)
+
+
+def _fused_moddown_body(
+    pc_ref, bh_ref, b_ref, binv_ref, w_ref, twa_ref, v2_ref, v1_ref, t_ref,
+    c_ref, q_ref, qinv_ref, qpart_ref, pinv_ref, o_ref, *, n1, n2,
+):
+    q = q_ref[0, 0]
+    qinv = qinv_ref[0, 0]
+    cm = c_ref[0]
+    y = _prescale_bconv_row(
+        pc_ref[0], bh_ref[...], b_ref[...], binv_ref[...], w_ref[...].T, cm, q, qinv
+    )
+    yhat = _ntt_fwd_inline(
+        y.reshape(-1), twa_ref[0], v2_ref[0], v1_ref[0], t_ref[0], cm, q, qinv, n1, n2
+    )
+    # ModDown epilogue: (q_part − BConv_P→Q(⌊·⌉)) ∘ P⁻¹, still in VMEM
+    d = qpart_ref[0, 0]
+    diff = jnp.where(d >= yhat, d - yhat, d + q - yhat)
+    o_ref[0, 0] = _montmul(diff, pinv_ref[0, 0], q, qinv)
+
+
+@functools.partial(jax.jit, static_argnames=("n1", "n2", "interpret"))
+def fused_moddown_pallas(pc, bh, b, binv, w, twa, v2, v1, t, cm, q, qinv, qpart, pinv, *, n1, n2, interpret):
+    """Fused prescale→BConv→NTT→(sub, ×P⁻¹) for both accumulators at once.
+
+    pc:    (2, k8, N) P-block coefficients of (acc0, acc1) after the iNTT
+    bh/b/binv: (k8, 1) prescale constants for the special block
+    w:     (k8, m) B̂ mod q_e;  qpart: (2, m, N) eval-domain q limbs
+    pinv:  (m, 1) Montgomery [P⁻¹]_{q_e}
+    NTT tables carry the q-basis (m = level+1 limbs).  Returns (2, m, N).
+    """
+    _, k8, n = pc.shape
+    m = w.shape[1]
+    return pl.pallas_call(
+        functools.partial(_fused_moddown_body, n1=n1, n2=n2),
+        grid=(2, m),
+        in_specs=[
+            pl.BlockSpec((1, k8, n), lambda c, e: (c, 0, 0)),  # pc
+            pl.BlockSpec((k8, 1), lambda c, e: (0, 0)),  # bh
+            pl.BlockSpec((k8, 1), lambda c, e: (0, 0)),  # b
+            pl.BlockSpec((k8, 1), lambda c, e: (0, 0)),  # binv
+            pl.BlockSpec((k8, 1), lambda c, e: (0, e)),  # w column e
+            pl.BlockSpec((1, n1, n2), lambda c, e: (e, 0, 0)),  # twist
+            pl.BlockSpec((1, NLIMB8, n2, n2), lambda c, e: (e, 0, 0, 0)),  # V2
+            pl.BlockSpec((1, NLIMB8, n1, n1), lambda c, e: (e, 0, 0, 0)),  # V1
+            pl.BlockSpec((1, n1, n2), lambda c, e: (e, 0, 0)),  # inter-step twiddle
+            pl.BlockSpec((1, NDIAG), lambda c, e: (e, 0)),  # diagonal mont consts
+            pl.BlockSpec((1, 1), lambda c, e: (e, 0)),  # q
+            pl.BlockSpec((1, 1), lambda c, e: (e, 0)),  # qinv_neg
+            pl.BlockSpec((1, 1, n), lambda c, e: (c, e, 0)),  # qpart
+            pl.BlockSpec((1, 1), lambda c, e: (e, 0)),  # pinv (mont)
+        ],
+        out_specs=pl.BlockSpec((1, 1, n), lambda c, e: (c, e, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, m, n), jnp.uint32),
+        interpret=interpret,
+    )(pc, bh, b, binv, w, twa, v2, v1, t, cm, q, qinv, qpart, pinv)

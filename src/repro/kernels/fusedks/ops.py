@@ -1,0 +1,211 @@
+"""Public fused key-switch ops: table building + kernel/ref dispatch.
+
+``key_switch_digits`` covers the per-digit prescale→BConv→NTT→MAC region of a
+hybrid key-switch (everything between the shared iNTT and ModDown);
+``mod_down_digits`` covers the prescale→BConv→NTT→(sub, ×P⁻¹) region of
+ModDown for both accumulators.  Backends:
+
+  * "kernel" — the fused Pallas pipeline, ONE launch per region
+    (interpret=True off-TPU, so CPU tests exercise the same program);
+  * "ref"    — the staged oracle in ``ref`` (one launch per stage per digit);
+  * "auto"   — kernel on TPU, ref elsewhere (repo-wide convention).
+
+Tables are cached per (params, level): digit spans, per-digit prescale
+constants in Montgomery form, BConv weight matrices, and the extended-basis
+NTT plan views — all the state the fused kernel streams per grid step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fhe import modmath as mm
+from repro.fhe import poly, rns
+from repro.fhe.params import CkksParams
+from repro.kernels import dispatch
+
+from . import kernel as _k
+from . import ref as _ref
+
+
+def _pad8(v: int) -> int:
+    return (v + 7) // 8 * 8
+
+_PAD_MOD = 3  # dummy odd modulus for zero-padded source rows (exact no-op)
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "ref"
+    return backend
+
+
+@dataclasses.dataclass
+class KsTables:
+    """Per-(params, level) constants for the fused key-switch kernel."""
+
+    beta: int
+    k8: int
+    m: int
+    n1: int
+    n2: int
+    spans: tuple[tuple[int, int], ...]  # (lo, hi) master-chain slice per digit
+    bh: jnp.ndarray  # (β, k8, 1) [B̂⁻¹]·R mod b
+    b: jnp.ndarray  # (β, k8, 1) source moduli
+    binv: jnp.ndarray  # (β, k8, 1) -b⁻¹ mod 2³²
+    w: jnp.ndarray  # (β, k8, m) B̂ mod c_e
+    twa: jnp.ndarray
+    v2: jnp.ndarray
+    v1: jnp.ndarray
+    t: jnp.ndarray
+    cm: jnp.ndarray
+    q: jnp.ndarray
+    qinv: jnp.ndarray
+    r2: jnp.ndarray
+
+
+def _prescale_tables(digits: list[tuple[int, ...]], dst_primes, k8: int):
+    """(bh, b, binv, w) padded to (len(digits), k8, ·) for the given digit list."""
+    nd = len(digits)
+    m = len(dst_primes)
+    bh = np.zeros((nd, k8, 1), np.uint32)
+    b = np.full((nd, k8, 1), _PAD_MOD, np.uint32)
+    binv = np.full((nd, k8, 1), mm.MontConstants(_PAD_MOD).qinv_neg, np.uint32)
+    w = np.zeros((nd, k8, m), np.uint32)
+    for j, src in enumerate(digits):
+        k = len(src)
+        bhat_inv, wj = rns.bconv_tables(src, tuple(int(c) for c in dst_primes))
+        for i, bi in enumerate(src):
+            bh[j, i, 0] = (int(bhat_inv[i]) << 32) % int(bi)
+        b[j, :k, 0] = np.array(src, np.uint32)
+        binv[j, :k, 0] = mm.mont_constants_array(list(src))["qinv_neg"]
+        w[j, :k] = wj
+    return bh, b, binv, w
+
+
+def _plan_arrays(plan):
+    m = plan.num_limbs
+    return dict(
+        twa=jnp.asarray(plan.twa_mont),
+        v2=jnp.asarray(plan.v2_limbs),
+        v1=jnp.asarray(plan.v1_limbs),
+        t=jnp.asarray(plan.t_mont),
+        cm=jnp.asarray(plan.c_mont),
+        q=jnp.asarray(plan.qs.reshape(m, 1)),
+        qinv=jnp.asarray(plan.qinv_neg.reshape(m, 1)),
+        r2=jnp.asarray(plan.r2.reshape(m, 1)),
+    )
+
+
+@functools.lru_cache(maxsize=256)
+def ks_tables(params: CkksParams, level: int) -> KsTables:
+    alpha = params.alpha
+    beta = params.beta(level)
+    ext = poly.ext_idx(params, level)
+    dst = poly.primes_for(params, ext)
+    k8 = _pad8(alpha)
+    spans, digits = [], []
+    for j in range(beta):
+        lo, hi = j * alpha, min((j + 1) * alpha, level + 1)
+        spans.append((lo, hi))
+        digits.append(poly.primes_for(params, tuple(range(lo, hi))))
+    bh, b, binv, w = _prescale_tables(digits, dst, k8)
+    plan = poly.plan_for(params, ext)
+    return KsTables(
+        beta=beta, k8=k8, m=len(ext), n1=plan.n1, n2=plan.n2, spans=tuple(spans),
+        bh=jnp.asarray(bh), b=jnp.asarray(b), binv=jnp.asarray(binv), w=jnp.asarray(w),
+        **_plan_arrays(plan),
+    )
+
+
+@dataclasses.dataclass
+class ModDownTables:
+    k8: int
+    m: int
+    n1: int
+    n2: int
+    bh: jnp.ndarray
+    b: jnp.ndarray
+    binv: jnp.ndarray
+    w: jnp.ndarray
+    pinv: jnp.ndarray  # (m, 1) Montgomery [P⁻¹]_{q_e}
+    twa: jnp.ndarray
+    v2: jnp.ndarray
+    v1: jnp.ndarray
+    t: jnp.ndarray
+    cm: jnp.ndarray
+    q: jnp.ndarray
+    qinv: jnp.ndarray
+    r2: jnp.ndarray
+
+
+@functools.lru_cache(maxsize=256)
+def moddown_tables(params: CkksParams, level: int) -> ModDownTables:
+    p_primes = poly.primes_for(params, poly.p_idx(params))
+    q_primes = poly.primes_for(params, poly.q_idx(params, level))
+    k8 = _pad8(len(p_primes))
+    bh, b, binv, w = _prescale_tables([p_primes], q_primes, k8)
+    P = rns.product(p_primes)
+    pinv = np.array(
+        [(pow(P % int(q), -1, int(q)) << 32) % int(q) for q in q_primes], np.uint32
+    ).reshape(-1, 1)
+    plan = poly.plan_for(params, poly.q_idx(params, level))
+    return ModDownTables(
+        k8=k8, m=len(q_primes), n1=plan.n1, n2=plan.n2,
+        bh=jnp.asarray(bh[0]), b=jnp.asarray(b[0]), binv=jnp.asarray(binv[0]),
+        w=jnp.asarray(w[0]), pinv=jnp.asarray(pinv), **_plan_arrays(plan),
+    )
+
+
+def pack_digits(d_coeff, tb: KsTables, n: int):
+    """(nq, N) coefficient limbs → (β, k8, N) zero-padded digit blocks."""
+    xd = jnp.zeros((tb.beta, tb.k8, n), jnp.uint32)
+    for j, (lo, hi) in enumerate(tb.spans):
+        xd = xd.at[j, : hi - lo].set(d_coeff[lo:hi])
+    return xd
+
+
+def key_switch_digits(d_coeff, ksk_sel, params: CkksParams, level: int, backend: str = "auto"):
+    """Σ_j NTT(BConv(d̂_j)) ∘ ksk_j over the extended basis, both components.
+
+    d_coeff: (level+1, N) coefficient-domain limbs; ksk_sel: (β, 2, m, N)
+    eval-domain key limbs restricted to the active extended basis.
+    Returns (acc0, acc1), each (m, N) uint32 eval-domain.
+    """
+    if _resolve(backend) == "ref":
+        return _ref.key_switch_digits_ref(d_coeff, ksk_sel, params, level)
+    tb = ks_tables(params, level)
+    xd = pack_digits(jnp.asarray(d_coeff, jnp.uint32), tb, params.n)
+    dispatch.record("fusedks")
+    out = _k.fused_ks_pallas(
+        xd, tb.bh, tb.b, tb.binv, tb.w, tb.twa, tb.v2, tb.v1, tb.t, tb.cm,
+        tb.q, tb.qinv, tb.r2, jnp.asarray(ksk_sel, jnp.uint32),
+        n1=tb.n1, n2=tb.n2, interpret=jax.default_backend() != "tpu",
+    )
+    return out[:, 0], out[:, 1]
+
+
+def mod_down_digits(p_coeff, q_part, params: CkksParams, level: int, backend: str = "auto"):
+    """Fused ModDown tail for both accumulators.
+
+    p_coeff: (2, α, N) coefficient-domain P-block limbs (post-iNTT);
+    q_part: (2, level+1, N) eval-domain q limbs.  Returns (2, level+1, N).
+    """
+    if _resolve(backend) == "ref":
+        return _ref.mod_down_digits_ref(p_coeff, q_part, params, level)
+    tb = moddown_tables(params, level)
+    alpha = params.alpha
+    pc = jnp.zeros((2, tb.k8, params.n), jnp.uint32).at[:, :alpha].set(
+        jnp.asarray(p_coeff, jnp.uint32)
+    )
+    dispatch.record("fused_moddown")
+    return _k.fused_moddown_pallas(
+        pc, tb.bh, tb.b, tb.binv, tb.w, tb.twa, tb.v2, tb.v1, tb.t, tb.cm,
+        tb.q, tb.qinv, jnp.asarray(q_part, jnp.uint32), tb.pinv,
+        n1=tb.n1, n2=tb.n2, interpret=jax.default_backend() != "tpu",
+    )

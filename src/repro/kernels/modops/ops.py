@@ -2,10 +2,15 @@
 
 from __future__ import annotations
 
+import functools
 import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.fhe import modmath as mm
+from repro.kernels import dispatch
 
 from . import kernel as _k
 from . import ref as _ref
@@ -17,10 +22,23 @@ def _resolve(backend):
     return backend
 
 
+@functools.lru_cache(maxsize=1024)
+def _mont_cached(qs: tuple[int, ...]) -> dict:
+    return mm.mont_constants_array(list(qs))
+
+
 def pointwise_mulmod(a, b, qs, qinv=None, r2=None, backend: str = "auto"):
-    """(a ∘ b) mod q per limb.  a, b: (..., l, N) uint32; qs: (l,)."""
+    """(a ∘ b) mod q per limb.  a, b: (..., l, N) uint32; qs: (l,).
+
+    Montgomery constants are derived (and cached) from ``qs`` when the caller
+    does not supply them, so any call site can reach the kernel path.
+    """
+    dispatch.record("mulmod")
     if _resolve(backend) == "ref":
         return _ref.mulmod_ref(a, b, jnp.asarray(qs, jnp.uint32))
+    if qinv is None or r2 is None:
+        consts = _mont_cached(tuple(int(q) for q in np.asarray(qs).tolist()))
+        qinv, r2 = consts["qinv_neg"], consts["r2"]
     lead = a.shape[:-2]
     l, n = a.shape[-2:]
     reps = math.prod(lead) if lead else 1
@@ -32,6 +50,7 @@ def pointwise_mulmod(a, b, qs, qinv=None, r2=None, backend: str = "auto"):
 
 
 def pointwise_addmod(a, b, qs, backend: str = "auto"):
+    dispatch.record("addmod")
     if _resolve(backend) == "ref":
         return _ref.addmod_ref(a, b, jnp.asarray(qs, jnp.uint32))
     lead = a.shape[:-2]
@@ -43,6 +62,7 @@ def pointwise_addmod(a, b, qs, backend: str = "auto"):
 
 
 def pointwise_submod(a, b, qs, backend: str = "auto"):
+    dispatch.record("submod")
     if _resolve(backend) == "ref":
         return _ref.submod_ref(a, b, jnp.asarray(qs, jnp.uint32))
     lead = a.shape[:-2]

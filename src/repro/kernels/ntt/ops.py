@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.fhe.ntt import NttPlan
+from repro.kernels import dispatch
+
 from . import kernel as _k
 from . import ref as _ref
 
@@ -44,6 +46,7 @@ def _run_kernel(x, plan: NttPlan, inverse: bool):
 
 def ntt_fwd(x, plan: NttPlan, backend: str = "auto"):
     """Coefficients → NTT slots (natural order).  x: (..., l, N) uint32."""
+    dispatch.record("ntt")
     if _resolve(backend) == "kernel":
         return _run_kernel(x, plan, inverse=False)
     return _ref.ntt_fwd_ref(x, plan)
@@ -51,6 +54,7 @@ def ntt_fwd(x, plan: NttPlan, backend: str = "auto"):
 
 def ntt_inv(x, plan: NttPlan, backend: str = "auto"):
     """NTT slots → coefficients.  x: (..., l, N) uint32."""
+    dispatch.record("intt")
     if _resolve(backend) == "kernel":
         return _run_kernel(x, plan, inverse=True)
     return _ref.ntt_inv_ref(x, plan)

@@ -13,7 +13,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.fhe import modmath as mm
 from repro.fhe.ntt import NttPlan, bit_reverse_indices
 
 

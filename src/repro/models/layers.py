@@ -6,12 +6,10 @@ All compute in bfloat16 with float32 softmax/normalisation statistics.
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .scan_util import maybe_scan
 

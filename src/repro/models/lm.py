@@ -17,8 +17,6 @@ FSDP on the other), activations constrained per block.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any
 
 import jax

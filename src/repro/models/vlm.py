@@ -14,10 +14,10 @@ from jax.sharding import Mesh
 from repro.distributed import sharding as sh
 
 from . import layers as L
-from .scan_util import maybe_scan
 from . import lm
 from .config import ModelConfig
 from .lm import BF16
+from .scan_util import maybe_scan
 
 
 init_params = lm.init_params

@@ -8,19 +8,17 @@ Decoder: causal self-attention + cross-attention to encoder states.
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed import sharding as sh
 
 from . import layers as L
 from .config import ModelConfig
-from .scan_util import maybe_scan
 from .lm import BF16, _dense_init, _norm_init, chunked_xent
+from .scan_util import maybe_scan
 
 MAX_DEC_POS = 1 << 16
 

@@ -7,7 +7,6 @@ state is ZeRO-sharded wherever weights are FSDP-sharded.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ axis manual — gradients then cross pods as int8 (training.compress).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

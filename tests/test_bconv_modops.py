@@ -1,7 +1,7 @@
 """Kernel-vs-oracle tests for BConv and fused pointwise modops."""
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 

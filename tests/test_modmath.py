@@ -1,7 +1,7 @@
 """Unit + property tests for the two modular-arithmetic backends."""
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 

@@ -1,7 +1,7 @@
 """NTT correctness: kernel vs ref oracle vs schoolbook, shape/dtype sweeps, properties."""
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 

@@ -44,6 +44,21 @@ def emit_fusedks(emit, smoke: bool, iters: int) -> None:
             emit(f"fusedks.{cfg}.{key}", row[key])
 
 
+def emit_serving(emit, smoke: bool) -> None:
+    """Multi-tenant serving: SLO metrics per (scenario, chip) + claim check."""
+    from . import serving_bench
+
+    rows = serving_bench.run(smoke=smoke)
+    for r in rows:
+        prefix = f"serving.{r['scenario']}.{r['chip']}"
+        for key in ("latency_p50_cycles", "latency_p99_cycles", "queue_p99_cycles",
+                    "makespan_mcycles", "throughput_jobs_per_mcycle",
+                    "util_mean", "fairness_jain", "n_preemptions"):
+            emit(f"{prefix}.{key}", r[key])
+    failures = serving_bench.check_paper_claim(rows)
+    emit("serving.claim_flash_beats_craterlake", int(not failures))
+
+
 def emit_paper_figs(emit) -> None:
     from . import paper_figs, roofline_table
 
@@ -117,6 +132,7 @@ def main(argv=None) -> None:
         emit_fusedks(emit, smoke=args.smoke, iters=args.iters)
         if not args.smoke:
             emit_paper_figs(emit)
+            emit_serving(emit, smoke=False)
         emit("bench.total_seconds", time.time() - t0)
     finally:
         emit.close()

@@ -4,6 +4,7 @@ Layout:
   repro.fhe        CKKS scheme (modmath/rns/ntt/keys/ops/keyswitch/bootstrap)
   repro.kernels    Pallas TPU kernels (+ jit wrappers + pure-jnp oracles)
   repro.core       the paper's contribution: heterogeneous clusters + multi-job scheduler
+  repro.serve      discrete-event multi-tenant serving (§4.2 online policy, traffic, SLOs)
   repro.models     assigned LM architectures (dense / MoE / SSM / hybrid / enc-dec / VLM)
   repro.training   optimizer + train step substrate
   repro.serving    KV cache + decode substrate

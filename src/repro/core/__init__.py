@@ -7,7 +7,8 @@ The paper's contribution as a composable library:
   cache      — hierarchical L1/L2 SRAM model
   simulator  — cycle-level throughput model over instruction streams
   scheduler  — multi-job placement: 1 shallow job/affiliation, deep = all
-               bootstrappable clusters, priority preemption
+               bootstrappable clusters, priority preemption (a thin wrapper
+               over the discrete-event engine in repro.serve)
   executor   — shard_map execution of parallel shallow jobs (affiliation =
                device group), numerically real
 """

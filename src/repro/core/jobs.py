@@ -16,6 +16,7 @@ class FheJob:
     priority: int = 0  # higher = more urgent (preemptive scheduling)
     arrival_cycle: int = 0
     job_id: int = 0
+    tenant_id: int = 0  # submitting tenant (fairness accounting in repro.serve)
 
     @property
     def kind(self) -> str:
@@ -27,10 +28,11 @@ def classify(params: CkksParams) -> str:
     return "shallow" if params.is_shallow() else "deep"
 
 
-def make_job(workload: str, priority: int = 0, arrival_cycle: int = 0, job_id: int = 0) -> FheJob:
+def make_job(workload: str, priority: int = 0, arrival_cycle: int = 0, job_id: int = 0,
+             tenant_id: int = 0) -> FheJob:
     p = workload_params(workload)
     job = FheJob(workload=workload, params=p, priority=priority,
-                 arrival_cycle=arrival_cycle, job_id=job_id)
+                 arrival_cycle=arrival_cycle, job_id=job_id, tenant_id=tenant_id)
     assert job.kind == workload_kind(workload), (
         f"classifier disagrees with preset for {workload}"
     )

@@ -1,28 +1,29 @@
-"""Multi-job FHE scheduler — the paper's §4.2 policy, plus baselines.
+"""Multi-job FHE scheduling — compatibility wrapper over ``repro.serve``.
 
-FLASH-FHE policy:
-  * classify each job from its crypto parameters (jobs.classify);
-  * shallow job → exactly ONE cluster affiliation (parallelism up to 8), with
-    the affiliation's bootstrappable circuit decomposed into two extra swift
-    pipelines (multi-exit);
-  * deep job → ALL bootstrappable clusters across affiliations (exclusive);
-  * priority-based preemption: a deep job is suspended (SRAM→HBM spill, paid
-    in cycles) when higher-priority shallow jobs arrive, avoiding the convoy
-    effect.
+The actual policy now lives in the discrete-event serving subsystem
+(``repro.serve.policy``): per-affiliation shallow placement with multi-exit
+decomposition, deep-job gang scheduling across all bootstrappable clusters,
+and priority preemption with an explicit SRAM→HBM spill/restore cost and a
+real suspend/resume state machine.  This module keeps the historical
+``schedule(jobs, chip) -> list[ScheduledJob]`` surface so existing call sites
+(tests, examples, paper-figure benchmarks) run the new engine unchanged.
 
-Baseline policy (CraterLake / F1+, multi_job=False): whole chip per job,
-priority-then-arrival FIFO, no preemption.
+The event engine also fixes two bugs in the old one-pass heuristic:
+
+  * preemption no longer rewinds *all* affiliation free-times (which let the
+    old scheduler double-book placements) — ``ServeResult.validate`` now
+    asserts that no two placements overlap on any affiliation;
+  * ``ScheduledJob.preempted_cycles`` records the cycles a job actually lost
+    to suspension + spill/restore, instead of always 0.0.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-from .cache import MB
 from .hardware import ChipConfig
 from .jobs import FheJob
-from .planner import workload_stream
-from .simulator import LaneSet, SimResult, lanes_deep, lanes_shallow, lanes_whole_chip, simulate_stream
+from .simulator import SimResult
 
 
 @dataclasses.dataclass
@@ -43,80 +44,27 @@ class ScheduledJob:
         return self.end_cycle - self.job.arrival_cycle
 
 
-def _job_sim(job: FheJob, chip: ChipConfig, lanes: LaneSet, cache_mb: float) -> SimResult:
-    stream = workload_stream(job.workload, job.params, mode="hw")
-    return simulate_stream(stream, chip, lanes, cache_bytes=cache_mb * MB,
-                           key_prefix=f"j{job.job_id}:")
-
-
 def schedule(jobs: list[FheJob], chip: ChipConfig) -> list[ScheduledJob]:
-    """Event-driven schedule; returns per-job placement and completion."""
-    if chip.multi_job:
-        return _schedule_flash(jobs, chip)
-    return _schedule_sequential(jobs, chip)
+    """Run ``jobs`` through the event-driven serving engine; returns per-job
+    placement and completion in submission order.  Timeline consistency
+    (no overlapping placements, work conservation) is asserted on every call.
+    """
+    # deferred import: repro.core.__init__ imports this module, and the serve
+    # package imports repro.core submodules — a top-level import would cycle
+    from repro.serve.policy import serve
 
-
-def _schedule_sequential(jobs: list[FheJob], chip: ChipConfig) -> list[ScheduledJob]:
-    """Homogeneous baseline: one job at a time on the whole chip."""
-    lanes = lanes_whole_chip(chip)
-    order = sorted(jobs, key=lambda j: (j.arrival_cycle, -j.priority, j.job_id))
-    t = 0.0
-    out = []
-    for job in order:
-        sim = _job_sim(job, chip, lanes, chip.total_cache_mb)
-        start = max(t, job.arrival_cycle)
-        out.append(ScheduledJob(job, start, start + sim.cycles, lanes.label, sim))
-        t = start + sim.cycles
-    return out
-
-
-def _schedule_flash(jobs: list[FheJob], chip: ChipConfig) -> list[ScheduledJob]:
-    n_aff = chip.n_affiliations
-    # L2 is shared; each shallow job sees its L1 + a 1/n_aff share of L2
-    shallow_cache_mb = chip.l1_mb_per_aff + chip.l2_mb / n_aff
-    events = sorted(jobs, key=lambda j: (j.arrival_cycle, -j.priority, j.job_id))
-    aff_free = [0.0] * n_aff
-    out: list[ScheduledJob] = []
-    deep_running: ScheduledJob | None = None
-
-    for job in events:
-        if job.kind == "shallow":
-            sim = _job_sim(job, chip, lanes_shallow(chip), shallow_cache_mb)
-            # preemption: a running deep job with lower priority is suspended
-            preempt_pay = 0.0
-            if deep_running is not None and deep_running.job.priority < job.priority \
-                    and deep_running.end_cycle > job.arrival_cycle:
-                spill_bytes = _working_set_bytes(deep_running.job)
-                pay = spill_bytes / chip.hbm_bytes_per_cycle
-                deep_running.end_cycle += sim.cycles + pay
-                deep_running.preempted_cycles += sim.cycles + pay
-                for a in range(n_aff):
-                    aff_free[a] = max(0.0, job.arrival_cycle)
-            a = min(range(n_aff), key=lambda i: aff_free[i])
-            start = max(aff_free[a], job.arrival_cycle)
-            end = start + sim.cycles
-            aff_free[a] = end
-            out.append(ScheduledJob(job, start, end, f"affiliation-{a}", sim,
-                                    preempted_cycles=preempt_pay))
-            if deep_running is not None:
-                for i in range(n_aff):
-                    aff_free[i] = max(aff_free[i], deep_running.end_cycle)
-        else:
-            sim = _job_sim(job, chip, lanes_deep(chip), chip.total_cache_mb)
-            start = max(max(aff_free), job.arrival_cycle)
-            end = start + sim.cycles
-            sj = ScheduledJob(job, start, end, lanes_deep(chip).label, sim)
-            out.append(sj)
-            deep_running = sj
-            for i in range(n_aff):
-                aff_free[i] = end
-    return out
-
-
-def _working_set_bytes(job: FheJob) -> float:
-    p = job.params
-    # 2 ciphertext polys over the extended basis + accumulators
-    return 6.0 * (p.L + 1 + p.alpha) * p.n * 4.0
+    result = serve(jobs, chip, validate=True)
+    return [
+        ScheduledJob(
+            job=je.job,
+            start_cycle=je.first_start,
+            end_cycle=je.completion,
+            lanes=je.lanes,
+            sim=je.sim,
+            preempted_cycles=je.preempted_cycles,
+        )
+        for je in result.jobs
+    ]
 
 
 def avg_completion_cycles(scheduled: list[ScheduledJob]) -> float:

@@ -100,12 +100,21 @@ class SimResult:
     unit_cycles: dict
     cache_hit_ratio: float
     instr_count: int
+    freq_ghz: float | None = None  # set by finalize(); 1 GHz assumed otherwise
+
+    def __post_init__(self):
+        self._time_s: float | None = None
 
     @property
     def time_s(self) -> float:
+        """Wall-clock seconds; computed lazily so a result that was never
+        ``finalize``d still reads back (at the stored or default frequency)."""
+        if self._time_s is None:
+            self._time_s = self.cycles / ((self.freq_ghz or 1.0) * 1e9)
         return self._time_s
 
     def finalize(self, freq_ghz: float) -> "SimResult":
+        self.freq_ghz = freq_ghz
         self._time_s = self.cycles / (freq_ghz * 1e9)
         return self
 

@@ -1,0 +1,42 @@
+"""repro.serve — discrete-event multi-tenant serving for mixed FHE traffic.
+
+The online realisation of the paper's §4.2 scheduling policy:
+
+  events   — generic event heap / clock / run loop (the DES kernel)
+  policy   — FlashPolicy (shallow-per-affiliation + deep gang + priority
+             preemption with spill/restore) and the sequential baseline,
+             plus the ServingEngine and timeline-validated ServeResult
+  traffic  — seeded Poisson / trace-replay / closed-loop tenant sources
+  metrics  — SLO summary: latency & queueing percentiles, throughput,
+             utilization, fairness
+
+Quick use::
+
+    from repro.core.hardware import FLASH_FHE
+    from repro import serve
+
+    cfg = serve.traffic.PoissonConfig(rate_per_mcycle=4.0, n_jobs=64, seed=7)
+    result = serve.serve(serve.traffic.poisson_jobs(cfg), FLASH_FHE)
+    print(serve.metrics.summarize(result))
+
+``repro.core.scheduler.schedule`` is a thin compatibility wrapper over this
+package.
+"""
+
+from . import events, metrics, policy, traffic
+from .events import Event, EventLoop
+from .metrics import summarize
+from .policy import (
+    FlashPolicy,
+    JobExec,
+    JobState,
+    Segment,
+    SequentialPolicy,
+    ServeResult,
+    ServingEngine,
+    job_service_sim,
+    serve,
+    serve_source,
+    working_set_bytes,
+)
+from .traffic import ClosedLoopSource, PoissonConfig, poisson_jobs, trace_jobs

@@ -1,0 +1,106 @@
+"""Discrete-event simulation kernel: event heap, clock, run loop.
+
+Deliberately tiny and generic — the serving policies (``repro.serve.policy``)
+are the only intended client, but nothing here knows about FHE.  Events are
+plain callbacks ordered by (time, insertion sequence); the sequence number
+makes simultaneous events deterministic (submission order) and breaks heap
+ties without comparing payloads.  Cancellation is lazy: a cancelled event
+stays in the heap and is skipped when popped — O(1) cancel, which preemption
+uses to revoke a suspended job's completion event.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable
+
+
+class Event:
+    """One scheduled callback.  ``cancel()`` revokes it in O(1)."""
+
+    __slots__ = ("time", "seq", "fn", "cancelled")
+
+    def __init__(self, time: float, seq: int, fn: Callable[[], None]):
+        self.time = time
+        self.seq = seq
+        self.fn = fn
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+    def __lt__(self, other: "Event") -> bool:  # heap ordering
+        return (self.time, self.seq) < (other.time, other.seq)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        state = "cancelled" if self.cancelled else "pending"
+        return f"Event(t={self.time:.1f}, seq={self.seq}, {state})"
+
+
+class EventLoop:
+    """Monotonic clock + binary-heap run loop.
+
+    The clock unit is *cycles* throughout the serving subsystem (converted to
+    seconds only at the metrics layer, via the chip frequency).
+    """
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+        self._heap: list[Event] = []
+        self._seq = itertools.count()
+        self.processed = 0
+
+    def __len__(self) -> int:
+        return sum(1 for e in self._heap if not e.cancelled)
+
+    def call_at(self, time: float, fn: Callable[[], None]) -> Event:
+        if time < self.now:
+            raise ValueError(f"cannot schedule into the past: {time} < now={self.now}")
+        ev = Event(float(time), next(self._seq), fn)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def call_after(self, delay: float, fn: Callable[[], None]) -> Event:
+        if delay < 0:
+            raise ValueError(f"negative delay {delay}")
+        return self.call_at(self.now + delay, fn)
+
+    def peek_time(self) -> float | None:
+        """Time of the next pending event, or None when drained."""
+        while self._heap and self._heap[0].cancelled:
+            heapq.heappop(self._heap)
+        return self._heap[0].time if self._heap else None
+
+    def step(self) -> bool:
+        """Dispatch the next pending event; False when the heap is drained."""
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            assert ev.time >= self.now, "event heap violated monotonic time"
+            self.now = ev.time
+            self.processed += 1
+            ev.fn()
+            return True
+        return False
+
+    def run(self, until: float | None = None, max_events: int | None = None) -> float:
+        """Run to quiescence (or a time/event horizon); returns the final clock.
+
+        ``until`` stops *before* dispatching any event strictly later than the
+        horizon (the clock advances to the horizon).  ``max_events`` is a
+        safety valve for open-loop sources that never drain.
+        """
+        dispatched = 0
+        while True:
+            if max_events is not None and dispatched >= max_events:
+                return self.now
+            t = self.peek_time()
+            if t is None:
+                return self.now
+            if until is not None and t > until:
+                self.now = max(self.now, until)
+                return self.now
+            self.step()
+            dispatched += 1

@@ -1,0 +1,99 @@
+"""SLO metrics over a ``ServeResult``: latency percentiles, throughput,
+per-cluster utilization, queueing delay, and fairness.
+
+Everything is derived from the per-job ``Segment`` timelines the event engine
+records, so the numbers are exact (no sampling).  Cycle quantities convert to
+wall-clock through the chip frequency.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .policy import JobState, ServeResult
+
+PERCENTILES = (50.0, 95.0, 99.0)
+
+
+def _pct(values: list[float]) -> dict[str, float]:
+    if not values:
+        return {f"p{int(q)}": 0.0 for q in PERCENTILES}
+    arr = np.asarray(values, dtype=float)
+    return {f"p{int(q)}": float(np.percentile(arr, q)) for q in PERCENTILES}
+
+
+def jain_fairness(values: list[float]) -> float:
+    """Jain's index: 1.0 = perfectly fair, 1/n = one value dominates."""
+    if not values:
+        return 1.0
+    arr = np.asarray(values, dtype=float)
+    denom = len(arr) * float((arr ** 2).sum())
+    return float(arr.sum()) ** 2 / denom if denom > 0 else 1.0
+
+
+def per_affiliation_busy(result: ServeResult) -> dict[str, float]:
+    """Busy cycles per affiliation; deep gangs occupy every affiliation."""
+    n_aff = result.chip.n_affiliations if result.chip.multi_job else 1
+    busy = {f"affiliation-{a}": 0.0 for a in range(n_aff)}
+    for je in result.jobs:
+        for seg in je.segments:
+            if seg.resource in busy:
+                busy[seg.resource] += seg.cycles
+            else:  # "deep" / "whole-chip": the whole machine is occupied
+                for a in range(n_aff):
+                    busy[f"affiliation-{a}"] += seg.cycles
+    return busy
+
+
+def tenant_slowdowns(result: ServeResult) -> dict[int, float]:
+    """Mean slowdown (turnaround ÷ service) per tenant."""
+    acc: dict[int, list[float]] = {}
+    for je in result.jobs:
+        if je.state is JobState.DONE and je.service_cycles > 0:
+            acc.setdefault(je.job.tenant_id, []).append(je.turnaround / je.service_cycles)
+    return {t: float(np.mean(v)) for t, v in acc.items()}
+
+
+def summarize(result: ServeResult) -> dict[str, float]:
+    """Flat metric dict (CSV-friendly).  Keys:
+
+    latency_p50/p95/p99_cycles, latency_p99_ms — end-to-end turnaround;
+    queue_p50/p95/p99_cycles                   — arrival → first dispatch;
+    makespan_mcycles, throughput_jobs_per_mcycle;
+    util_mean, util_min, util_max              — busy/makespan per affiliation;
+    fairness_jain                              — over per-tenant mean slowdown
+                                                 (per-job when single-tenant);
+    n_jobs, n_shallow, n_deep, n_preemptions, spill_restore_mcycles.
+    """
+    done = [je for je in result.jobs if je.state is JobState.DONE]
+    lat = _pct([je.turnaround for je in done])
+    queue = _pct([je.queueing_delay for je in done])
+    mk = result.makespan
+    busy = per_affiliation_busy(result)
+    utils = [b / mk if mk > 0 else 0.0 for b in busy.values()]
+    by_tenant = tenant_slowdowns(result)
+    if len(by_tenant) > 1:
+        slow = list(by_tenant.values())
+    else:  # single tenant: fairness across individual jobs instead
+        slow = [je.turnaround / je.service_cycles for je in done if je.service_cycles > 0]
+    freq_hz = result.chip.freq_ghz * 1e9
+    out = {
+        "n_jobs": float(len(done)),
+        "n_shallow": float(sum(1 for je in done if je.kind == "shallow")),
+        "n_deep": float(sum(1 for je in done if je.kind == "deep")),
+        "makespan_mcycles": mk / 1e6,
+        "makespan_ms": mk / freq_hz * 1e3,
+        "throughput_jobs_per_mcycle": len(done) / (mk / 1e6) if mk > 0 else 0.0,
+        "util_mean": float(np.mean(utils)) if utils else 0.0,
+        "util_min": float(np.min(utils)) if utils else 0.0,
+        "util_max": float(np.max(utils)) if utils else 0.0,
+        "fairness_jain": jain_fairness(slow),
+        "n_preemptions": float(sum(je.n_preemptions for je in done)),
+        "spill_restore_mcycles": sum(je.spill_restore_cycles for je in done) / 1e6,
+    }
+    for k, v in lat.items():
+        out[f"latency_{k}_cycles"] = v
+    out["latency_p99_ms"] = lat["p99"] / freq_hz * 1e3
+    for k, v in queue.items():
+        out[f"queue_{k}_cycles"] = v
+    return out

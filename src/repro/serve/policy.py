@@ -1,0 +1,493 @@
+"""Online multi-tenant scheduling policies over the discrete-event engine.
+
+Implements the paper's §4.2 policy as a *reactive* scheduler driven by
+arrival/completion events (replacing the old one-pass offline heuristic in
+``repro.core.scheduler``):
+
+  * shallow job → exactly ONE cluster affiliation, with the affiliation's
+    bootstrappable circuit decomposed into two extra swift pipelines
+    (multi-exit — the lane math lives in ``core.simulator.lanes_shallow``);
+  * deep job → gang-scheduled across ALL bootstrappable clusters
+    (exclusive: every affiliation is occupied while a deep job runs);
+  * priority preemption: a running deep job is suspended when a
+    strictly-higher-priority shallow job arrives.  Suspension runs a proper
+    state machine (QUEUED → RUNNING → SUSPENDED → RUNNING → DONE) and charges
+    the SRAM→HBM working-set spill plus the later restore to the *deep* job's
+    remaining work — the DMA overlaps the incoming shallow job's ramp-up, so
+    affiliations free immediately (matching the paper's "avoid the convoy
+    effect" argument).  A preemption at zero progress spills nothing.
+
+  Deep jobs otherwise yield to shallow traffic (the paper schedules one
+  shallow job per affiliation to maximise throughput); a *waiting* deep job
+  with strictly higher priority than a queued shallow job drains the chip
+  instead of letting that shallow job jump ahead, so priorities mean the same
+  thing in both directions.
+
+``SequentialPolicy`` is the CraterLake / F1+ baseline: whole chip per job,
+non-preemptive, highest-priority-then-arrival at each dispatch point.
+
+Per-job service times come from the cycle-level simulator
+(``core.simulator.simulate_stream``) over planner instruction streams, so the
+fused-key-switch accounting composes directly.  Identical (chip, workload,
+kind) jobs share one memoised ``SimResult``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+import itertools
+from typing import Callable
+
+from repro.core.cache import MB
+from repro.core.hardware import ChipConfig
+from repro.core.jobs import FheJob
+from repro.core.planner import workload_stream
+from repro.core.simulator import (
+    SimResult,
+    lanes_deep,
+    lanes_shallow,
+    lanes_whole_chip,
+    simulate_stream,
+)
+
+from .events import Event, EventLoop
+
+_TOL = 1e-6  # cycle-arithmetic tolerance used by the consistency checks
+
+
+class JobState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    SUSPENDED = "suspended"
+    DONE = "done"
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One contiguous occupancy interval on a resource.
+
+    ``resource`` is ``affiliation-<i>`` for shallow placements and ``deep``
+    for gang placements (which occupy *every* affiliation).
+    """
+
+    start: float
+    end: float
+    resource: str
+
+    @property
+    def cycles(self) -> float:
+        return self.end - self.start
+
+
+@dataclasses.dataclass
+class JobExec:
+    """Execution record + suspend/resume state machine for one job."""
+
+    job: FheJob
+    service_cycles: float
+    sim: SimResult
+    lanes: str  # final placement label (affiliation-i / deep / whole-chip)
+    state: JobState = JobState.QUEUED
+    remaining: float = 0.0  # cycles left, incl. unpaid spill/restore overhead
+    segments: list[Segment] = dataclasses.field(default_factory=list)
+    first_start: float | None = None
+    completion: float | None = None
+    spill_restore_cycles: float = 0.0
+    n_preemptions: int = 0
+    _run_start: float | None = None
+    _complete_ev: Event | None = None
+
+    def __post_init__(self):
+        self.remaining = self.service_cycles
+
+    @property
+    def kind(self) -> str:
+        return self.job.kind
+
+    @property
+    def turnaround(self) -> float:
+        assert self.completion is not None, "job not finished"
+        return self.completion - self.job.arrival_cycle
+
+    @property
+    def queueing_delay(self) -> float:
+        assert self.first_start is not None, "job never started"
+        return self.first_start - self.job.arrival_cycle
+
+    @property
+    def preempted_cycles(self) -> float:
+        """Extra cycles vs an uninterrupted run: suspension gaps + spill/restore."""
+        if self.completion is None or self.first_start is None:
+            return 0.0
+        return (self.completion - self.first_start) - self.service_cycles
+
+    @property
+    def busy_cycles(self) -> float:
+        return sum(s.cycles for s in self.segments)
+
+
+def working_set_bytes(job: FheJob) -> float:
+    """SRAM-resident state a preempted deep job must spill: two ciphertext
+    polynomials over the extended basis plus key-switch accumulators."""
+    p = job.params
+    return 6.0 * (p.L + 1 + p.alpha) * p.n * 4.0
+
+
+# ---------------------------------------------------------------------------
+# service-time model (memoised cycle simulation)
+# ---------------------------------------------------------------------------
+
+_SERVICE_MEMO: dict[tuple, SimResult] = {}
+
+
+def job_service_sim(job: FheJob, chip: ChipConfig) -> SimResult:
+    """Cycle-accurate service time for one job under its granted lanes.
+
+    Identical (chip, workload, kind) pairs share one SimResult — the planner
+    stream and lane grant are functions of those alone, so the simulation is
+    too.  Callers must treat the result as read-only.
+    """
+    key = (chip, job.workload, job.kind)
+    hit = _SERVICE_MEMO.get(key)
+    if hit is not None:
+        return hit
+    if not chip.multi_job:
+        lanes, cache_mb = lanes_whole_chip(chip), chip.total_cache_mb
+    elif job.kind == "shallow":
+        # L2 is shared: a shallow job sees its L1 plus a 1/n_aff share of L2
+        lanes = lanes_shallow(chip)
+        cache_mb = chip.l1_mb_per_aff + chip.l2_mb / chip.n_affiliations
+    else:
+        lanes, cache_mb = lanes_deep(chip), chip.total_cache_mb
+    stream = workload_stream(job.workload, job.params, mode="hw")
+    sim = simulate_stream(stream, chip, lanes, cache_bytes=cache_mb * MB)
+    _SERVICE_MEMO[key] = sim
+    return sim
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+
+class _PriorityQueue:
+    """Max-priority, then FIFO-by-arrival, then submission order."""
+
+    def __init__(self):
+        self._heap: list[tuple[float, float, int, JobExec]] = []
+        self._seq = itertools.count()
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, je: JobExec) -> None:
+        heapq.heappush(self._heap, (-je.job.priority, je.job.arrival_cycle, next(self._seq), je))
+
+    def pop(self) -> JobExec:
+        return heapq.heappop(self._heap)[-1]
+
+    def peek(self) -> JobExec | None:
+        return self._heap[0][-1] if self._heap else None
+
+
+class _DeferredDispatchMixin:
+    """Coalesce dispatch: arrivals/completions enqueue state changes, and the
+    actual placement decision runs in a zero-delay follow-up event.  This makes
+    simultaneous arrivals commute — all jobs landing at cycle *t* are queued
+    before any of them is placed, so priority order (not event insertion
+    order) decides, matching the old offline sort semantics."""
+
+    loop: EventLoop | None
+    _dispatch_pending: bool
+
+    def _schedule_dispatch(self) -> None:
+        if not self._dispatch_pending:
+            self._dispatch_pending = True
+            self.loop.call_after(0.0, self._run_dispatch)
+
+    def _run_dispatch(self) -> None:
+        self._dispatch_pending = False
+        self.dispatch()
+
+
+class FlashPolicy(_DeferredDispatchMixin):
+    """The paper's §4.2 heterogeneous multi-job policy (online form)."""
+
+    def __init__(self, chip: ChipConfig):
+        assert chip.multi_job, f"{chip.name} cannot co-schedule jobs (multi_job=False)"
+        self.chip = chip
+        self.loop: EventLoop | None = None
+        self.on_complete: Callable[[JobExec], None] = lambda je: None
+        self._dispatch_pending = False
+        self.aff_running: list[JobExec | None] = [None] * chip.n_affiliations
+        self.shallow_q = _PriorityQueue()
+        self.deep_q = _PriorityQueue()
+        self.deep_active: JobExec | None = None
+
+    def bind(self, loop: EventLoop, on_complete: Callable[[JobExec], None]) -> None:
+        self.loop = loop
+        self.on_complete = on_complete
+
+    def submit(self, je: JobExec) -> None:
+        (self.shallow_q if je.kind == "shallow" else self.deep_q).push(je)
+        self._schedule_dispatch()
+
+    # -- dispatch -----------------------------------------------------------
+
+    def dispatch(self) -> None:
+        now = self.loop.now
+        self._maybe_preempt(now)
+        self._place_shallow(now)
+        self._maybe_start_deep(now)
+
+    def _maybe_preempt(self, now: float) -> None:
+        d = self.deep_active
+        top = self.shallow_q.peek()
+        if d is None or d.state is not JobState.RUNNING or top is None:
+            return
+        if top.job.priority <= d.job.priority:
+            return
+        # suspend: close the deep segment, revoke its completion, charge the
+        # SRAM→HBM spill + later restore to its remaining work
+        worked = now - d._run_start
+        d._complete_ev.cancel()
+        if worked > 0:
+            d.segments.append(Segment(d._run_start, now, "deep"))
+            pay = 2.0 * working_set_bytes(d.job) / self.chip.hbm_bytes_per_cycle
+            d.remaining = max(0.0, d.remaining - worked) + pay
+            d.spill_restore_cycles += pay
+        d.n_preemptions += 1
+        d.state = JobState.SUSPENDED
+        d._run_start = None
+        d._complete_ev = None
+
+    def _deep_fence_priority(self) -> float | None:
+        """Priority below which shallow jobs must yield to a waiting deep job."""
+        if self.deep_active is not None:  # suspended deep never fences (it was preempted)
+            return None
+        head = self.deep_q.peek()
+        return head.job.priority if head is not None else None
+
+    def _place_shallow(self, now: float) -> None:
+        if self.deep_active is not None and self.deep_active.state is JobState.RUNNING:
+            return  # deep gang owns every affiliation
+        fence = self._deep_fence_priority()
+        while len(self.shallow_q):
+            top = self.shallow_q.peek()
+            if fence is not None and top.job.priority < fence:
+                return  # drain for the higher-priority deep job
+            free = [i for i, r in enumerate(self.aff_running) if r is None]
+            if not free:
+                return
+            self._start_shallow(self.shallow_q.pop(), free[0], now)
+
+    def _start_shallow(self, je: JobExec, aff: int, now: float) -> None:
+        je.state = JobState.RUNNING
+        je.lanes = f"affiliation-{aff}"
+        je.first_start = now
+        je._run_start = now
+        self.aff_running[aff] = je
+        je._complete_ev = self.loop.call_after(je.remaining, lambda: self._finish_shallow(je, aff))
+
+    def _finish_shallow(self, je: JobExec, aff: int) -> None:
+        now = self.loop.now
+        je.segments.append(Segment(je._run_start, now, f"affiliation-{aff}"))
+        je.remaining = 0.0
+        je.state = JobState.DONE
+        je.completion = now
+        self.aff_running[aff] = None
+        self.on_complete(je)
+        self._schedule_dispatch()
+
+    def _maybe_start_deep(self, now: float) -> None:
+        if any(r is not None for r in self.aff_running):
+            return  # gang needs the whole chip
+        top = self.shallow_q.peek()
+        if self.deep_active is not None:
+            # a suspended deep resumes only once the shallow system drains
+            if self.deep_active.state is JobState.SUSPENDED and top is None:
+                self._run_deep(self.deep_active, now)
+            return
+        head = self.deep_q.peek()
+        if head is None:
+            return
+        # after _place_shallow, any still-queued shallow job is fenced behind
+        # this deep job's priority — the chip is drained, so the gang launches
+        if top is not None and top.job.priority >= head.job.priority:
+            return
+        self.deep_active = self.deep_q.pop()
+        self._run_deep(self.deep_active, now)
+
+    def _run_deep(self, d: JobExec, now: float) -> None:
+        d.state = JobState.RUNNING
+        d.lanes = lanes_deep(self.chip).label
+        if d.first_start is None:
+            d.first_start = now
+        d._run_start = now
+        d._complete_ev = self.loop.call_after(d.remaining, lambda: self._finish_deep(d))
+
+    def _finish_deep(self, d: JobExec) -> None:
+        now = self.loop.now
+        d.segments.append(Segment(d._run_start, now, "deep"))
+        d.remaining = 0.0
+        d.state = JobState.DONE
+        d.completion = now
+        self.deep_active = None
+        self.on_complete(d)
+        self._schedule_dispatch()
+
+
+class SequentialPolicy(_DeferredDispatchMixin):
+    """Homogeneous baseline (CraterLake / F1+): whole chip per job, priority-
+    then-arrival dispatch, no preemption."""
+
+    def __init__(self, chip: ChipConfig):
+        self.chip = chip
+        self.loop: EventLoop | None = None
+        self.on_complete: Callable[[JobExec], None] = lambda je: None
+        self._dispatch_pending = False
+        self.queue = _PriorityQueue()
+        self.running: JobExec | None = None
+
+    def bind(self, loop: EventLoop, on_complete: Callable[[JobExec], None]) -> None:
+        self.loop = loop
+        self.on_complete = on_complete
+
+    def submit(self, je: JobExec) -> None:
+        self.queue.push(je)
+        self._schedule_dispatch()
+
+    def dispatch(self) -> None:
+        if self.running is not None or not len(self.queue):
+            return
+        je = self.queue.pop()
+        now = self.loop.now
+        je.state = JobState.RUNNING
+        je.lanes = lanes_whole_chip(self.chip).label
+        je.first_start = now
+        je._run_start = now
+        self.running = je
+        je._complete_ev = self.loop.call_after(je.remaining, lambda: self._finish(je))
+
+    def _finish(self, je: JobExec) -> None:
+        now = self.loop.now
+        je.segments.append(Segment(je._run_start, now, "whole-chip"))
+        je.remaining = 0.0
+        je.state = JobState.DONE
+        je.completion = now
+        self.running = None
+        self.on_complete(je)
+        self._schedule_dispatch()
+
+
+def policy_for(chip: ChipConfig):
+    return FlashPolicy(chip) if chip.multi_job else SequentialPolicy(chip)
+
+
+# ---------------------------------------------------------------------------
+# engine + result
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServeResult:
+    chip: ChipConfig
+    jobs: list[JobExec]  # submission order
+    makespan: float
+    events_processed: int
+
+    def validate(self) -> "ServeResult":
+        """Timeline-consistency invariants (raises AssertionError on violation):
+        every submission completed, per-affiliation intervals never overlap,
+        and each job's run segments sum to its service time plus the
+        spill/restore overhead it was charged (work conservation)."""
+        n_aff = self.chip.n_affiliations if self.chip.multi_job else 1
+        per_resource: dict[str, list[Segment]] = {}
+        for je in self.jobs:
+            assert je.state is JobState.DONE, f"job {je.job.job_id} never completed ({je.state})"
+            assert je.completion is not None and je.first_start is not None
+            assert je.first_start >= je.job.arrival_cycle - _TOL, (
+                f"job {je.job.job_id} started before it arrived"
+            )
+            got = je.busy_cycles
+            want = je.service_cycles + je.spill_restore_cycles
+            assert abs(got - want) <= _TOL * max(1.0, want), (
+                f"job {je.job.job_id} ran {got} cycles, owed {want} "
+                f"(service {je.service_cycles} + spill/restore {je.spill_restore_cycles})"
+            )
+            for seg in je.segments:
+                assert seg.end >= seg.start - _TOL
+                if seg.resource == "deep":  # a gang occupies every affiliation
+                    for a in range(n_aff):
+                        per_resource.setdefault(f"affiliation-{a}", []).append(seg)
+                else:
+                    per_resource.setdefault(seg.resource, []).append(seg)
+        for resource, segs in per_resource.items():
+            segs.sort(key=lambda s: (s.start, s.end))
+            for prev, cur in zip(segs, segs[1:]):
+                assert cur.start >= prev.end - _TOL, (
+                    f"overlapping placements on {resource}: "
+                    f"[{prev.start}, {prev.end}) and [{cur.start}, {cur.end})"
+                )
+        return self
+
+
+class ServingEngine:
+    """Feeds arrivals into a policy over the event loop and collects results.
+
+    Open-loop: pass finished ``FheJob`` lists (arrival_cycle set).  Closed
+    loop: pass a *source* object with ``initial_jobs()`` and
+    ``on_complete(job_exec, now) -> list[FheJob]`` (see
+    ``repro.serve.traffic.ClosedLoopSource``).
+    """
+
+    def __init__(self, chip: ChipConfig, policy=None):
+        self.chip = chip
+        self.policy = policy if policy is not None else policy_for(chip)
+        self.loop = EventLoop()
+        self.jobs: list[JobExec] = []
+        self._source = None
+        self.policy.bind(self.loop, self._job_completed)
+
+    def submit(self, job: FheJob) -> JobExec:
+        sim = job_service_sim(job, self.chip)
+        je = JobExec(job=job, service_cycles=sim.cycles, sim=sim, lanes="")
+        self.jobs.append(je)
+        # clamp: integer-rounded arrivals from a closed-loop source can land a
+        # fraction of a cycle before a fractional clock (non-integral spill pay)
+        self.loop.call_at(max(self.loop.now, float(job.arrival_cycle)),
+                          lambda: self.policy.submit(je))
+        return je
+
+    def _job_completed(self, je: JobExec) -> None:
+        if self._source is not None:
+            for job in self._source.on_complete(je, self.loop.now):
+                self.submit(job)
+
+    def run(self, source=None) -> ServeResult:
+        if source is not None:
+            self._source = source
+            for job in source.initial_jobs():
+                self.submit(job)
+        self.loop.run()
+        makespan = max((je.completion for je in self.jobs), default=0.0)
+        return ServeResult(chip=self.chip, jobs=list(self.jobs),
+                           makespan=makespan, events_processed=self.loop.processed)
+
+
+def serve(jobs: list[FheJob], chip: ChipConfig, policy=None, validate: bool = True) -> ServeResult:
+    """Run an open-loop job list through the event engine; the one-call API."""
+    eng = ServingEngine(chip, policy=policy)
+    for job in jobs:
+        eng.submit(job)
+    result = eng.run()
+    return result.validate() if validate else result
+
+
+def serve_source(source, chip: ChipConfig, policy=None, validate: bool = True) -> ServeResult:
+    """Run a closed-loop traffic source (arrivals depend on completions)."""
+    eng = ServingEngine(chip, policy=policy)
+    result = eng.run(source=source)
+    return result.validate() if validate else result

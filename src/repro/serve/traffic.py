@@ -1,0 +1,138 @@
+"""Traffic generation for the serving subsystem: open-loop Poisson streams,
+trace replay, and a closed-loop "N concurrent tenants" source.
+
+All generators are seeded and fully deterministic — the same seed reproduces
+the same arrival sequence bit-for-bit (the determinism test in
+``tests/test_serving.py`` relies on this).  Times are in cycles; rates are
+jobs per megacycle so they read naturally against the simulator's outputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.jobs import FheJob, make_job
+
+from .policy import JobExec
+
+# Workload mixes over the paper's §6.1 presets.  Weights are relative
+# (normalised at draw time).
+SHALLOW_MIX: dict[str, float] = {
+    "lola_mnist_plain": 0.35,
+    "matmul": 0.30,
+    "dblookup": 0.20,
+    "lola_cifar_plain": 0.15,
+}
+DEEP_MIX: dict[str, float] = {"lstm": 0.6, "logreg": 0.4}
+# shallow-heavy mixed traffic: the paper's headline multi-tenant scenario
+MIXED_MIX: dict[str, float] = {
+    "lola_mnist_plain": 0.30,
+    "matmul": 0.25,
+    "dblookup": 0.20,
+    "lola_cifar_plain": 0.10,
+    "lstm": 0.10,
+    "logreg": 0.05,
+}
+
+
+def _normalise(weights: Mapping) -> tuple[list, np.ndarray]:
+    keys = list(weights.keys())
+    w = np.asarray([float(weights[k]) for k in keys], dtype=float)
+    total = w.sum()
+    if total <= 0:
+        raise ValueError("mix weights must sum to a positive value")
+    return keys, w / total
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonConfig:
+    """Open-loop Poisson arrivals over a workload/priority mix."""
+
+    rate_per_mcycle: float  # mean arrival rate, jobs per 1e6 cycles
+    n_jobs: int
+    mix: Mapping[str, float] = dataclasses.field(default_factory=lambda: dict(MIXED_MIX))
+    priority_mix: Mapping[int, float] = dataclasses.field(default_factory=lambda: {0: 1.0})
+    seed: int = 0
+    start_id: int = 0
+
+
+def poisson_jobs(cfg: PoissonConfig) -> list[FheJob]:
+    """Draw ``cfg.n_jobs`` arrivals with exponential inter-arrival gaps."""
+    rng = np.random.default_rng(cfg.seed)
+    names, name_p = _normalise(cfg.mix)
+    prios, prio_p = _normalise(cfg.priority_mix)
+    mean_gap = 1e6 / cfg.rate_per_mcycle
+    t = 0.0
+    jobs = []
+    for i in range(cfg.n_jobs):
+        t += float(rng.exponential(mean_gap))
+        w = names[int(rng.choice(len(names), p=name_p))]
+        pr = int(prios[int(rng.choice(len(prios), p=prio_p))])
+        jobs.append(make_job(w, priority=pr, arrival_cycle=int(round(t)),
+                             job_id=cfg.start_id + i))
+    return jobs
+
+
+def trace_jobs(rows: Iterable[Sequence | Mapping]) -> list[FheJob]:
+    """Replay a recorded trace.  Rows are ``(workload, arrival_cycle[, priority])``
+    tuples or dicts with those keys (plus optional ``job_id``/``tenant_id``)."""
+    jobs = []
+    for i, row in enumerate(rows):
+        if isinstance(row, Mapping):
+            jobs.append(make_job(row["workload"],
+                                 priority=int(row.get("priority", 0)),
+                                 arrival_cycle=int(row["arrival_cycle"]),
+                                 job_id=int(row.get("job_id", i)),
+                                 tenant_id=int(row.get("tenant_id", 0))))
+        else:
+            workload, arrival, *rest = row
+            jobs.append(make_job(workload, priority=int(rest[0]) if rest else 0,
+                                 arrival_cycle=int(arrival), job_id=i))
+    return jobs
+
+
+class ClosedLoopSource:
+    """N concurrent tenants, each keeping exactly one job in flight.
+
+    Every tenant submits its first job at cycle 0 (plus an optional think-time
+    draw) and its next job ``think_cycles`` (exponentially distributed, mean)
+    after the previous one completes, until ``jobs_per_tenant`` jobs are done.
+    Pass to ``repro.serve.serve_source`` / ``ServingEngine.run(source=...)``.
+    """
+
+    def __init__(self, n_tenants: int, jobs_per_tenant: int,
+                 mix: Mapping[str, float] | None = None,
+                 priority_mix: Mapping[int, float] | None = None,
+                 think_cycles: float = 0.0, seed: int = 0):
+        self.n_tenants = n_tenants
+        self.jobs_per_tenant = jobs_per_tenant
+        self._names, self._name_p = _normalise(mix if mix is not None else SHALLOW_MIX)
+        self._prios, self._prio_p = _normalise(priority_mix if priority_mix is not None else {0: 1.0})
+        self.think_cycles = float(think_cycles)
+        self._rng = np.random.default_rng(seed)
+        self._submitted = {t: 0 for t in range(n_tenants)}
+        self._next_id = 0
+
+    def _draw(self, tenant: int, arrival: float) -> FheJob:
+        w = self._names[int(self._rng.choice(len(self._names), p=self._name_p))]
+        pr = int(self._prios[int(self._rng.choice(len(self._prios), p=self._prio_p))])
+        job = make_job(w, priority=pr, arrival_cycle=int(round(arrival)),
+                       job_id=self._next_id, tenant_id=tenant)
+        self._next_id += 1
+        self._submitted[tenant] += 1
+        return job
+
+    def _think(self) -> float:
+        return float(self._rng.exponential(self.think_cycles)) if self.think_cycles > 0 else 0.0
+
+    def initial_jobs(self) -> list[FheJob]:
+        return [self._draw(t, self._think()) for t in range(self.n_tenants)]
+
+    def on_complete(self, je: JobExec, now: float) -> list[FheJob]:
+        tenant = je.job.tenant_id
+        if self._submitted[tenant] >= self.jobs_per_tenant:
+            return []
+        return [self._draw(tenant, now + self._think())]

@@ -1,0 +1,311 @@
+"""repro.serve tests: event kernel, scheduler invariants (no overlapping
+placements, every arrival completes, preemption conserves work), FIFO
+baseline ordering, traffic determinism, closed loop, metrics sanity, and the
+core.scheduler compatibility wrapper."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import serve
+from repro.core import hardware as H
+from repro.core import jobs as J
+from repro.core import scheduler as S
+from repro.core.simulator import SimResult
+from repro.serve.events import EventLoop
+from repro.serve.policy import JobState
+
+# cheap presets only (service sims are memoised per (chip, workload, kind))
+SHALLOW = ("matmul", "lola_mnist_plain", "dblookup")
+DEEP = ("lstm",)
+
+
+def _random_jobs(seed: int, n: int) -> list:
+    rng = random.Random(seed)
+    jobs = []
+    for i in range(n):
+        pool = SHALLOW if rng.random() < 0.8 else DEEP
+        jobs.append(J.make_job(rng.choice(pool), priority=rng.randint(0, 5),
+                               arrival_cycle=rng.randint(0, 2_000_000), job_id=i))
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# event kernel
+# ---------------------------------------------------------------------------
+
+
+def test_event_loop_orders_by_time_then_insertion():
+    loop = EventLoop()
+    seen = []
+    loop.call_at(10.0, lambda: seen.append("b"))
+    loop.call_at(5.0, lambda: seen.append("a"))
+    loop.call_at(10.0, lambda: seen.append("c"))  # same time: insertion order
+    assert loop.run() == 10.0
+    assert seen == ["a", "b", "c"]
+
+
+def test_event_loop_cancel_and_horizon():
+    loop = EventLoop()
+    seen = []
+    ev = loop.call_at(5.0, lambda: seen.append("cancelled"))
+    loop.call_at(7.0, lambda: seen.append("kept"))
+    loop.call_at(100.0, lambda: seen.append("beyond"))
+    ev.cancel()
+    assert loop.run(until=50.0) == 50.0
+    assert seen == ["kept"]
+    assert len(loop) == 1  # the beyond-horizon event is still pending
+    loop.run()
+    assert seen == ["kept", "beyond"]
+
+
+def test_event_loop_rejects_past_and_negative():
+    loop = EventLoop()
+    loop.call_at(5.0, lambda: None)
+    loop.run()
+    with pytest.raises(ValueError):
+        loop.call_at(1.0, lambda: None)
+    with pytest.raises(ValueError):
+        loop.call_after(-1.0, lambda: None)
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants (property tests over random job mixes)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n=st.integers(min_value=1, max_value=12))
+def test_flash_policy_invariants(seed, n):
+    """validate() asserts: every arrival completes, per-affiliation intervals
+    never overlap (deep gangs occupy all), run segments sum to service +
+    spill/restore (preemption conserves work)."""
+    result = serve.serve(_random_jobs(seed, n), H.FLASH_FHE, validate=True)
+    assert len(result.jobs) == n
+    for je in result.jobs:
+        assert je.state is JobState.DONE
+        assert je.completion >= je.job.arrival_cycle
+        if je.kind == "shallow":
+            assert je.n_preemptions == 0  # only deep jobs are ever preempted
+            assert je.lanes.startswith("affiliation-")
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n=st.integers(min_value=1, max_value=10))
+def test_sequential_policy_invariants(seed, n):
+    result = serve.serve(_random_jobs(seed, n), H.CRATERLAKE, validate=True)
+    # non-preemptive whole-chip baseline: one contiguous segment per job
+    for je in result.jobs:
+        assert len(je.segments) == 1
+        assert je.spill_restore_cycles == 0.0
+
+
+def test_sequential_fifo_priority_ordering():
+    """Baseline dispatch is highest-priority-then-arrival at every decision
+    point; with simultaneous arrivals the start order must be the priority
+    sort, not the submission order."""
+    jobs = [J.make_job("matmul", priority=p, arrival_cycle=0, job_id=i)
+            for i, p in enumerate([1, 4, 0, 3, 2])]
+    result = serve.serve(jobs, H.CRATERLAKE)
+    by_start = sorted(result.jobs, key=lambda je: je.first_start)
+    assert [je.job.priority for je in by_start] == [4, 3, 2, 1, 0]
+    # work-conserving: no idle gaps between consecutive jobs
+    for prev, cur in zip(by_start, by_start[1:]):
+        assert cur.first_start == pytest.approx(prev.completion)
+
+
+# ---------------------------------------------------------------------------
+# preemption state machine
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_conserves_work_and_charges_deep():
+    deep = J.make_job("lstm", priority=0, arrival_cycle=0, job_id=0)
+    sh = J.make_job("matmul", priority=5, arrival_cycle=1000, job_id=1)
+    result = serve.serve([deep, sh], H.FLASH_FHE, validate=True)
+    d = next(je for je in result.jobs if je.kind == "deep")
+    s = next(je for je in result.jobs if je.kind == "shallow")
+    assert s.first_start == pytest.approx(1000)  # no convoy effect
+    assert d.n_preemptions == 1
+    assert d.state is JobState.DONE
+    assert d.spill_restore_cycles > 0
+    # work conservation: run segments == service + spill/restore, exactly
+    assert d.busy_cycles == pytest.approx(d.service_cycles + d.spill_restore_cycles)
+    # the deep job lost the suspension gap plus the spill/restore overhead
+    assert d.preempted_cycles == pytest.approx(
+        s.service_cycles + d.spill_restore_cycles)
+
+
+def test_equal_priority_shallow_does_not_preempt():
+    deep = J.make_job("lstm", priority=3, arrival_cycle=0, job_id=0)
+    sh = J.make_job("matmul", priority=3, arrival_cycle=1000, job_id=1)
+    result = serve.serve([deep, sh], H.FLASH_FHE)
+    d = next(je for je in result.jobs if je.kind == "deep")
+    s = next(je for je in result.jobs if je.kind == "shallow")
+    assert d.n_preemptions == 0
+    assert s.first_start >= d.completion  # shallow waited for the gang
+
+
+def test_higher_priority_deep_fences_shallow():
+    """A waiting deep job with strictly higher priority drains the chip:
+    lower-priority shallow arrivals must not jump ahead of it."""
+    deep = J.make_job("lstm", priority=9, arrival_cycle=0, job_id=0)
+    sh = J.make_job("matmul", priority=0, arrival_cycle=0, job_id=1)
+    result = serve.serve([deep, sh], H.FLASH_FHE)
+    d = next(je for je in result.jobs if je.kind == "deep")
+    s = next(je for je in result.jobs if je.kind == "shallow")
+    assert d.first_start == pytest.approx(0.0)
+    assert s.first_start >= d.completion
+
+
+def test_zero_progress_preemption_spills_nothing():
+    """Suspending a deep job that has not executed a cycle costs no spill."""
+    deep = J.make_job("lstm", priority=0, arrival_cycle=0, job_id=0)
+    # arrives one dispatch round later but before the deep job advances
+    sh = J.make_job("matmul", priority=5, arrival_cycle=0, job_id=1)
+    result = serve.serve([deep, sh], H.FLASH_FHE, validate=True)
+    d = next(je for je in result.jobs if je.kind == "deep")
+    assert d.spill_restore_cycles == 0.0  # shallow won placement at t=0
+    assert d.busy_cycles == pytest.approx(d.service_cycles)
+
+
+# ---------------------------------------------------------------------------
+# traffic generation
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_stream_deterministic():
+    cfg = serve.PoissonConfig(rate_per_mcycle=5.0, n_jobs=40, seed=123)
+    a, b = serve.poisson_jobs(cfg), serve.poisson_jobs(cfg)
+    assert a == b
+    c = serve.poisson_jobs(serve.PoissonConfig(rate_per_mcycle=5.0, n_jobs=40, seed=124))
+    assert a != c
+    assert [j.job_id for j in a] == list(range(40))
+    arrivals = [j.arrival_cycle for j in a]
+    assert arrivals == sorted(arrivals)
+
+
+def test_serving_end_to_end_deterministic():
+    cfg = serve.PoissonConfig(rate_per_mcycle=8.0, n_jobs=24,
+                              mix=serve.traffic.SHALLOW_MIX,
+                              priority_mix={0: 0.5, 5: 0.5}, seed=7)
+    m1 = serve.summarize(serve.serve(serve.poisson_jobs(cfg), H.FLASH_FHE))
+    m2 = serve.summarize(serve.serve(serve.poisson_jobs(cfg), H.FLASH_FHE))
+    assert m1 == m2
+
+
+def test_trace_jobs_tuples_and_dicts():
+    tup = serve.trace_jobs([("matmul", 0), ("lstm", 500, 2)])
+    assert tup[0].kind == "shallow" and tup[1].priority == 2
+    dic = serve.trace_jobs([{"workload": "matmul", "arrival_cycle": 10,
+                             "priority": 1, "job_id": 42, "tenant_id": 3}])
+    assert dic[0].job_id == 42 and dic[0].tenant_id == 3
+
+
+def test_closed_loop_survives_fractional_clock():
+    """Regression: a non-integral spill pay (e.g. 1.2 GHz → fractional
+    hbm_bytes_per_cycle) makes the clock fractional, and the closed-loop
+    source's integer-rounded arrivals can land a fraction of a cycle in the
+    past — the engine must clamp instead of raising."""
+    import dataclasses
+
+    chip = dataclasses.replace(H.FLASH_FHE, name="flash-1p2ghz", freq_ghz=1.2)
+    src = serve.ClosedLoopSource(n_tenants=6, jobs_per_tenant=4,
+                                 mix=serve.traffic.MIXED_MIX,
+                                 priority_mix={0: 0.5, 5: 0.5},
+                                 think_cycles=10_000, seed=4)
+    result = serve.serve_source(src, chip, validate=True)
+    assert len(result.jobs) == 24
+    assert sum(je.n_preemptions for je in result.jobs) >= 1
+
+
+def test_closed_loop_tenants_complete_all_jobs():
+    src = serve.ClosedLoopSource(n_tenants=5, jobs_per_tenant=3,
+                                 mix=serve.traffic.SHALLOW_MIX,
+                                 think_cycles=10_000, seed=2)
+    result = serve.serve_source(src, H.FLASH_FHE, validate=True)
+    assert len(result.jobs) == 15
+    per_tenant = {}
+    for je in result.jobs:
+        per_tenant[je.job.tenant_id] = per_tenant.get(je.job.tenant_id, 0) + 1
+        assert je.state is JobState.DONE
+    assert per_tenant == {t: 3 for t in range(5)}
+    # one job in flight per tenant: a tenant's jobs never overlap in time
+    for t in range(5):
+        mine = sorted((je for je in result.jobs if je.job.tenant_id == t),
+                      key=lambda je: je.job.arrival_cycle)
+        for prev, cur in zip(mine, mine[1:]):
+            assert cur.job.arrival_cycle >= prev.completion
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_sanity():
+    cfg = serve.PoissonConfig(rate_per_mcycle=6.0, n_jobs=32, seed=5,
+                              mix=serve.traffic.SHALLOW_MIX)
+    m = serve.summarize(serve.serve(serve.poisson_jobs(cfg), H.FLASH_FHE))
+    assert m["latency_p50_cycles"] <= m["latency_p95_cycles"] <= m["latency_p99_cycles"]
+    assert m["queue_p50_cycles"] <= m["queue_p99_cycles"]
+    assert 0.0 < m["util_mean"] <= 1.0 and m["util_max"] <= 1.0
+    assert 0.0 < m["fairness_jain"] <= 1.0
+    assert m["throughput_jobs_per_mcycle"] > 0
+    assert m["n_jobs"] == 32 and m["n_deep"] == 0
+
+
+def test_utilization_counts_deep_on_all_affiliations():
+    result = serve.serve([J.make_job("lstm", job_id=0)], H.FLASH_FHE)
+    busy = serve.metrics.per_affiliation_busy(result)
+    assert len(busy) == H.FLASH_FHE.n_affiliations
+    assert len(set(busy.values())) == 1  # gang occupies every affiliation equally
+    m = serve.summarize(result)
+    assert m["util_mean"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# core.scheduler compatibility wrapper
+# ---------------------------------------------------------------------------
+
+
+def test_wrapper_matches_engine():
+    jobs = _random_jobs(seed=99, n=8)
+    sched = S.schedule(jobs, H.FLASH_FHE)
+    result = serve.serve(jobs, H.FLASH_FHE)
+    assert len(sched) == len(result.jobs)
+    for sj, je in zip(sched, result.jobs):
+        assert sj.job is je.job
+        assert sj.start_cycle == je.first_start
+        assert sj.end_cycle == je.completion
+        assert sj.lanes == je.lanes
+    assert S.makespan(sched) == result.makespan
+
+
+def test_wrapper_preempted_cycles_reported():
+    """Regression for the old `preempted_cycles=preempt_pay` (always 0.0) bug."""
+    deep = J.make_job("lstm", priority=0, arrival_cycle=0, job_id=0)
+    sh = J.make_job("matmul", priority=5, arrival_cycle=1000, job_id=1)
+    sched = S.schedule([deep, sh], H.FLASH_FHE)
+    d = next(s for s in sched if s.job.kind == "deep")
+    assert d.preempted_cycles > 0
+    assert d.end_cycle - d.start_cycle == pytest.approx(
+        d.sim.cycles + d.preempted_cycles)
+
+
+# ---------------------------------------------------------------------------
+# SimResult.time_s regression (lazy finalize)
+# ---------------------------------------------------------------------------
+
+
+def test_sim_result_time_s_without_finalize():
+    r = SimResult(cycles=3e9, hbm_bytes=0.0, unit_cycles={}, cache_hit_ratio=0.0,
+                  instr_count=0)
+    assert r.time_s == pytest.approx(3.0)  # defaults to 1 GHz
+    assert r.finalize(2.0).time_s == pytest.approx(1.5)
+    r2 = SimResult(cycles=3e9, hbm_bytes=0.0, unit_cycles={}, cache_hit_ratio=0.0,
+                   instr_count=0, freq_ghz=3.0)
+    assert r2.time_s == pytest.approx(1.0)  # lazy, from the stored frequency

@@ -1,0 +1,157 @@
+"""Fleet-serving benchmark: throughput and p99 latency vs chip count (1→8)
+for all four router policies over shallow-only / deep-only / mixed / skewed
+arrival streams.
+
+Each scenario draws one seeded stream and serves it on FLASH-FHE fleets of
+growing size through ``repro.serve.cluster`` (one shared event loop, per-chip
+warm-sets with HBM-priced cold starts).  Every run re-validates the fleet
+invariants (each job on exactly one chip, per-chip timelines overlap-free,
+work conservation penalty-inclusive).
+
+The ``skewed`` scenario is the router stress test: a mixed background (15%
+deep jobs that gang-block a whole chip for 3–6 Mcycles) plus one bursty
+tenant dumping 16-job shallow bursts — blind round-robin keeps feeding
+blocked chips while join-shortest-queue routes around them.
+
+Gates (exit non-zero on violation):
+  (a) shallow_only: 4-chip jsq fleet throughput ≥ 3× the single chip;
+  (b) skewed: jsq strictly beats round_robin on p99 latency at 4 chips.
+
+    PYTHONPATH=src python -m benchmarks.cluster_bench --smoke --out cluster_smoke.csv
+    PYTHONPATH=src python -m benchmarks.cluster_bench            # full sweep (1→8 chips)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro import serve
+from repro.core.hardware import FLASH_FHE
+from repro.serve.cluster import ROUTERS
+
+THROUGHPUT_GATE_X = 3.0  # 4-chip fleet must deliver ≥ this × single-chip throughput
+
+
+def scenarios(smoke: bool) -> dict[str, list]:
+    """Seeded streams.  Rates are sized against measured FLASH-FHE service
+    times (shallow mix ≈ 0.156 Mcycles ⇒ ~51 jobs/Mcycle per chip; deep mix
+    ≈ 4.4 Mcycles whole-chip): shallow_only offers ~6× one chip, deep_only
+    ~4×, mixed ~3× — so the small fleets run saturated and the sweep shows
+    where arrival-bound replaces work-bound."""
+    scale = 1 if smoke else 3
+    shallow = serve.PoissonConfig(rate_per_mcycle=300.0, n_jobs=320 * scale,
+                                  mix=serve.traffic.SHALLOW_MIX,
+                                  priority_mix={0: 0.7, 5: 0.3}, seed=11)
+    deep = serve.PoissonConfig(rate_per_mcycle=0.9, n_jobs=16 * scale,
+                               mix=serve.traffic.DEEP_MIX, seed=13)
+    mixed = serve.PoissonConfig(rate_per_mcycle=4.0, n_jobs=96 * scale,
+                                mix=serve.traffic.MIXED_MIX,
+                                priority_mix={0: 0.6, 5: 0.4}, seed=17)
+    skewed = serve.BurstyConfig(
+        base=serve.PoissonConfig(rate_per_mcycle=8.0, n_jobs=64 * scale,
+                                 mix=serve.traffic.MIXED_MIX,
+                                 priority_mix={0: 0.7, 5: 0.3}, seed=17),
+        n_bursts=6 * scale, burst_size=16, intra_gap_cycles=2_000.0,
+        burst_mix=serve.traffic.SHALLOW_MIX)
+    return {
+        "shallow_only": serve.poisson_jobs(shallow),
+        "deep_only": serve.poisson_jobs(deep),
+        "mixed": serve.poisson_jobs(mixed),
+        "skewed": serve.bursty_jobs(skewed),
+    }
+
+
+def chip_counts(smoke: bool) -> tuple[int, ...]:
+    return (1, 2, 4) if smoke else (1, 2, 4, 8)
+
+
+def run(smoke: bool = True) -> list[dict]:
+    rows = []
+    for scen, jobs in scenarios(smoke).items():
+        for router in ROUTERS:
+            for n in chip_counts(smoke):
+                t0 = time.perf_counter()
+                result = serve.serve_cluster(jobs, FLASH_FHE, n_chips=n,
+                                             router=router, validate=True)
+                m = serve.summarize(result)
+                rows.append({"scenario": scen, "router": router, "n_chips": n,
+                             "sim_wall_s": round(time.perf_counter() - t0, 3), **m})
+    return rows
+
+
+def _row(rows: list[dict], scen: str, router: str, n: int) -> dict:
+    return next(r for r in rows
+                if r["scenario"] == scen and r["router"] == router and r["n_chips"] == n)
+
+
+def check_gates(rows: list[dict]) -> list[str]:
+    """Scale-out acceptance gates — returns failure messages, [] = pass."""
+    failures = []
+    one = _row(rows, "shallow_only", "jsq", 1)
+    four = _row(rows, "shallow_only", "jsq", 4)
+    ratio = (four["throughput_jobs_per_mcycle"] / one["throughput_jobs_per_mcycle"]
+             if one["throughput_jobs_per_mcycle"] > 0 else 0.0)
+    if ratio < THROUGHPUT_GATE_X:
+        failures.append(
+            f"shallow_only: 4-chip throughput only {ratio:.2f}× single chip "
+            f"(gate: ≥ {THROUGHPUT_GATE_X}×)")
+    rr = _row(rows, "skewed", "round_robin", 4)
+    jsq = _row(rows, "skewed", "jsq", 4)
+    if not jsq["latency_p99_cycles"] < rr["latency_p99_cycles"]:
+        failures.append(
+            f"skewed: jsq p99 {jsq['latency_p99_cycles']:.4g} not < "
+            f"round_robin p99 {rr['latency_p99_cycles']:.4g} at 4 chips")
+    return failures
+
+
+def write_csv(rows: list[dict], path: str) -> None:
+    cols = list(rows[0].keys())
+    with open(path, "w") as fh:
+        fh.write(",".join(cols) + "\n")
+        for r in rows:
+            fh.write(",".join(f"{r[c]:.6g}" if isinstance(r[c], float) else str(r[c])
+                              for c in cols) + "\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="small streams, chips 1/2/4 (CI)")
+    ap.add_argument("--out", default=None, help="write rows to this CSV file")
+    args = ap.parse_args(argv)
+
+    rows = run(smoke=args.smoke)
+    print(f"{'scenario':13s} {'router':12s} {'chips':>5s} {'thr/Mcyc':>9s} {'p99':>10s} "
+          f"{'queue p99':>11s} {'makespan':>10s} {'imbal':>6s} {'cold':>5s}")
+    for r in rows:
+        print(f"{r['scenario']:13s} {r['router']:12s} {int(r['n_chips']):5d} "
+              f"{r['throughput_jobs_per_mcycle']:9.1f} {r['latency_p99_cycles']/1e6:9.2f}M "
+              f"{r['queue_p99_cycles']/1e6:10.2f}M {r['makespan_mcycles']:9.2f}M "
+              f"{r['chip_util_imbalance']:6.3f} {int(r['n_cold_starts']):5d}")
+
+    one = _row(rows, "shallow_only", "jsq", 1)
+    four = _row(rows, "shallow_only", "jsq", 4)
+    print(f"[cluster] shallow_only jsq: 4-chip throughput "
+          f"{four['throughput_jobs_per_mcycle']/one['throughput_jobs_per_mcycle']:.2f}× "
+          f"single chip (gate ≥ {THROUGHPUT_GATE_X}×)")
+    rr, jsq = _row(rows, "skewed", "round_robin", 4), _row(rows, "skewed", "jsq", 4)
+    print(f"[cluster] skewed @4 chips: p99 jsq {jsq['latency_p99_cycles']/1e6:.2f}M vs "
+          f"round_robin {rr['latency_p99_cycles']/1e6:.2f}M "
+          f"({rr['latency_p99_cycles']/jsq['latency_p99_cycles']:.2f}× better)")
+
+    failures = check_gates(rows)
+    if failures:
+        for f in failures:
+            print(f"[cluster] GATE VIOLATED — {f}", file=sys.stderr)
+    else:
+        print("[cluster] scale-out gates passed; fleet timelines validated "
+              "(unique placement, no overlap, work conservation)")
+    if args.out:
+        write_csv(rows, args.out)
+        print(f"[cluster] wrote {len(rows)} rows to {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

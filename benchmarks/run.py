@@ -59,6 +59,21 @@ def emit_serving(emit, smoke: bool) -> None:
     emit("serving.claim_flash_beats_craterlake", int(not failures))
 
 
+def emit_cluster(emit, smoke: bool) -> None:
+    """Fleet scale-out: throughput/p99 per (scenario, router, chips) + gates."""
+    from . import cluster_bench
+
+    rows = cluster_bench.run(smoke=smoke)
+    for r in rows:
+        prefix = f"cluster.{r['scenario']}.{r['router']}.chips{int(r['n_chips'])}"
+        for key in ("latency_p99_cycles", "queue_p99_cycles", "makespan_mcycles",
+                    "throughput_jobs_per_mcycle", "chip_util_imbalance",
+                    "fairness_jain_chips", "n_cold_starts"):
+            emit(f"{prefix}.{key}", r[key])
+    failures = cluster_bench.check_gates(rows)
+    emit("cluster.gates_scaleout_and_jsq", int(not failures))
+
+
 def emit_paper_figs(emit) -> None:
     from . import paper_figs, roofline_table
 
@@ -121,7 +136,8 @@ def emit_paper_figs(emit) -> None:
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="fast CI pass: fused-vs-staged key-switch only, small ring")
+                    help="fast CI pass: fused-vs-staged key-switch (small ring) "
+                         "+ fleet scale-out smoke")
     ap.add_argument("--out", default=None, help="also write CSV rows to this file")
     ap.add_argument("--iters", type=int, default=3, help="timing iterations per config")
     args = ap.parse_args(argv)
@@ -130,6 +146,7 @@ def main(argv=None) -> None:
     t0 = time.time()
     try:
         emit_fusedks(emit, smoke=args.smoke, iters=args.iters)
+        emit_cluster(emit, smoke=args.smoke)
         if not args.smoke:
             emit_paper_figs(emit)
             emit_serving(emit, smoke=False)

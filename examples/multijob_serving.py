@@ -9,7 +9,10 @@ Three stages:
   3. an actual serving scenario: a seeded shallow-heavy Poisson stream with a
      deep background and priority preemption, plus a closed-loop "N tenants"
      run — SLO metrics (p50/p99 latency, queueing, utilization, fairness)
-     per chip.
+     per chip;
+  4. fleet serving: one saturating arrival stream sharded across 1/2/4
+     FLASH-FHE chips by the cluster router (throughput scaling), and a skewed
+     bursty-tenant stream comparing all four dispatch policies on p99.
 
     PYTHONPATH=src python examples/multijob_serving.py
 """
@@ -79,11 +82,44 @@ def closed_loop_serving():
           f"tenant fairness {m['fairness_jain']:.3f}")
 
 
+def fleet_serving():
+    # one chip saturates under this shallow-heavy stream (~6× its capacity);
+    # the cluster router turns extra chips into nearly-linear throughput
+    cfg = serve.PoissonConfig(rate_per_mcycle=300.0, n_jobs=320,
+                              mix=serve.traffic.SHALLOW_MIX,
+                              priority_mix={0: 0.7, 5: 0.3}, seed=11)
+    jobs = serve.poisson_jobs(cfg)
+    print("[fleet] shallow-heavy stream (320 jobs, ~6× one chip) on growing fleets:")
+    base = None
+    for n in (1, 2, 4):
+        m = serve.summarize(serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=n, router="jsq"))
+        base = base or m["throughput_jobs_per_mcycle"]
+        print(f"[fleet]   {n} chip(s): {m['throughput_jobs_per_mcycle']:6.1f} jobs/Mcycle "
+              f"({m['throughput_jobs_per_mcycle']/base:.2f}×)  "
+              f"p99 {m['latency_p99_cycles']/1e6:5.2f}M  "
+              f"imbalance {m['chip_util_imbalance']:.3f}  "
+              f"cold starts {int(m['n_cold_starts'])}")
+
+    skew = serve.BurstyConfig(
+        base=serve.PoissonConfig(rate_per_mcycle=8.0, n_jobs=64,
+                                 mix=serve.traffic.MIXED_MIX,
+                                 priority_mix={0: 0.7, 5: 0.3}, seed=17),
+        n_bursts=6, burst_size=16, burst_mix=serve.traffic.SHALLOW_MIX)
+    bjobs = serve.bursty_jobs(skew)
+    print("[fleet] skewed bursty-tenant stream on 4 chips, per router policy:")
+    for router in ("round_robin", "po2", "jsq", "affinity"):
+        m = serve.summarize(serve.serve_cluster(bjobs, H.FLASH_FHE, n_chips=4, router=router))
+        print(f"[fleet]   {router:12s}: p99 {m['latency_p99_cycles']/1e6:6.2f}M  "
+              f"makespan {m['makespan_mcycles']:6.1f}M  "
+              f"chip fairness {m['fairness_jain_chips']:.3f}")
+
+
 def main():
     numeric_affiliations()
     makespan_comparison()
     open_loop_serving()
     closed_loop_serving()
+    fleet_serving()
 
 
 if __name__ == "__main__":

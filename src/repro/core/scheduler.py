@@ -34,6 +34,7 @@ class ScheduledJob:
     lanes: str
     sim: SimResult
     preempted_cycles: float = 0.0
+    chip_index: int = 0  # which fleet chip ran the job (0 when n_chips == 1)
 
     @property
     def completion_cycle(self) -> float:
@@ -44,16 +45,25 @@ class ScheduledJob:
         return self.end_cycle - self.job.arrival_cycle
 
 
-def schedule(jobs: list[FheJob], chip: ChipConfig) -> list[ScheduledJob]:
+def schedule(jobs: list[FheJob], chip: ChipConfig, n_chips: int = 1,
+             router: str = "jsq") -> list[ScheduledJob]:
     """Run ``jobs`` through the event-driven serving engine; returns per-job
     placement and completion in submission order.  Timeline consistency
     (no overlapping placements, work conservation) is asserted on every call.
+
+    ``n_chips > 1`` shards the stream across a fleet of identical chips via
+    ``repro.serve.cluster`` (dispatch policy = ``router``); each returned
+    ``ScheduledJob.chip_index`` names the chip that ran it.
     """
     # deferred import: repro.core.__init__ imports this module, and the serve
     # package imports repro.core submodules — a top-level import would cycle
+    from repro.serve.cluster import serve_cluster
     from repro.serve.policy import serve
 
-    result = serve(jobs, chip, validate=True)
+    if n_chips <= 1:
+        jes = serve(jobs, chip, validate=True).jobs
+    else:
+        jes = serve_cluster(jobs, chip, n_chips=n_chips, router=router, validate=True).jobs
     return [
         ScheduledJob(
             job=je.job,
@@ -62,8 +72,9 @@ def schedule(jobs: list[FheJob], chip: ChipConfig) -> list[ScheduledJob]:
             lanes=je.lanes,
             sim=je.sim,
             preempted_cycles=je.preempted_cycles,
+            chip_index=je.chip_index,
         )
-        for je in result.jobs
+        for je in jes
     ]
 
 

@@ -6,9 +6,14 @@ The online realisation of the paper's §4.2 scheduling policy:
   policy   — FlashPolicy (shallow-per-affiliation + deep gang + priority
              preemption with spill/restore) and the sequential baseline,
              plus the ServingEngine and timeline-validated ServeResult
-  traffic  — seeded Poisson / trace-replay / closed-loop tenant sources
+  cluster  — multi-chip scale-out: a DES front-end router sharding one
+             arrival stream over N engines in one shared loop (round-robin /
+             join-shortest-queue / power-of-two / workload-affinity, with a
+             per-chip warm-set cold-start model)
+  traffic  — seeded Poisson / sharded / bursty / trace-replay / closed-loop
+             tenant sources (multi-source RNGs via SeedSequence.spawn)
   metrics  — SLO summary: latency & queueing percentiles, throughput,
-             utilization, fairness
+             utilization (+ per-chip imbalance), fairness, starvation
 
 Quick use::
 
@@ -19,13 +24,18 @@ Quick use::
     result = serve.serve(serve.traffic.poisson_jobs(cfg), FLASH_FHE)
     print(serve.metrics.summarize(result))
 
+    fleet = serve.serve_cluster(serve.traffic.poisson_jobs(cfg), FLASH_FHE,
+                                n_chips=4, router="jsq")
+    print(serve.summarize(fleet))
+
 ``repro.core.scheduler.schedule`` is a thin compatibility wrapper over this
-package.
+package (``n_chips=`` routes through the cluster).
 """
 
-from . import events, metrics, policy, traffic
+from . import cluster, events, metrics, policy, traffic
+from .cluster import ClusterConfig, ClusterResult, ClusterRouter, serve_cluster
 from .events import Event, EventLoop
-from .metrics import summarize
+from .metrics import max_queueing_by_kind, summarize, summarize_cluster
 from .policy import (
     FlashPolicy,
     JobExec,
@@ -39,4 +49,12 @@ from .policy import (
     serve_source,
     working_set_bytes,
 )
-from .traffic import ClosedLoopSource, PoissonConfig, poisson_jobs, trace_jobs
+from .traffic import (
+    BurstyConfig,
+    ClosedLoopSource,
+    PoissonConfig,
+    bursty_jobs,
+    poisson_jobs,
+    sharded_poisson_jobs,
+    trace_jobs,
+)

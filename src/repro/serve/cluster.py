@@ -1,0 +1,245 @@
+"""Multi-chip serving scale-out: a DES front-end router over N FLASH-FHE chips.
+
+One FLASH-FHE die saturates quickly under shallow-heavy Poisson streams (8
+affiliations × ~0.15 Mcycle shallow services ≈ 50 jobs/Mcycle); the ROADMAP's
+"millions of users" north star is a fleet problem.  This module shards a
+single arrival stream across ``n_chips`` per-chip ``ServingEngine``s that all
+tick inside ONE shared ``EventLoop`` — the router is itself a discrete-event
+component: each arrival fires a routing event, the chosen engine schedules the
+job, and completions flow back through the engine's ``on_job_complete`` hook
+to keep the router's backlog estimates exact.
+
+Dispatch policies (``ClusterConfig.router``):
+
+  round_robin  — cyclic, state-free; the baseline every queueing text beats
+  jsq          — join-shortest-queue by *estimated backlog cycles* (the sum of
+                 outstanding routed service demand per chip); near-optimal
+                 when service demand is known, as it is here (the cycle-level
+                 simulator prices every job before placement)
+  po2          — power-of-two-choices: sample two chips with the router's own
+                 seeded RNG, keep the shorter backlog; O(1) state reads with
+                 most of jsq's benefit (Mitzenmacher's classic result)
+  affinity     — workload-affinity: route to the chip minimising
+                 ``backlog + cold_start_penalty``, where the penalty is the
+                 HBM cost of faulting the job's KSK/plaintext working set
+                 (``working_set_bytes / hbm_bytes_per_cycle × cold_factor``)
+                 into a chip whose warm-set doesn't hold it.  With penalties
+                 zeroed this degrades to jsq exactly.
+
+Warm-set model: every chip keeps an LRU of workload working sets capped at its
+shared-L2 capacity (configurable).  ALL policies pay the cold-start penalty on
+a warm-set miss — residency is a property of the chip, not of the router —
+but only ``affinity`` *steers around* it.  The penalty is charged into the
+job's service demand (``ServingEngine.submit(extra_cycles=...)``) so the
+per-chip timeline invariants (work conservation, no overlap) hold
+penalty-inclusive and ``ClusterResult.validate`` can re-assert them.
+
+Quick use::
+
+    from repro.core.hardware import FLASH_FHE
+    from repro import serve
+
+    jobs = serve.poisson_jobs(serve.PoissonConfig(rate_per_mcycle=200.0,
+                                                  n_jobs=320, seed=7))
+    result = serve.serve_cluster(jobs, FLASH_FHE, n_chips=4, router="jsq")
+    print(serve.summarize(result))          # fleet-level SLOs
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core.cache import MB
+from repro.core.hardware import ChipConfig
+from repro.core.jobs import FheJob
+
+from .events import EventLoop
+from .policy import JobExec, ServeResult, ServingEngine, working_set_bytes
+
+ROUTERS = ("round_robin", "jsq", "po2", "affinity")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """Fleet shape + router policy + warm-set/cold-start model."""
+
+    n_chips: int
+    router: str = "jsq"
+    seed: int = 0  # router-local RNG (po2 sampling) — split off via SeedSequence
+    cold_start: bool = True  # model warm-set misses at all?
+    cold_factor: float = 2.0  # penalty = factor × working_set_bytes / hbm_B_per_cycle
+    warm_capacity_mb: float | None = None  # per-chip warm-set cap; default: chip L2
+
+    def __post_init__(self):
+        if self.n_chips < 1:
+            raise ValueError(f"n_chips must be >= 1, got {self.n_chips}")
+        if self.router not in ROUTERS:
+            raise ValueError(f"unknown router {self.router!r}; choose from {ROUTERS}")
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    """Per-chip timelines + the merged fleet view."""
+
+    chip: ChipConfig
+    config: ClusterConfig
+    chip_results: list[ServeResult]  # NB: each carries the SHARED loop's event
+    # total in events_processed (per-chip attribution is not meaningful when
+    # one clock drives every engine); the fleet-wide count lives below
+    jobs: list[JobExec]  # submission order (matching ``serve.serve`` semantics)
+    placements: dict[int, int]  # job_id -> chip index
+    makespan: float
+    events_processed: int
+
+    @property
+    def n_chips(self) -> int:
+        return self.config.n_chips
+
+    def validate(self) -> "ClusterResult":
+        """Fleet invariants on top of each chip's own ``ServeResult.validate``:
+        every submitted job completed on EXACTLY one chip, the recorded
+        placements match the per-chip timelines, and the fleet makespan is the
+        max over chips."""
+        for r in self.chip_results:
+            r.validate()
+        seen: dict[int, int] = {}
+        for i, r in enumerate(self.chip_results):
+            for je in r.jobs:
+                assert je.job.job_id not in seen, (
+                    f"job {je.job.job_id} appears on chips {seen[je.job.job_id]} and {i}"
+                )
+                assert je.chip_index == i, (
+                    f"job {je.job.job_id} tagged chip {je.chip_index}, found on chip {i}"
+                )
+                seen[je.job.job_id] = i
+        assert seen == self.placements, "router placements disagree with chip timelines"
+        assert len(self.jobs) == len(seen), (
+            f"{len(self.jobs)} jobs routed, {len(seen)} found on chips"
+        )
+        per_chip_mk = max((r.makespan for r in self.chip_results), default=0.0)
+        assert abs(self.makespan - per_chip_mk) <= 1e-6 * max(1.0, per_chip_mk)
+        return self
+
+
+class ClusterRouter:
+    """Front-end DES router: shards one arrival stream over N engines."""
+
+    def __init__(self, chip: ChipConfig, config: ClusterConfig, loop: EventLoop | None = None):
+        self.chip = chip
+        self.config = config
+        self.loop = loop if loop is not None else EventLoop()
+        self.engines = [ServingEngine(chip, loop=self.loop) for _ in range(config.n_chips)]
+        for i, eng in enumerate(self.engines):
+            eng.on_job_complete = functools.partial(self._completed, i)
+        # estimated outstanding service cycles per chip: the simulator prices
+        # each job at routing time and completions echo back.  An estimate,
+        # not an oracle — spill/restore added to a preempted deep job after
+        # placement is not re-echoed into the backlog
+        self.backlog = [0.0] * config.n_chips
+        self.placements: dict[int, int] = {}
+        self._submit_order: list[int] = []  # job_ids in submission order
+        self._seen_ids: set[int] = set()
+        self._by_id: dict[int, JobExec] = {}
+        self._rr_next = 0
+        self._rng = np.random.default_rng(np.random.SeedSequence(config.seed))
+        cap_mb = config.warm_capacity_mb if config.warm_capacity_mb is not None else chip.l2_mb
+        self._warm_cap = cap_mb * MB
+        self._warm: list[OrderedDict[str, float]] = [OrderedDict() for _ in range(config.n_chips)]
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, job: FheJob) -> None:
+        """Schedule the routing decision at the job's arrival instant."""
+        assert job.job_id not in self._seen_ids, (
+            f"duplicate job_id {job.job_id}: the router keys placements by id"
+        )
+        self._seen_ids.add(job.job_id)
+        self._submit_order.append(job.job_id)
+        self.loop.call_at(max(self.loop.now, float(job.arrival_cycle)),
+                          lambda: self._route(job))
+
+    # -- dispatch policies --------------------------------------------------
+
+    def _pick(self, job: FheJob) -> int:
+        n = self.config.n_chips
+        if n == 1:
+            return 0
+        r = self.config.router
+        if r == "round_robin":
+            i = self._rr_next % n
+            self._rr_next += 1
+            return i
+        if r == "jsq":
+            return min(range(n), key=lambda i: (self.backlog[i], i))
+        if r == "po2":
+            a, b = (int(x) for x in self._rng.choice(n, size=2, replace=False))
+            return a if (self.backlog[a], a) <= (self.backlog[b], b) else b
+        # affinity: total marginal cost = backlog + the cold-start you'd pay
+        return min(range(n), key=lambda i: (self.backlog[i] + self._cold_penalty(job, i), i))
+
+    # -- warm-set / cold-start model ----------------------------------------
+
+    def _cold_penalty(self, job: FheJob, i: int) -> float:
+        if not self.config.cold_start or job.workload in self._warm[i]:
+            return 0.0
+        return self.config.cold_factor * working_set_bytes(job) / self.chip.hbm_bytes_per_cycle
+
+    def _touch_warm(self, job: FheJob, i: int) -> None:
+        w = self._warm[i]
+        if job.workload in w:
+            w.move_to_end(job.workload)
+        else:
+            w[job.workload] = working_set_bytes(job)
+        while len(w) > 1 and sum(w.values()) > self._warm_cap:
+            w.popitem(last=False)  # evict least-recently-used working set
+
+    # -- event handlers ------------------------------------------------------
+
+    def _route(self, job: FheJob) -> None:
+        i = self._pick(job)
+        pay = self._cold_penalty(job, i)  # counted in metrics via cold_start_cycles
+        self._touch_warm(job, i)
+        je = self.engines[i].submit(job, extra_cycles=pay)
+        je.chip_index = i
+        self.placements[job.job_id] = i
+        self._by_id[job.job_id] = je
+        self.backlog[i] += je.service_cycles
+
+    def _completed(self, i: int, je: JobExec) -> None:
+        self.backlog[i] = max(0.0, self.backlog[i] - je.service_cycles)
+
+    # -- run -----------------------------------------------------------------
+
+    def run(self) -> ClusterResult:
+        self.loop.run()
+        chip_results = [eng.result() for eng in self.engines]
+        makespan = max((r.makespan for r in chip_results), default=0.0)
+        jobs = [self._by_id[jid] for jid in self._submit_order]  # submission order
+        return ClusterResult(chip=self.chip, config=self.config,
+                             chip_results=chip_results, jobs=jobs,
+                             placements=dict(self.placements), makespan=makespan,
+                             events_processed=self.loop.processed)
+
+
+def serve_cluster(jobs: list[FheJob], chip: ChipConfig, n_chips: int = 2,
+                  router: str = "jsq", seed: int = 0, cold_start: bool = True,
+                  cold_factor: float = 2.0, warm_capacity_mb: float | None = None,
+                  config: ClusterConfig | None = None,
+                  validate: bool = True) -> ClusterResult:
+    """Serve an open-loop job list on an ``n_chips`` fleet; the one-call API.
+
+    Pass ``config=`` to reuse a prepared ``ClusterConfig`` (the keyword
+    arguments are ignored in that case).
+    """
+    cfg = config if config is not None else ClusterConfig(
+        n_chips=n_chips, router=router, seed=seed, cold_start=cold_start,
+        cold_factor=cold_factor, warm_capacity_mb=warm_capacity_mb)
+    rt = ClusterRouter(chip, cfg)
+    for job in jobs:
+        rt.submit(job)
+    result = rt.run()
+    return result.validate() if validate else result

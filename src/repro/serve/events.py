@@ -6,7 +6,10 @@ plain callbacks ordered by (time, insertion sequence); the sequence number
 makes simultaneous events deterministic (submission order) and breaks heap
 ties without comparing payloads.  Cancellation is lazy: a cancelled event
 stays in the heap and is skipped when popped — O(1) cancel, which preemption
-uses to revoke a suspended job's completion event.
+uses to revoke a suspended job's completion event.  The loop compacts the heap
+once cancelled entries outnumber live ones, so long fleet runs (many engines
+sharing one loop, each preemption leaving a dead completion event) stay
+O(live events) in memory.
 """
 
 from __future__ import annotations
@@ -19,16 +22,20 @@ from typing import Callable
 class Event:
     """One scheduled callback.  ``cancel()`` revokes it in O(1)."""
 
-    __slots__ = ("time", "seq", "fn", "cancelled")
+    __slots__ = ("time", "seq", "fn", "cancelled", "_loop")
 
-    def __init__(self, time: float, seq: int, fn: Callable[[], None]):
+    def __init__(self, time: float, seq: int, fn: Callable[[], None], loop: "EventLoop | None" = None):
         self.time = time
         self.seq = seq
         self.fn = fn
         self.cancelled = False
+        self._loop = loop
 
     def cancel(self) -> None:
-        self.cancelled = True
+        if not self.cancelled:
+            self.cancelled = True
+            if self._loop is not None:
+                self._loop._n_cancelled += 1
 
     def __lt__(self, other: "Event") -> bool:  # heap ordering
         return (self.time, self.seq) < (other.time, other.seq)
@@ -49,17 +56,26 @@ class EventLoop:
         self.now = float(start)
         self._heap: list[Event] = []
         self._seq = itertools.count()
+        self._n_cancelled = 0
         self.processed = 0
 
     def __len__(self) -> int:
-        return sum(1 for e in self._heap if not e.cancelled)
+        return len(self._heap) - self._n_cancelled
 
     def call_at(self, time: float, fn: Callable[[], None]) -> Event:
         if time < self.now:
             raise ValueError(f"cannot schedule into the past: {time} < now={self.now}")
-        ev = Event(float(time), next(self._seq), fn)
+        if self._n_cancelled > 32 and 2 * self._n_cancelled > len(self._heap):
+            self._compact()
+        ev = Event(float(time), next(self._seq), fn, loop=self)
         heapq.heappush(self._heap, ev)
         return ev
+
+    def _compact(self) -> None:
+        """Drop cancelled entries and re-heapify (amortised by the cancel count)."""
+        self._heap = [e for e in self._heap if not e.cancelled]
+        heapq.heapify(self._heap)
+        self._n_cancelled = 0
 
     def call_after(self, delay: float, fn: Callable[[], None]) -> Event:
         if delay < 0:
@@ -70,6 +86,7 @@ class EventLoop:
         """Time of the next pending event, or None when drained."""
         while self._heap and self._heap[0].cancelled:
             heapq.heappop(self._heap)
+            self._n_cancelled -= 1
         return self._heap[0].time if self._heap else None
 
     def step(self) -> bool:
@@ -77,6 +94,7 @@ class EventLoop:
         while self._heap:
             ev = heapq.heappop(self._heap)
             if ev.cancelled:
+                self._n_cancelled -= 1
                 continue
             assert ev.time >= self.now, "event heap violated monotonic time"
             self.now = ev.time

@@ -1,15 +1,19 @@
-"""SLO metrics over a ``ServeResult``: latency percentiles, throughput,
-per-cluster utilization, queueing delay, and fairness.
+"""SLO metrics over a ``ServeResult`` / ``ClusterResult``: latency
+percentiles, throughput, per-cluster utilization, queueing delay, fairness,
+and starvation counters.
 
 Everything is derived from the per-job ``Segment`` timelines the event engine
 records, so the numbers are exact (no sampling).  Cycle quantities convert to
-wall-clock through the chip frequency.
+wall-clock through the chip frequency.  ``summarize`` accepts either result
+type; ``summarize_cluster`` is the explicit fleet path (per-chip utilization
+imbalance, Jain fairness across chips as well as tenants, cold-start totals).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from .cluster import ClusterResult
 from .policy import JobState, ServeResult
 
 PERCENTILES = (50.0, 95.0, 99.0)
@@ -45,7 +49,7 @@ def per_affiliation_busy(result: ServeResult) -> dict[str, float]:
     return busy
 
 
-def tenant_slowdowns(result: ServeResult) -> dict[int, float]:
+def tenant_slowdowns(result: ServeResult | ClusterResult) -> dict[int, float]:
     """Mean slowdown (turnaround ÷ service) per tenant."""
     acc: dict[int, list[float]] = {}
     for je in result.jobs:
@@ -54,17 +58,40 @@ def tenant_slowdowns(result: ServeResult) -> dict[int, float]:
     return {t: float(np.mean(v)) for t, v in acc.items()}
 
 
-def summarize(result: ServeResult) -> dict[str, float]:
+def max_queueing_by_kind(result: ServeResult | ClusterResult) -> dict[str, float]:
+    """Worst-case queueing delay (arrival → first dispatch) per job kind.
+
+    This is the starvation indicator the ROADMAP asks for: under
+    ``FlashPolicy`` a saturating shallow stream can hold every affiliation
+    busy indefinitely, so a same-priority deep job's gang never launches —
+    the deep entry here grows with the stream length while the shallow entry
+    stays bounded by the service quantum.  (The aging/utilization-reserve
+    knob that bounds it is a follow-on PR; the metric ships now.)
+    """
+    out = {"shallow": 0.0, "deep": 0.0}
+    for je in result.jobs:
+        if je.state is JobState.DONE:
+            out[je.kind] = max(out[je.kind], je.queueing_delay)
+    return out
+
+
+def summarize(result: ServeResult | ClusterResult) -> dict[str, float]:
     """Flat metric dict (CSV-friendly).  Keys:
 
     latency_p50/p95/p99_cycles, latency_p99_ms — end-to-end turnaround;
     queue_p50/p95/p99_cycles                   — arrival → first dispatch;
+    queue_max_shallow/deep_cycles              — worst queueing per kind
+                                                 (deep = starvation indicator);
     makespan_mcycles, throughput_jobs_per_mcycle;
     util_mean, util_min, util_max              — busy/makespan per affiliation;
     fairness_jain                              — over per-tenant mean slowdown
                                                  (per-job when single-tenant);
     n_jobs, n_shallow, n_deep, n_preemptions, spill_restore_mcycles.
+
+    A ``ClusterResult`` routes to ``summarize_cluster`` (fleet-level SLOs).
     """
+    if isinstance(result, ClusterResult):
+        return summarize_cluster(result)
     done = [je for je in result.jobs if je.state is JobState.DONE]
     lat = _pct([je.turnaround for je in done])
     queue = _pct([je.queueing_delay for je in done])
@@ -96,4 +123,74 @@ def summarize(result: ServeResult) -> dict[str, float]:
     out["latency_p99_ms"] = lat["p99"] / freq_hz * 1e3
     for k, v in queue.items():
         out[f"queue_{k}_cycles"] = v
+    for kind, v in max_queueing_by_kind(result).items():
+        out[f"queue_max_{kind}_cycles"] = v
+    return out
+
+
+def per_chip_utilization(result: ClusterResult) -> list[float]:
+    """Busy fraction of the fleet makespan per chip (mean over affiliations)."""
+    mk = result.makespan
+    utils = []
+    for r in result.chip_results:
+        busy = per_affiliation_busy(r)
+        utils.append(float(np.mean([b / mk if mk > 0 else 0.0 for b in busy.values()]))
+                     if busy else 0.0)
+    return utils
+
+
+def summarize_cluster(result: ClusterResult) -> dict[str, float]:
+    """Fleet-level SLOs: the merged-job latency/queueing view plus per-chip
+    balance.  Keys beyond ``summarize``'s:
+
+    n_chips;
+    chip_util_mean/min/max                     — per-chip busy fraction;
+    chip_util_imbalance                        — max − min (0 = perfectly even);
+    fairness_jain_chips                        — Jain over per-chip busy cycles;
+    n_cold_starts, cold_start_mcycles          — warm-set misses the router
+                                                 charged into service demand.
+
+    Every latency/queueing/fairness number is computed from the union of the
+    per-chip ``ServeResult`` timelines — the property suite asserts this merge
+    identity directly.
+    """
+    done = [je for je in result.jobs if je.state is JobState.DONE]
+    lat = _pct([je.turnaround for je in done])
+    queue = _pct([je.queueing_delay for je in done])
+    mk = result.makespan
+    chip_utils = per_chip_utilization(result)
+    chip_busy = [sum(per_affiliation_busy(r).values()) for r in result.chip_results]
+    by_tenant = tenant_slowdowns(result)
+    if len(by_tenant) > 1:
+        slow = list(by_tenant.values())
+    else:
+        slow = [je.turnaround / je.service_cycles for je in done if je.service_cycles > 0]
+    freq_hz = result.chip.freq_ghz * 1e9
+    out = {
+        "n_chips": float(result.n_chips),
+        "n_jobs": float(len(done)),
+        "n_shallow": float(sum(1 for je in done if je.kind == "shallow")),
+        "n_deep": float(sum(1 for je in done if je.kind == "deep")),
+        "makespan_mcycles": mk / 1e6,
+        "makespan_ms": mk / freq_hz * 1e3,
+        "throughput_jobs_per_mcycle": len(done) / (mk / 1e6) if mk > 0 else 0.0,
+        "chip_util_mean": float(np.mean(chip_utils)) if chip_utils else 0.0,
+        "chip_util_min": float(np.min(chip_utils)) if chip_utils else 0.0,
+        "chip_util_max": float(np.max(chip_utils)) if chip_utils else 0.0,
+        "chip_util_imbalance": (float(np.max(chip_utils) - np.min(chip_utils))
+                                if chip_utils else 0.0),
+        "fairness_jain": jain_fairness(slow),
+        "fairness_jain_chips": jain_fairness(chip_busy),
+        "n_preemptions": float(sum(je.n_preemptions for je in done)),
+        "spill_restore_mcycles": sum(je.spill_restore_cycles for je in done) / 1e6,
+        "n_cold_starts": float(sum(1 for je in done if je.cold_start_cycles > 0)),
+        "cold_start_mcycles": sum(je.cold_start_cycles for je in done) / 1e6,
+    }
+    for k, v in lat.items():
+        out[f"latency_{k}_cycles"] = v
+    out["latency_p99_ms"] = lat["p99"] / freq_hz * 1e3
+    for k, v in queue.items():
+        out[f"queue_{k}_cycles"] = v
+    for kind, v in max_queueing_by_kind(result).items():
+        out[f"queue_max_{kind}_cycles"] = v
     return out

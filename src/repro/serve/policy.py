@@ -96,6 +96,8 @@ class JobExec:
     completion: float | None = None
     spill_restore_cycles: float = 0.0
     n_preemptions: int = 0
+    chip_index: int = 0  # which fleet chip served the job (0 when single-chip)
+    cold_start_cycles: float = 0.0  # router-charged warm-set miss, part of service_cycles
     _run_start: float | None = None
     _complete_ev: Event | None = None
 
@@ -443,17 +445,25 @@ class ServingEngine:
     ``repro.serve.traffic.ClosedLoopSource``).
     """
 
-    def __init__(self, chip: ChipConfig, policy=None):
+    def __init__(self, chip: ChipConfig, policy=None, loop: EventLoop | None = None):
         self.chip = chip
         self.policy = policy if policy is not None else policy_for(chip)
-        self.loop = EventLoop()
+        # a caller-supplied loop lets N engines share one clock (fleet serving,
+        # repro.serve.cluster); by default each engine owns its own
+        self.loop = loop if loop is not None else EventLoop()
         self.jobs: list[JobExec] = []
         self._source = None
+        # fleet hook: the cluster router tracks per-chip backlog through this
+        self.on_job_complete: Callable[[JobExec], None] | None = None
         self.policy.bind(self.loop, self._job_completed)
 
-    def submit(self, job: FheJob) -> JobExec:
+    def submit(self, job: FheJob, extra_cycles: float = 0.0) -> JobExec:
+        """Queue one job.  ``extra_cycles`` is added to the service demand —
+        the cluster router charges warm-set cold starts (KSK/plaintext fetch)
+        this way, so work conservation holds penalty-inclusive."""
         sim = job_service_sim(job, self.chip)
-        je = JobExec(job=job, service_cycles=sim.cycles, sim=sim, lanes="")
+        je = JobExec(job=job, service_cycles=sim.cycles + float(extra_cycles), sim=sim,
+                     lanes="", cold_start_cycles=float(extra_cycles))
         self.jobs.append(je)
         # clamp: integer-rounded arrivals from a closed-loop source can land a
         # fraction of a cycle before a fractional clock (non-integral spill pay)
@@ -462,9 +472,21 @@ class ServingEngine:
         return je
 
     def _job_completed(self, je: JobExec) -> None:
+        if self.on_job_complete is not None:
+            self.on_job_complete(je)
         if self._source is not None:
             for job in self._source.on_complete(je, self.loop.now):
                 self.submit(job)
+
+    def result(self) -> ServeResult:
+        """Snapshot this engine's timeline (fleet mode runs the shared loop
+        once, then collects per-chip results through here).  NB: with a
+        shared loop, ``events_processed`` is the loop-wide total — events are
+        not attributable to one engine."""
+        makespan = max((je.completion for je in self.jobs
+                        if je.completion is not None), default=0.0)
+        return ServeResult(chip=self.chip, jobs=list(self.jobs),
+                           makespan=makespan, events_processed=self.loop.processed)
 
     def run(self, source=None) -> ServeResult:
         if source is not None:
@@ -472,9 +494,7 @@ class ServingEngine:
             for job in source.initial_jobs():
                 self.submit(job)
         self.loop.run()
-        makespan = max((je.completion for je in self.jobs), default=0.0)
-        return ServeResult(chip=self.chip, jobs=list(self.jobs),
-                           makespan=makespan, events_processed=self.loop.processed)
+        return self.result()
 
 
 def serve(jobs: list[FheJob], chip: ChipConfig, policy=None, validate: bool = True) -> ServeResult:

@@ -1,10 +1,15 @@
 """Traffic generation for the serving subsystem: open-loop Poisson streams,
-trace replay, and a closed-loop "N concurrent tenants" source.
+sharded per-chip sub-streams, a skewed bursty-tenant stream, trace replay,
+and a closed-loop "N concurrent tenants" source.
 
 All generators are seeded and fully deterministic — the same seed reproduces
 the same arrival sequence bit-for-bit (the determinism test in
-``tests/test_serving.py`` relies on this).  Times are in cycles; rates are
-jobs per megacycle so they read naturally against the simulator's outputs.
+``tests/test_serving.py`` relies on this).  Multi-source generators
+(``sharded_poisson_jobs``, ``bursty_jobs``) derive one RNG per source by
+deterministic seed splitting (``numpy.random.SeedSequence.spawn``) rather
+than seed arithmetic, so the same seed with different shard counts yields
+uncorrelated yet reproducible streams.  Times are in cycles; rates are jobs
+per megacycle so they read naturally against the simulator's outputs.
 """
 
 from __future__ import annotations
@@ -57,22 +62,95 @@ class PoissonConfig:
     priority_mix: Mapping[int, float] = dataclasses.field(default_factory=lambda: {0: 1.0})
     seed: int = 0
     start_id: int = 0
+    tenant_id: int = 0
+    start_cycle: float = 0.0  # arrivals begin after this offset
 
 
-def poisson_jobs(cfg: PoissonConfig) -> list[FheJob]:
-    """Draw ``cfg.n_jobs`` arrivals with exponential inter-arrival gaps."""
-    rng = np.random.default_rng(cfg.seed)
+def _draw_poisson(cfg: PoissonConfig, rng: np.random.Generator) -> list[FheJob]:
     names, name_p = _normalise(cfg.mix)
     prios, prio_p = _normalise(cfg.priority_mix)
     mean_gap = 1e6 / cfg.rate_per_mcycle
-    t = 0.0
+    t = float(cfg.start_cycle)
     jobs = []
     for i in range(cfg.n_jobs):
         t += float(rng.exponential(mean_gap))
         w = names[int(rng.choice(len(names), p=name_p))]
         pr = int(prios[int(rng.choice(len(prios), p=prio_p))])
         jobs.append(make_job(w, priority=pr, arrival_cycle=int(round(t)),
-                             job_id=cfg.start_id + i))
+                             job_id=cfg.start_id + i, tenant_id=cfg.tenant_id))
+    return jobs
+
+
+def poisson_jobs(cfg: PoissonConfig) -> list[FheJob]:
+    """Draw ``cfg.n_jobs`` arrivals with exponential inter-arrival gaps."""
+    return _draw_poisson(cfg, np.random.default_rng(cfg.seed))
+
+
+def sharded_poisson_jobs(cfg: PoissonConfig, n_shards: int) -> list[list[FheJob]]:
+    """Split one logical Poisson stream into ``n_shards`` sub-streams.
+
+    Each shard is an independent Poisson process at ``rate / n_shards`` (the
+    superposition is statistically the original stream), seeded from its own
+    ``SeedSequence.spawn`` child — per-shard RNGs are uncorrelated by
+    construction, and the SAME ``cfg.seed`` stays reproducible at ANY shard
+    count (no seed arithmetic collisions like ``seed + shard``).  Job ids
+    partition ``[start_id, start_id + n_jobs)`` contiguously per shard;
+    ``tenant_id`` is inherited from ``cfg``.
+
+    Use case: pre-sharding an arrival stream per front-end (one router per
+    region), or generating per-chip background traffic.  For a SINGLE router
+    over N chips, pass the unsharded stream to ``serve_cluster`` instead.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    base, extra = divmod(cfg.n_jobs, n_shards)
+    shards, next_id = [], cfg.start_id
+    for k, child in enumerate(np.random.SeedSequence(cfg.seed).spawn(n_shards)):
+        n_k = base + (1 if k < extra else 0)
+        sub = dataclasses.replace(cfg, rate_per_mcycle=cfg.rate_per_mcycle / n_shards,
+                                  n_jobs=n_k, start_id=next_id)
+        shards.append(_draw_poisson(sub, np.random.default_rng(child)))
+        next_id += n_k
+    return shards
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstyConfig:
+    """Skewed stream: a smooth Poisson background (tenant 0) plus one bursty
+    tenant (tenant 1) that dumps ``burst_size`` back-to-back jobs at each of
+    ``n_bursts`` Poisson-placed epochs.  Background and burst sources draw
+    from separately spawned RNGs (same seed ⇒ same stream; changing burst
+    shape never perturbs the background draws)."""
+
+    base: PoissonConfig  # the background stream (tenant 0)
+    n_bursts: int = 4
+    burst_size: int = 12
+    intra_gap_cycles: float = 2_000.0  # spacing inside one burst
+    burst_mix: Mapping[str, float] | None = None  # default: base.mix
+    burst_priority_mix: Mapping[int, float] | None = None  # default: base's
+
+
+def bursty_jobs(cfg: BurstyConfig) -> list[FheJob]:
+    """Materialise the merged (background + bursts) stream, sorted by arrival."""
+    bg_seq, burst_seq = np.random.SeedSequence(cfg.base.seed).spawn(2)
+    background = _draw_poisson(cfg.base, np.random.default_rng(bg_seq))
+    span = max((j.arrival_cycle for j in background), default=0)
+    rng = np.random.default_rng(burst_seq)
+    names, name_p = _normalise(cfg.burst_mix if cfg.burst_mix is not None else cfg.base.mix)
+    prios, prio_p = _normalise(cfg.burst_priority_mix if cfg.burst_priority_mix is not None
+                               else cfg.base.priority_mix)
+    epochs = sorted(float(x) for x in rng.uniform(0.0, max(span, 1.0), size=cfg.n_bursts))
+    jobs = list(background)
+    next_id = cfg.base.start_id + cfg.base.n_jobs
+    for epoch in epochs:
+        for k in range(cfg.burst_size):
+            w = names[int(rng.choice(len(names), p=name_p))]
+            pr = int(prios[int(rng.choice(len(prios), p=prio_p))])
+            jobs.append(make_job(w, priority=pr,
+                                 arrival_cycle=int(round(epoch + k * cfg.intra_gap_cycles)),
+                                 job_id=next_id, tenant_id=cfg.base.tenant_id + 1))
+            next_id += 1
+    jobs.sort(key=lambda j: (j.arrival_cycle, j.job_id))
     return jobs
 
 

@@ -1,0 +1,291 @@
+"""Fleet-serving tests (`repro.serve.cluster`): a hypothesis property suite
+over random job mixes × chip counts × router policies (work conservation,
+exactly-one-chip placement, full completion, fleet-metrics merge identity),
+router-policy unit behavior, the warm-set cold-start model, sharded traffic
+seed-splitting, bursty streams, and the `core.scheduler` fleet passthrough."""
+
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import serve
+from repro.core import hardware as H
+from repro.core import jobs as J
+from repro.core import scheduler as S
+from repro.serve.cluster import ROUTERS, ClusterConfig
+from repro.serve.policy import JobState, working_set_bytes
+
+# cheap presets only (service sims are memoised per (chip, workload, kind))
+SHALLOW = ("matmul", "lola_mnist_plain", "dblookup")
+DEEP = ("lstm",)
+
+
+def _random_jobs(seed: int, n: int, deep_frac: float = 0.2) -> list:
+    rng = random.Random(seed)
+    jobs = []
+    for i in range(n):
+        pool = DEEP if rng.random() < deep_frac else SHALLOW
+        jobs.append(J.make_job(rng.choice(pool), priority=rng.randint(0, 5),
+                               arrival_cycle=rng.randint(0, 2_000_000), job_id=i))
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# property suite: cluster invariants over random mixes / chips / routers
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n=st.integers(min_value=1, max_value=14),
+       n_chips=st.integers(min_value=1, max_value=4),
+       router=st.sampled_from(ROUTERS))
+def test_cluster_invariants(seed, n, n_chips, router):
+    """For ANY routing decision sequence: every submitted job completes, each
+    job lands on exactly one chip, per-chip busy cycles equal the service
+    demands placed there (work conservation, cold-start inclusive), and the
+    fleet metrics are exactly the merge of the per-chip ServeResults."""
+    jobs = _random_jobs(seed, n)
+    result = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=n_chips,
+                                 router=router, seed=seed, validate=True)
+    assert len(result.jobs) == n
+    assert all(je.state is JobState.DONE for je in result.jobs)
+
+    # exactly-one-chip placement: per-chip job sets partition the stream
+    ids_per_chip = [{je.job.job_id for je in r.jobs} for r in result.chip_results]
+    flat = [i for s in ids_per_chip for i in s]
+    assert len(flat) == len(set(flat)) == n
+
+    # work conservation per chip (segments == service + spill, summed)
+    for r in result.chip_results:
+        busy = sum(je.busy_cycles for je in r.jobs)
+        owed = sum(je.service_cycles + je.spill_restore_cycles for je in r.jobs)
+        assert busy == pytest.approx(owed)
+
+    # fleet metrics ≡ merge of the per-chip timelines
+    m = serve.summarize(result)
+    lats = [je.turnaround for r in result.chip_results for je in r.jobs]
+    queues = [je.queueing_delay for r in result.chip_results for je in r.jobs]
+    assert m["n_jobs"] == n
+    assert m["latency_p50_cycles"] == pytest.approx(float(np.percentile(lats, 50)))
+    assert m["latency_p99_cycles"] == pytest.approx(float(np.percentile(lats, 99)))
+    assert m["queue_p95_cycles"] == pytest.approx(float(np.percentile(queues, 95)))
+    assert m["makespan_mcycles"] == pytest.approx(
+        max(r.makespan for r in result.chip_results) / 1e6)
+    assert m["queue_max_deep_cycles"] == pytest.approx(
+        max((je.queueing_delay for je in result.jobs if je.kind == "deep"), default=0.0))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n=st.integers(min_value=1, max_value=10))
+def test_cluster_single_chip_equals_engine(seed, n):
+    """A 1-chip fleet with cold starts disabled is bit-identical to the plain
+    single-engine path — the router adds no timing of its own."""
+    jobs = _random_jobs(seed, n)
+    fleet = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=1, cold_start=False)
+    single = serve.serve(jobs, H.FLASH_FHE)
+    assert len(fleet.jobs) == len(single.jobs)
+    for a, b in zip(fleet.jobs, single.jobs):
+        assert a.job is b.job
+        assert a.first_start == b.first_start
+        assert a.completion == b.completion
+        assert a.lanes == b.lanes
+
+
+# ---------------------------------------------------------------------------
+# router policies
+# ---------------------------------------------------------------------------
+
+
+def test_round_robin_cycles_chips():
+    jobs = [J.make_job("matmul", arrival_cycle=0, job_id=i) for i in range(8)]
+    result = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=4,
+                                 router="round_robin", cold_start=False)
+    assert result.placements == {i: i % 4 for i in range(8)}
+
+
+def test_jsq_routes_around_backlog():
+    """A deep job gang-blocks chip 0 for ~3.4 Mcycles; jsq must steer the
+    following shallow arrivals to the empty chip."""
+    jobs = [J.make_job("lstm", arrival_cycle=0, job_id=0)] + [
+        J.make_job("matmul", arrival_cycle=1_000 + i, job_id=1 + i) for i in range(4)]
+    result = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=2,
+                                 router="jsq", cold_start=False)
+    assert result.placements[0] == 0
+    assert all(result.placements[j] == 1 for j in range(1, 5))
+
+
+def test_po2_deterministic_and_matches_jsq_at_two_chips():
+    """With n=2 the two sampled chips are always {0,1}, so power-of-two picks
+    the same chip as jsq; and the router RNG is seed-reproducible."""
+    jobs = _random_jobs(seed=31, n=12)
+    a = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=2, router="po2", seed=5)
+    b = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=2, router="po2", seed=5)
+    assert a.placements == b.placements
+    jsq = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=2, router="jsq", seed=5)
+    assert a.placements == jsq.placements
+    for x, y in zip(a.jobs, jsq.jobs):
+        assert x.completion == y.completion
+
+
+def test_affinity_segregates_workloads_and_pays_cold_once():
+    """Pairs of (matmul, dblookup) arriving together: after one cold start
+    each, affinity keeps each workload on its warm chip (cost = backlog +
+    cold penalty), so exactly 2 cold starts total and disjoint workloads."""
+    jobs = []
+    for k in range(6):
+        jobs.append(J.make_job("matmul", arrival_cycle=k * 400_000, job_id=2 * k))
+        jobs.append(J.make_job("dblookup", arrival_cycle=k * 400_000, job_id=2 * k + 1))
+    result = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=2, router="affinity")
+    per_chip = [{je.job.workload for je in r.jobs} for r in result.chip_results]
+    assert per_chip[0] == {"matmul"} and per_chip[1] == {"dblookup"}
+    m = serve.summarize(result)
+    assert m["n_cold_starts"] == 2
+    # the cold-start charge is the HBM cost of faulting the working set
+    first = result.jobs[0]
+    expect = 2.0 * working_set_bytes(first.job) / H.FLASH_FHE.hbm_bytes_per_cycle
+    assert first.cold_start_cycles == pytest.approx(expect)
+    assert first.service_cycles == pytest.approx(first.sim.cycles + expect)
+    # warm hits are free
+    assert result.jobs[2].cold_start_cycles == 0.0
+
+
+def test_warm_set_eviction_under_tiny_capacity():
+    """A near-zero warm-set capacity makes alternating workloads evict each
+    other, so every arrival is a cold start."""
+    jobs = [J.make_job(("matmul", "dblookup")[i % 2], arrival_cycle=i * 300_000, job_id=i)
+            for i in range(8)]
+    result = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=1,
+                                 warm_capacity_mb=1e-6)
+    m = serve.summarize(result)
+    assert m["n_cold_starts"] == 8
+    assert all(je.cold_start_cycles > 0 for je in result.jobs)
+
+
+def test_cluster_config_validation():
+    with pytest.raises(ValueError):
+        ClusterConfig(n_chips=0)
+    with pytest.raises(ValueError):
+        ClusterConfig(n_chips=2, router="least-loved")
+    # config= passthrough works
+    cfg = ClusterConfig(n_chips=2, router="round_robin", cold_start=False)
+    jobs = [J.make_job("matmul", job_id=i) for i in range(3)]
+    result = serve.serve_cluster(jobs, H.FLASH_FHE, config=cfg)
+    assert result.config is cfg and result.n_chips == 2
+
+
+def test_duplicate_job_ids_rejected():
+    jobs = [J.make_job("matmul", job_id=7), J.make_job("dblookup", job_id=7)]
+    with pytest.raises(AssertionError, match="duplicate job_id"):
+        serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=2)
+
+
+def test_cluster_validate_catches_corrupted_placement():
+    jobs = [J.make_job("matmul", arrival_cycle=0, job_id=i) for i in range(4)]
+    result = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=2)
+    result.chip_results[0].jobs[0].chip_index = 99
+    with pytest.raises(AssertionError):
+        result.validate()
+
+
+# ---------------------------------------------------------------------------
+# fleet metrics
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_metrics_balance_and_tenants():
+    cfg = serve.BurstyConfig(
+        base=serve.PoissonConfig(rate_per_mcycle=20.0, n_jobs=24,
+                                 mix=serve.traffic.SHALLOW_MIX, seed=3),
+        n_bursts=2, burst_size=6, burst_mix={"matmul": 1.0})
+    result = serve.serve_cluster(serve.bursty_jobs(cfg), H.FLASH_FHE, n_chips=2)
+    m = serve.summarize(result)
+    assert m["n_chips"] == 2 and m["n_jobs"] == 36
+    assert 0.0 <= m["chip_util_min"] <= m["chip_util_mean"] <= m["chip_util_max"] <= 1.0
+    assert m["chip_util_imbalance"] == pytest.approx(m["chip_util_max"] - m["chip_util_min"])
+    assert 0.0 < m["fairness_jain_chips"] <= 1.0
+    assert 0.0 < m["fairness_jain"] <= 1.0  # two tenants (background + bursty)
+    assert m["throughput_jobs_per_mcycle"] > 0
+    # summarize dispatches on result type: explicit call agrees
+    assert m == serve.summarize_cluster(result)
+
+
+# ---------------------------------------------------------------------------
+# sharded + bursty traffic (seed splitting)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_poisson_deterministic_and_partitioned():
+    cfg = serve.PoissonConfig(rate_per_mcycle=40.0, n_jobs=64,
+                              mix=serve.traffic.SHALLOW_MIX, seed=9)
+    a = serve.sharded_poisson_jobs(cfg, 4)
+    assert a == serve.sharded_poisson_jobs(cfg, 4)  # reproducible
+    assert [len(s) for s in a] == [16, 16, 16, 16]
+    ids = sorted(j.job_id for s in a for j in s)
+    assert ids == list(range(64))  # contiguous partition of the id space
+    # a different shard count is also reproducible (and a different split)
+    b = serve.sharded_poisson_jobs(cfg, 3)
+    assert b == serve.sharded_poisson_jobs(cfg, 3)
+    assert [len(s) for s in b] == [22, 21, 21]
+    with pytest.raises(ValueError):
+        serve.sharded_poisson_jobs(cfg, 0)
+
+
+def test_sharded_streams_decorrelated():
+    """SeedSequence.spawn gives per-shard RNGs that are uncorrelated — no
+    seed-arithmetic collisions between shards or with the parent stream."""
+    cfg = serve.PoissonConfig(rate_per_mcycle=40.0, n_jobs=400,
+                              mix={"matmul": 1.0}, seed=5)
+    s0, s1 = serve.sharded_poisson_jobs(cfg, 2)
+    gaps0 = np.diff([j.arrival_cycle for j in s0])
+    gaps1 = np.diff([j.arrival_cycle for j in s1])
+    n = min(len(gaps0), len(gaps1))
+    corr = float(np.corrcoef(gaps0[:n], gaps1[:n])[0, 1])
+    assert abs(corr) < 0.15
+    assert [j.arrival_cycle for j in s0] != [j.arrival_cycle for j in s1]
+    # shard 0 is NOT the parent stream replayed at half rate
+    parent = serve.poisson_jobs(dataclasses.replace(
+        cfg, rate_per_mcycle=cfg.rate_per_mcycle / 2, n_jobs=200))
+    assert [j.arrival_cycle for j in s0] != [j.arrival_cycle for j in parent]
+
+
+def test_bursty_stream_structure_and_independence():
+    cfg = serve.BurstyConfig(
+        base=serve.PoissonConfig(rate_per_mcycle=6.0, n_jobs=40, seed=3),
+        n_bursts=4, burst_size=8, intra_gap_cycles=1_000.0,
+        burst_mix={"matmul": 1.0})
+    a = serve.bursty_jobs(cfg)
+    assert a == serve.bursty_jobs(cfg)  # deterministic
+    assert len(a) == 40 + 4 * 8
+    arrivals = [j.arrival_cycle for j in a]
+    assert arrivals == sorted(arrivals)
+    assert len({j.job_id for j in a}) == len(a)
+    burst = [j for j in a if j.tenant_id == 1]
+    assert len(burst) == 32 and all(j.workload == "matmul" for j in burst)
+    # split RNGs: changing the burst shape never perturbs the background draws
+    slim = dataclasses.replace(cfg, burst_size=2, n_bursts=1)
+    bg = [(j.workload, j.arrival_cycle) for j in a if j.tenant_id == 0]
+    bg_slim = [(j.workload, j.arrival_cycle)
+               for j in serve.bursty_jobs(slim) if j.tenant_id == 0]
+    assert bg == bg_slim
+
+
+# ---------------------------------------------------------------------------
+# core.scheduler fleet passthrough
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_wrapper_n_chips_matches_cluster():
+    jobs = _random_jobs(seed=7, n=10)
+    sched = S.schedule(jobs, H.FLASH_FHE, n_chips=3, router="round_robin")
+    result = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=3, router="round_robin")
+    assert len(sched) == len(result.jobs)
+    for sj, je in zip(sched, result.jobs):
+        assert sj.job is je.job
+        assert sj.end_cycle == je.completion
+        assert sj.chip_index == je.chip_index
+    assert {sj.chip_index for sj in sched} <= {0, 1, 2}

@@ -1,0 +1,236 @@
+"""Hoisted vs per-rotation key-switched rotations: the amortisation, measured.
+
+Two measurement shapes, both executed for real through the kernel pipelines
+(Pallas interpret off-TPU — dispatch counts are the architecture-honest
+metric there; wall clock still rewards fewer launches):
+
+  * ``group``     — a k-rotation hoisting group (`ops.rotate_hoisted_group`)
+                    vs k standalone `ops.rotate` calls on the same ciphertext:
+                    kernel dispatches, extended-basis forward-NTT trace
+                    records (β + O(1) vs k·β), wall clock, bit-exactness.
+  * ``cts_stage`` — a radix-32 CoeffToSlot stage shape at N=2^14 (63
+                    diagonals, n1 = 16 → 15 baby + 3 giant rotations; the
+                    diagonal *values* are random, the rotation/BSGS structure
+                    is the real one) through `linear.apply_bsgs` with
+                    hoisting="always" vs "never".  n1 = 16 over the √63
+                    default is deliberate: hoisting makes baby steps nearly
+                    free, shifting the BSGS optimum toward more babies.
+
+CI gates (``check_gates``; `python -m benchmarks.hoisting_bench` exits
+non-zero on failure):
+
+  1. the hoisted CtS stage at N=2^14 issues ≤ 60% of the staged path's
+     key-switch kernel dispatches (intt/fused-KS/ModUp/MAC/ModDown launches —
+     the rotation datapath; encode/pointwise launches are identical on both
+     sides and reported separately as ``dispatch_ratio_total``),
+  2. it beats the staged path on wall clock,
+  3. every hoisted result is bit-exact against the per-rotation path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fhe import keys as K
+from repro.fhe import linear, ops
+from repro.fhe import params as P
+from repro.fhe import trace
+from repro.kernels import dispatch
+
+# kernel launches belonging to the rotation/key-switch datapath
+KS_KERNELS = ("intt", "fusedks", "hoistmodup", "hoistmac", "fused_moddown")
+
+
+def _ks_dispatches(counts: dict) -> int:
+    return sum(counts.get(k, 0) for k in KS_KERNELS)
+
+
+def _time_call(fn, iters: int) -> float:
+    """Min wall-clock seconds per call (after one warmup/compile call).
+
+    Min, not median: interpret-mode Pallas timings on shared CI runners swing
+    >30% run-to-run from load noise, and the minimum is the standard
+    noise-robust estimator — the gate compares best-case against best-case."""
+    fn()
+    times = []
+    for _ in range(max(2, iters)):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.min(times))
+
+
+def _ct_equal(a, b) -> bool:
+    return bool(jnp.array_equal(a.c0, b.c0)) and bool(jnp.array_equal(a.c1, b.c1))
+
+
+def _ext_ntts(instrs, m: int) -> int:
+    return sum(1 for i in instrs if i.op == "NTT" and i.limbs == m)
+
+
+def bench_group(n: int, L: int, dnum: int, k: int, iters: int = 2, seed: int = 0) -> dict:
+    """One k-rotation hoisting group vs k standalone rotations (fused path)."""
+    p = P.make_params(n, L, dnum, check_security=False)
+    rots = tuple(range(1, k + 1))
+    ks = K.full_keyset(p, seed=seed, rotations=rots)
+    rng = np.random.default_rng(seed + 1)
+    ct = ops.encrypt(p, ks.pk, ops.encode(p, rng.normal(size=p.slots) * 0.3))
+    level, beta = p.L, p.beta(p.L)
+    m = level + 1 + p.alpha
+
+    group = ops.rotate_hoisted_group(p, ct, rots, ks, backend="fused")
+    singles = {r: ops.rotate(p, ct, r, ks, backend="fused") for r in rots}
+    bitexact = int(all(_ct_equal(group[r], singles[r]) for r in rots))
+
+    with dispatch.count_dispatches() as ch, trace.capture_trace() as th:
+        ops.rotate_hoisted_group(p, ct, rots, ks, backend="fused")
+    with dispatch.count_dispatches() as cs, trace.capture_trace() as ts:
+        for r in rots:
+            ops.rotate(p, ct, r, ks, backend="fused")
+
+    t_h = _time_call(lambda: ops.rotate_hoisted_group(p, ct, rots, ks, backend="fused"), iters)
+    t_s = _time_call(
+        lambda: [ops.rotate(p, ct, r, ks, backend="fused") for r in rots], iters
+    )
+    return {
+        "config": f"group_n{n}_L{L}_dnum{dnum}_k{k}",
+        "n": n, "L": L, "dnum": dnum, "k": k, "beta": beta,
+        "bitexact": bitexact,
+        "ext_ntt_hoisted": _ext_ntts(th, m),      # == β
+        "ext_ntt_staged": _ext_ntts(ts, m),       # == k·β
+        "dispatches_hoisted": dispatch.total(ch),
+        "dispatches_staged": dispatch.total(cs),
+        "dispatch_ratio": dispatch.total(ch) / dispatch.total(cs),
+        "wall_ms_hoisted": t_h * 1e3,
+        "wall_ms_staged": t_s * 1e3,
+        "wall_speedup": t_s / t_h,
+    }
+
+
+def _cts_stage_plan(p: P.CkksParams, radix: int = 32, n1: int = 16, seed: int = 0):
+    """A radix-``radix`` CoeffToSlot stage *shape*: 2·radix−1 diagonals.
+
+    The true CtS factor matrices at N=2^14 are slots×slots dense (1 GB+) —
+    structurally the level-collapsed FFT stage is a banded matrix with
+    2·radix−1 populated diagonals, which is what drives the rotation count.
+    We build that structure directly with random diagonal values."""
+    rng = np.random.default_rng(seed)
+    diags = {
+        int(d): (rng.normal(size=p.slots) + 1j * rng.normal(size=p.slots)) / radix
+        for d in range(2 * radix - 1)
+    }
+    return linear.BsgsPlan(n1=n1, diags=diags)
+
+
+def bench_cts_stage(n: int = 1 << 14, L: int = 3, dnum: int = 3,
+                    iters: int = 2, seed: int = 0) -> dict:
+    """CtS-stage BSGS transform, hoisted vs per-rotation, fused kernels."""
+    p = P.make_params(n, L, dnum, check_security=False)
+    plan = _cts_stage_plan(p, seed=seed)
+    ks = K.full_keyset(p, seed=seed, rotations=tuple(plan.rotations()))
+    rng = np.random.default_rng(seed + 1)
+    ct = ops.encrypt(p, ks.pk, ops.encode(p, rng.normal(size=p.slots) * 0.3))
+    beta = p.beta(p.L)
+    m = p.L + 1 + p.alpha
+    k = len(plan.baby_steps())
+
+    hoisted = linear.apply_bsgs(p, ct, plan, ks, backend="fused", hoisting="always")
+    staged = linear.apply_bsgs(p, ct, plan, ks, backend="fused", hoisting="never")
+    bitexact = int(_ct_equal(hoisted, staged))
+
+    with dispatch.count_dispatches() as ch, trace.capture_trace() as th:
+        linear.apply_bsgs(p, ct, plan, ks, backend="fused", hoisting="always")
+    with dispatch.count_dispatches() as cs, trace.capture_trace() as ts:
+        linear.apply_bsgs(p, ct, plan, ks, backend="fused", hoisting="never")
+
+    t_h = _time_call(
+        lambda: linear.apply_bsgs(p, ct, plan, ks, backend="fused", hoisting="always"), iters
+    )
+    t_s = _time_call(
+        lambda: linear.apply_bsgs(p, ct, plan, ks, backend="fused", hoisting="never"), iters
+    )
+    return {
+        "config": f"cts_stage_n{n}_L{L}_dnum{dnum}",
+        "n": n, "L": L, "dnum": dnum, "k": k, "beta": beta,
+        "n_diags": len(plan.diags), "n_giants": len(plan.giant_steps()),
+        "bitexact": bitexact,
+        "ext_ntt_hoisted": _ext_ntts(th, m),
+        "ext_ntt_staged": _ext_ntts(ts, m),
+        "ks_dispatches_hoisted": _ks_dispatches(ch),
+        "ks_dispatches_staged": _ks_dispatches(cs),
+        "dispatch_ratio": _ks_dispatches(ch) / _ks_dispatches(cs),
+        "dispatch_ratio_total": dispatch.total(ch) / dispatch.total(cs),
+        "wall_ms_hoisted": t_h * 1e3,
+        "wall_ms_staged": t_s * 1e3,
+        "wall_speedup": t_s / t_h,
+    }
+
+
+SMOKE_GROUPS = [(1 << 14, 3, 3, 15)]
+FULL_GROUPS = [(1 << 9, 5, 1, 8), (1 << 9, 5, 2, 8), (1 << 10, 8, 2, 12), (1 << 14, 3, 3, 15)]
+
+
+def run(smoke: bool = False, iters: int = 2) -> list[dict]:
+    rows = []
+    for n, L, dnum, k in (SMOKE_GROUPS if smoke else FULL_GROUPS):
+        rows.append(bench_group(n, L, dnum, k, iters=iters))
+    rows.append(bench_cts_stage(iters=iters))
+    return rows
+
+
+def check_gates(rows: list[dict]) -> list[str]:
+    """The hoisting CI gates; returns human-readable failure strings."""
+    failures = []
+    for r in rows:
+        if not r["bitexact"]:
+            failures.append(f"{r['config']}: hoisted result NOT bit-exact")
+        if r["config"].startswith("cts_stage"):
+            if r["dispatch_ratio"] > 0.60:
+                failures.append(
+                    f"{r['config']}: hoisted issues {r['dispatch_ratio']:.0%} of the "
+                    f"staged key-switch dispatches (gate: <= 60%)"
+                )
+            if r["wall_ms_hoisted"] >= r["wall_ms_staged"]:
+                failures.append(
+                    f"{r['config']}: hoisted wall clock {r['wall_ms_hoisted']:.1f} ms "
+                    f"did not beat staged {r['wall_ms_staged']:.1f} ms"
+                )
+            if r["ext_ntt_hoisted"] >= r["ext_ntt_staged"]:
+                failures.append(f"{r['config']}: ext-NTT records not reduced")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="gate configs only")
+    ap.add_argument("--out", default=None, help="write CSV rows to this file")
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    rows = run(smoke=args.smoke, iters=args.iters)
+    lines = []
+    for r in rows:
+        for key, val in r.items():
+            if key == "config":
+                continue
+            if isinstance(val, float):
+                val = f"{val:.6g}"
+            lines.append(f"hoisting.{r['config']}.{key},{val},0")
+    print("\n".join(lines))
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write("\n".join(lines) + "\n")
+
+    failures = check_gates(rows)
+    for f in failures:
+        print(f"GATE FAILED: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

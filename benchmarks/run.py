@@ -44,6 +44,30 @@ def emit_fusedks(emit, smoke: bool, iters: int) -> None:
             emit(f"fusedks.{cfg}.{key}", row[key])
 
 
+def emit_hoisting(emit, smoke: bool, iters: int) -> None:
+    """Hoisted vs per-rotation rotations: amortisation rows.
+
+    --smoke runs one SMALL group config only (seconds) — the N=2^14 CtS-stage
+    gate configs are owned by the dedicated hoisting-smoke CI job
+    (`benchmarks.hoisting_bench --smoke`), which is also the only place the
+    gates can actually fail the build; duplicating the heavy run here would
+    cost minutes per push for an advisory CSV row."""
+    from . import hoisting_bench
+
+    if smoke:
+        rows = [hoisting_bench.bench_group(1 << 10, 8, 2, 12, iters=iters)]
+    else:
+        rows = hoisting_bench.run(smoke=False, iters=iters)
+    for r in rows:
+        for key in ("bitexact", "ext_ntt_hoisted", "ext_ntt_staged",
+                    "dispatch_ratio", "wall_ms_hoisted", "wall_ms_staged",
+                    "wall_speedup"):
+            emit(f"hoisting.{r['config']}.{key}", r[key])
+    if not smoke:
+        failures = hoisting_bench.check_gates(rows)
+        emit("hoisting.gates_dispatch_and_wallclock", int(not failures))
+
+
 def emit_serving(emit, smoke: bool) -> None:
     """Multi-tenant serving: SLO metrics per (scenario, chip) + claim check."""
     from . import serving_bench
@@ -137,6 +161,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI pass: fused-vs-staged key-switch (small ring) "
+                         "+ a small hoisted-rotation group row (the N=2^14 "
+                         "CtS-stage GATES run only in benchmarks.hoisting_bench) "
                          "+ fleet scale-out smoke")
     ap.add_argument("--out", default=None, help="also write CSV rows to this file")
     ap.add_argument("--iters", type=int, default=3, help="timing iterations per config")
@@ -146,6 +172,7 @@ def main(argv=None) -> None:
     t0 = time.time()
     try:
         emit_fusedks(emit, smoke=args.smoke, iters=args.iters)
+        emit_hoisting(emit, smoke=args.smoke, iters=args.iters)
         emit_cluster(emit, smoke=args.smoke)
         if not args.smoke:
             emit_paper_figs(emit)

@@ -88,43 +88,50 @@ def key_switch(pp: PlanParams, level: int, fused: bool = True) -> list[Instr]:
     return out
 
 
-def mod_up(pp: PlanParams, level: int) -> list[Instr]:
-    """Digit decomposition + raise to the extended basis (the shared half of a
-    key-switch — hoisted rotations amortise this across many rotations)."""
+def mod_up(pp: PlanParams, level: int, fused: bool = True) -> list[Instr]:
+    """Digit decomposition + raise to the extended basis — the shared
+    (rotation-independent) half of a key-switch.  Mirrors
+    ``repro.fhe.keyswitch.hoisted_mod_up``: the materialised digits round-trip
+    to the later MAC launches (one STORE/LOAD pair of β·ext limbs), in both
+    pipelines — that boundary is the price of reusing them."""
     n, nq = pp.n, level + 1
     ext = nq + pp.alpha
+    beta = pp.beta(level)
     out = [I("INTT", n, nq)]
-    for j in range(pp.beta(level)):
+    for j in range(beta):
         k = pp.digit_size(j, level)
-        out += [I("PMULT", n, k), I("BCONV", n, k, dst=ext), I("NTT", n, ext)]
+        out += [I("PMULT", n, k, fused=fused)]
+        out += _ws(n, k, fused)
+        out += [I("BCONV", n, k, dst=ext, fused=fused)]
+        out += _ws(n, ext, fused)
+        out += [I("NTT", n, ext, fused=fused)]
+    out += [I("STORE_WS", n, beta * ext), I("LOAD_WS", n, beta * ext)]
     return out
 
 
 def hoisted_rotations(pp: PlanParams, level: int, n_rots: int,
-                      lazy_moddown: bool = False) -> list[Instr]:
-    """Halevi–Shoup hoisting (beyond-paper; ARK-style): one ModUp shared by
-    ``n_rots`` rotations of the same ciphertext; each rotation then costs only
-    AUTO + ksk-MAC + ModDown.
+                      fused: bool = True) -> list[Instr]:
+    """Halevi–Shoup hoisting: one ModUp shared by ``n_rots`` rotations of the
+    same ciphertext; each rotation then costs only ksk-MAC + ModDown + the
+    folded automorphism (no per-rotation BConv/NTT through the extended
+    basis: β + O(1) forward ext-NTTs per group instead of n_rots·β).
 
-    ``lazy_moddown`` (double-hoisting, Bossuat et al.): rotation outputs stay
-    in the extended basis and are combined there; ONE ModDown pair per group.
-    """
+    Mirrors ``repro.fhe.ops.rotate_hoisted_group`` exactly: per rotation one
+    KSK stream + β MAC pairs + a ModDown pair + the c0 add + one AUTO per
+    output component (keys are σ_t^{-1}-pre-permuted, so the automorphism
+    lands once, after ModDown)."""
     n, nq = pp.n, level + 1
     ext = nq + pp.alpha
     beta = pp.beta(level)
-    out = mod_up(pp, level)
+    out = mod_up(pp, level, fused)
     for _ in range(n_rots):
         out += [I("LOAD_KSK", n, beta * 2 * ext, ext=ext, nq=nq, beta=beta)]
-        out += [I("AUTO", n, ext), I("AUTO", n, nq)]
-        out += [I("PMULT", n, 2 * ext, mac=True), I("PADD", n, 2 * ext, mac=True)] * beta
-        if lazy_moddown:
-            # accumulation rides the automorphism unit's exit adders
-            out += [I("PADD", n, 2 * ext, mac=True)]
-        else:
-            out += mod_down(pp, level) * 2
-            out += [I("PADD", n, nq)]
-    if lazy_moddown:
-        out += mod_down(pp, level) * 2
+        for _j in range(beta):
+            out += [I("PMULT", n, 2 * ext, mac=True, fused=fused)]
+            out += _ws(n, 2 * ext, fused)
+            out += [I("PADD", n, 2 * ext, mac=True, fused=fused)]
+        out += mod_down(pp, level, fused) * 2
+        out += [I("PADD", n, nq), I("AUTO", n, nq), I("AUTO", n, nq)]
     return out
 
 
@@ -197,17 +204,18 @@ def encrypt(pp: PlanParams, level: int) -> list[Instr]:
 def bsgs_matvec(
     pp: PlanParams, level: int, n_diags: int, n1: int,
     mode: str = "exec", share_babies: bool = False, hoist: bool = False,
+    fused: bool = True,
 ) -> list[Instr]:
     n, nq = pp.n, level + 1
     babies = sorted({d % n1 for d in range(n_diags)} - {0})
     giants = sorted({d // n1 for d in range(n_diags)} - {0})
     out: list[Instr] = []
     if hoist and not share_babies and babies:
-        # Halevi–Shoup: all baby rotations share one ModUp (+ lazy ModDown)
-        out += hoisted_rotations(pp, level, len(babies), lazy_moddown=True)
+        # Halevi–Shoup: the whole baby group shares one ModUp
+        out += hoisted_rotations(pp, level, len(babies), fused=fused)
     elif not share_babies:
         for _ in babies:
-            out += rotate(pp, level)
+            out += rotate(pp, level, fused)
     for d in range(n_diags):
         out += [I("NTT", n, nq)] if mode == "exec" else [I("LOAD_PT", n, nq)]
         out += [I("PMULT", n, 2 * nq)]
@@ -215,7 +223,7 @@ def bsgs_matvec(
     n_groups = len(giants) + 1
     out += [I("PADD", n, 2 * nq)] * (n_diags - n_groups)
     for _ in giants:
-        out += rotate(pp, level)
+        out += rotate(pp, level, fused)
     out += [I("PADD", n, 2 * nq)] * (n_groups - 1)
     out += rescale(pp, level)
     return out
@@ -290,7 +298,7 @@ def _dft_transform(pp: PlanParams, level: int, mode: str, radix: int = 32,
     out: list[Instr] = []
     if mode == "exec":
         n1 = max(1, 1 << int(round(math.log2(math.sqrt(slots)))))
-        out += bsgs_matvec(pp, level, slots, n1, mode=mode)
+        out += bsgs_matvec(pp, level, slots, n1, mode=mode, hoist=hoist)
         return out, 1
     stages = max(1, math.ceil(math.log(slots, radix)))
     diags = 2 * radix - 1
@@ -407,14 +415,14 @@ def _w_lola_mnist(pp: PlanParams, mode: str, encrypted_weights: bool = False) ->
     """LoLa-MNIST (§6.1): dense 785→1000 (as BSGS matvec), square, dense
     1000→10, square — the low-latency packed pipeline."""
     lv = pp.L
-    out = bsgs_matvec(pp, lv, 64, 8, mode=mode)
+    out = bsgs_matvec(pp, lv, 64, 8, mode=mode, hoist=_HOIST.get())
     lvl = lv - 1
     if encrypted_weights:
         out += hmul(pp, lvl)  # ct×ct matvec core surrogate
         lvl -= 1
     out += hmul(pp, lvl)  # square activation
     lvl -= 1
-    out += bsgs_matvec(pp, lvl, 32, 4, mode=mode)
+    out += bsgs_matvec(pp, lvl, 32, 4, mode=mode, hoist=_HOIST.get())
     lvl -= 1
     out += hmul(pp, lvl)  # square activation
     return out
@@ -430,11 +438,11 @@ def _w_lola_cifar(pp: PlanParams, mode: str) -> list[Instr]:
     lvl -= 1
     out += hmul(pp, lvl)  # square
     lvl -= 1
-    out += bsgs_matvec(pp, lvl, 128, 8, mode=mode)
+    out += bsgs_matvec(pp, lvl, 128, 8, mode=mode, hoist=_HOIST.get())
     lvl -= 1
     out += hmul(pp, lvl)  # square
     lvl -= 1
-    out += bsgs_matvec(pp, lvl, 32, 4, mode=mode)
+    out += bsgs_matvec(pp, lvl, 32, 4, mode=mode, hoist=_HOIST.get())
     return out
 
 
@@ -445,7 +453,7 @@ def _w_logreg(pp: PlanParams, mode: str) -> list[Instr]:
     out: list[Instr] = []
     lvl = pp.L
     # X·w: BSGS matvec over packed features
-    out += bsgs_matvec(pp, lvl, 256, 16, mode=mode)
+    out += bsgs_matvec(pp, lvl, 256, 16, mode=mode, hoist=_HOIST.get())
     lvl -= 1
     # sigmoid degree-7 (3 mult levels, 4 mults)
     for _ in range(4):
@@ -453,7 +461,7 @@ def _w_logreg(pp: PlanParams, mode: str) -> list[Instr]:
         lvl -= 1 if _ % 2 else 0
     lvl -= 2
     # gradient: Xᵀ·err matvec + weight update
-    out += bsgs_matvec(pp, lvl, 256, 16, mode=mode)
+    out += bsgs_matvec(pp, lvl, 256, 16, mode=mode, hoist=_HOIST.get())
     lvl -= 1
     out += mul_plain(pp, lvl, mode=mode) + add_ct(pp, lvl - 1)
     # bootstrap once per iteration (level budget exhausted)
@@ -467,7 +475,7 @@ def _w_lstm(pp: PlanParams, mode: str) -> list[Instr]:
     out: list[Instr] = []
     lvl = pp.L
     for _ in range(8):  # W_g·x and U_g·h for 4 gates
-        out += bsgs_matvec(pp, lvl, 128, 8, mode=mode)
+        out += bsgs_matvec(pp, lvl, 128, 8, mode=mode, hoist=_HOIST.get())
     lvl -= 1
     for _ in range(4 * 2):  # activation polys (deg-3: 2 mults each)
         out += hmul(pp, max(1, lvl))
@@ -486,15 +494,15 @@ def _w_resnet20(pp: PlanParams, mode: str) -> list[Instr]:
     lvl = pp.L
     for block in range(9):  # 9 residual blocks
         for _ in range(2):  # two convs per block (as BSGS matvecs over channels)
-            out += bsgs_matvec(pp, max(4, lvl), 64, 8, mode=mode)
+            out += bsgs_matvec(pp, max(4, lvl), 64, 8, mode=mode, hoist=_HOIST.get())
             lvl = max(4, lvl - 1)
             for _ in range(6):  # poly-ReLU mults
                 out += hmul(pp, max(2, lvl))
             lvl = max(4, lvl - 3)
         out += add_ct(pp, max(1, lvl))  # residual add
-        out += bootstrap(pp, degree=63, mode=mode)
+        out += bootstrap(pp, degree=63, mode=mode, hoist=_HOIST.get())
         lvl = pp.L - 14  # post-bootstrap budget
-    out += bsgs_matvec(pp, max(4, lvl), 64, 8, mode=mode)  # final FC
+    out += bsgs_matvec(pp, max(4, lvl), 64, 8, mode=mode, hoist=_HOIST.get())  # final FC
     return out
 
 

@@ -21,6 +21,15 @@ boundary); each costs its working set through HBM regardless of the chip,
 because the round-trip happens between kernel launches.  Fused-pipeline
 traces (``repro.kernels.fusedks``) emit none — `tests/test_fusedks.py`
 validates this accounting against both captured streams.
+
+Hoisted-rotation traces (``planner.hoisted_rotations`` /
+``fhe.ops.rotate_hoisted_group``) are the other shape this model prices:
+one ModUp (INTT + β·{PMULT, BCONV, NTT}) plus ONE STORE_WS/LOAD_WS pair of
+β·ext limbs — the materialised hoisted digits round-tripping to the MAC
+launches — followed by k per-rotation {LOAD_KSK, MAC, ModDown, PADD, 2×AUTO}
+records.  No new instruction kinds: the amortisation shows up as k·β ext-NTT
+records collapsing to β, which the `ntt` unit total directly rewards;
+`tests/test_hoisting.py` validates planner/simulator parity for this shape.
 """
 
 from __future__ import annotations

@@ -50,6 +50,7 @@ class BootstrapContext:
     sine_coeffs: np.ndarray
     K: int
     eval_mod_degree: int
+    galois_rotations: tuple[int, ...] = ()  # precomputed per-plan rotation union
 
     @property
     def depth(self) -> int:
@@ -90,13 +91,17 @@ def build_context(
     f = lambda x: (q0 / params.scale) * np.sin(c * x) / (2.0 * np.pi)
     coeffs = polyeval.chebyshev_fit(f, degree)
 
+    # precompute the union of Galois rotations across every BSGS plan ONCE
+    # (plan.rotations() is cached per plan) so keygen generates exactly one
+    # switching key per needed Galois element — no over-generation
     rots = set()
     for p in (*cts_plans, *stc_plans):
         rots |= p.rotations()
-    keys = full_keyset(params, seed=seed, rotations=tuple(sorted(rots)), conjugate=True, h=h)
+    rotations = tuple(sorted(rots))
+    keys = full_keyset(params, seed=seed, rotations=rotations, conjugate=True, h=h)
     return BootstrapContext(
         params=params, keys=keys, cts_plans=cts_plans, stc_plans=stc_plans,
-        sine_coeffs=coeffs, K=K, eval_mod_degree=degree,
+        sine_coeffs=coeffs, K=K, eval_mod_degree=degree, galois_rotations=rotations,
     )
 
 
@@ -127,12 +132,15 @@ def mod_raise(ctx: BootstrapContext, ct: ops.Ciphertext, backend: str = "auto") 
     )
 
 
-def coeff_to_slot(ctx: BootstrapContext, ct: ops.Ciphertext,
-                  backend: str = "auto") -> tuple[ops.Ciphertext, ops.Ciphertext]:
-    """Slots become the coefficient halves a0, a1 (each real)."""
+def coeff_to_slot(ctx: BootstrapContext, ct: ops.Ciphertext, backend: str = "auto",
+                  hoisting: str = "auto") -> tuple[ops.Ciphertext, ops.Ciphertext]:
+    """Slots become the coefficient halves a0, a1 (each real).
+
+    Both BSGS transforms hoist their baby-step rotations per group
+    (``hoisting`` threads through to ``linear.apply_bsgs``)."""
     p, keys = ctx.params, ctx.keys
-    u0 = linear.apply_bsgs(p, ct, ctx.cts_plans[0], keys, backend=backend)
-    u1 = linear.apply_bsgs(p, ct, ctx.cts_plans[1], keys, backend=backend)
+    u0 = linear.apply_bsgs(p, ct, ctx.cts_plans[0], keys, backend=backend, hoisting=hoisting)
+    u1 = linear.apply_bsgs(p, ct, ctx.cts_plans[1], keys, backend=backend, hoisting=hoisting)
     return linear.real_part(p, u0, keys, backend), linear.real_part(p, u1, keys, backend)
 
 
@@ -155,16 +163,16 @@ def eval_mod(ctx: BootstrapContext, ct: ops.Ciphertext, coeff_scale: float,
 
 
 def slot_to_coeff(ctx: BootstrapContext, a0: ops.Ciphertext, a1: ops.Ciphertext,
-                  backend: str = "auto") -> ops.Ciphertext:
+                  backend: str = "auto", hoisting: str = "auto") -> ops.Ciphertext:
     p, keys = ctx.params, ctx.keys
-    v0 = linear.apply_bsgs(p, a0, ctx.stc_plans[0], keys, backend=backend)
-    v1 = linear.apply_bsgs(p, a1, ctx.stc_plans[1], keys, backend=backend)
+    v0 = linear.apply_bsgs(p, a0, ctx.stc_plans[0], keys, backend=backend, hoisting=hoisting)
+    v1 = linear.apply_bsgs(p, a1, ctx.stc_plans[1], keys, backend=backend, hoisting=hoisting)
     return polyeval.add_any(p, v0, v1, backend)
 
 
 def bootstrap(
     ctx: BootstrapContext, ct: ops.Ciphertext, post_scale: float | None = None,
-    backend: str = "auto",
+    backend: str = "auto", hoisting: str = "auto",
 ) -> ops.Ciphertext:
     """Refresh an exhausted ciphertext to level L − depth.
 
@@ -172,15 +180,16 @@ def bootstrap(
     the message must enter bootstrapping attenuated (|m| ≪ q0); the caller
     divides before exhaustion and passes the same factor here to restore it.
     ``backend`` selects the key-switch pipeline for every rotation/relin inside
-    (see ``keyswitch.resolve_pipeline``).
+    (see ``keyswitch.resolve_pipeline``); ``hoisting`` selects whether CtS/StC
+    baby-step groups share one ModUp per group (bit-exact either way).
     """
     trace.record("BOOTSTRAP_BEGIN", ctx.params.n, ctx.params.L + 1)
     in_scale = ct.scale
     raised = mod_raise(ctx, ct, backend)
-    a0, a1 = coeff_to_slot(ctx, raised, backend)
+    a0, a1 = coeff_to_slot(ctx, raised, backend, hoisting)
     m0 = eval_mod(ctx, a0, raised.scale, backend)
     m1 = eval_mod(ctx, a1, raised.scale, backend)
-    out = slot_to_coeff(ctx, m0, m1, backend)
+    out = slot_to_coeff(ctx, m0, m1, backend, hoisting)
     # amplitude bookkeeping: the sine was fitted for input scale = params.scale
     out = ops.Ciphertext(out.c0, out.c1, out.level, out.scale * in_scale / ctx.params.scale)
     if post_scale is not None:

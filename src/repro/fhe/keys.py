@@ -47,6 +47,9 @@ class KeySet:
     pk: PublicKey
     rlk: SwitchingKey
     gks: dict[int, SwitchingKey]  # galois element t → key for σ_t(s) → s
+    # (t, level) → σ_t^{-1}-pre-permuted level-restricted key, filled lazily by
+    # ``keyswitch.hoisted_ksk`` — a keygen-time precompute for hoisted rotations
+    hoist_cache: dict = dataclasses.field(default_factory=dict, repr=False, compare=False)
 
     def galois(self, t: int) -> SwitchingKey:
         if t not in self.gks:
@@ -147,6 +150,19 @@ def galois_keygen(params: CkksParams, sk: SecretKey, t: int, seed: int = 3) -> S
     return kskgen(params, sk, s_t, seed + t)
 
 
+def galois_elements(params: CkksParams, rotations: tuple[int, ...] = (),
+                    conjugate: bool = False) -> tuple[int, ...]:
+    """Deduplicated Galois elements a rotation set needs keys for.
+
+    Rotations congruent mod ``slots`` share one element, so precomputing this
+    union (e.g. over every BSGS plan of a bootstrapping context) is what keeps
+    keygen from over-generating switching keys."""
+    ts = {pow(5, r % params.slots, 2 * params.n) for r in rotations if r % params.slots}
+    if conjugate:
+        ts.add(2 * params.n - 1)
+    return tuple(sorted(ts))
+
+
 def full_keyset(
     params: CkksParams,
     seed: int = 0,
@@ -154,16 +170,12 @@ def full_keyset(
     conjugate: bool = False,
     h: int | None = None,
 ) -> KeySet:
-    """Generate sk/pk/rlk plus Galois keys for the given slot rotations."""
+    """Generate sk/pk/rlk plus exactly one Galois key per needed element."""
     sk = keygen(params, seed, h=h)
     pk = pkgen(params, sk, seed + 1)
     rlk = relin_keygen(params, sk, seed + 2)
-    gks: dict[int, SwitchingKey] = {}
-    for r in rotations:
-        t = pow(5, r % (params.n // 2), 2 * params.n)
-        if t not in gks:
-            gks[t] = galois_keygen(params, sk, t, seed + 100)
-    if conjugate:
-        t = 2 * params.n - 1
-        gks[t] = galois_keygen(params, sk, t, seed + 100)
+    gks: dict[int, SwitchingKey] = {
+        t: galois_keygen(params, sk, t, seed + 100)
+        for t in galois_elements(params, rotations, conjugate)
+    }
     return KeySet(sk=sk, pk=pk, rlk=rlk, gks=gks)

@@ -34,6 +34,7 @@ bootstrappable clusters are shaped around.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -42,11 +43,12 @@ import numpy as np
 
 from repro.kernels.bconv import ops as bconv_ops
 from repro.kernels.fusedks import ops as fused_ops
+from repro.kernels.hoistrot import ops as hoist_ops
 from repro.kernels.modops import ops as mo
 from repro.kernels.ntt import ops as ntt_ops
 
 from . import poly, rns, trace
-from .keys import SwitchingKey
+from .keys import KeySet, SwitchingKey
 from .params import CkksParams
 
 
@@ -184,6 +186,16 @@ def mod_down_pair(acc0, acc1, params: CkksParams, level: int, backend: str = "au
 
 def key_switch(d_eval, params: CkksParams, level: int, ksk: SwitchingKey, backend: str = "auto"):
     """d (eval, basis q_0..q_ℓ) ⊗ s' → (ks0, ks1) eval over q_0..q_ℓ under s."""
+    ksk_sel = _select_ksk(ksk, params, level, params.beta(level))
+    return key_switch_selected(d_eval, params, level, ksk_sel, backend)
+
+
+def key_switch_selected(d_eval, params: CkksParams, level: int, ksk_sel, backend: str = "auto"):
+    """``key_switch`` over pre-selected key limbs ksk_sel: (β, 2, m, N).
+
+    The rotation path hands in σ_t^{-1}-pre-permuted Galois keys here (see
+    ``hoisted_ksk``) so the standard and hoisted pipelines run the *same*
+    per-digit math and stay bit-exact against each other."""
     pipeline, stage = resolve_pipeline(backend)
     n = params.n
     beta = params.beta(level)
@@ -193,7 +205,6 @@ def key_switch(d_eval, params: CkksParams, level: int, ksk: SwitchingKey, backen
 
     trace.record("LOAD_KSK", n, beta * 2 * m)
     d_coeff = poly.to_coeff(d_eval, params, poly.q_idx(params, level), stage)
-    ksk_sel = _select_ksk(ksk, params, level, beta)
 
     if pipeline == "fused":
         # stages 2–4 for all β digits and both key components: ONE launch
@@ -228,3 +239,209 @@ def key_switch(d_eval, params: CkksParams, level: int, ksk: SwitchingKey, backen
     ks0 = mod_down(acc0, params, level, backend)
     ks1 = mod_down(acc1, params, level, backend)
     return ks0, ks1
+
+
+# ---------------------------------------------------------------------------
+# hoisted (Halevi–Shoup) rotation key-switching
+# ---------------------------------------------------------------------------
+#
+# The ModUp half of a key-switch (iNTT → digit decompose → prescale → BConv →
+# NTT into the extended basis) depends only on the input polynomial — never on
+# the Galois element — so k rotations of the same ciphertext can share ONE
+# ModUp and pay only KSK-MAC + ModDown each: O(β + k) forward NTTs through the
+# extended basis instead of O(k·β).
+#
+# The automorphism is folded instead of applied per digit: with keys
+# pre-permuted by σ_t^{-1} (cached per KeySet in ``hoisted_ksk``),
+#
+#   KS(σ_t(d)) = σ_t( ModDown( Σ_j D_j(d) ∘ σ_t^{-1}(ksk_j) ) )
+#
+# because σ_t commutes exactly (bit-exactly, per-residue) with every stage:
+# it is a pure slot permutation in the eval domain, a signed coefficient
+# permutation in the coefficient domain, and every ModUp/ModDown stage is a
+# per-coefficient-index linear map over the limbs.  So the whole MAC + ModDown
+# runs in the σ_t^{-1} frame and ONE permutation per output component lands
+# the result — that single AUTO also absorbs the σ_t(c0) term: the final
+# ciphertext is (σ_t(c0 + ks0'), σ_t(ks1')).
+
+
+@dataclasses.dataclass
+class HoistedDigits:
+    """Reusable ModUp decomposition of one eval-domain polynomial.
+
+    ``digits`` is (β, m, N) uint32 over the extended basis (eval domain) —
+    the rotation-independent half of a key-switch, shared by every rotation
+    of a hoisted group.
+    """
+
+    digits: jnp.ndarray
+    level: int
+
+    @property
+    def beta(self) -> int:
+        return int(self.digits.shape[0])
+
+
+def _record_modup_digits(params: CkksParams, level: int) -> None:
+    """Trace the fused ModUp pipeline (planner ``mod_up(fused=True)``)."""
+    n = params.n
+    m = len(poly.ext_idx(params, level))
+    for j in range(params.beta(level)):
+        k = len(tuple(i for i in params.digit(j) if i <= level))
+        trace.record("PMULT", n, k, fused=True)
+        trace.record("BCONV", n, k, dst=m, fused=True)
+        trace.record("NTT", n, m, fused=True)
+
+
+def hoisted_mod_up(d_eval, params: CkksParams, level: int, backend: str = "auto") -> HoistedDigits:
+    """ModUp once: d (eval, q_0..q_ℓ) → reusable extended-basis digits.
+
+    The returned digits are materialised (they round-trip to the later MAC
+    launches — the trace carries one STORE_WS/LOAD_WS pair of β·m limbs),
+    amortising the β forward NTTs across every rotation that reuses them.
+    """
+    pipeline, stage = resolve_pipeline(backend)
+    n = params.n
+    beta = params.beta(level)
+    ext = poly.ext_idx(params, level)
+    m = len(ext)
+    d_coeff = poly.to_coeff(d_eval, params, poly.q_idx(params, level), stage)
+
+    if pipeline == "fused":
+        _record_modup_digits(params, level)
+        digits = hoist_ops.mod_up_digits(d_coeff, params, level, backend="kernel")
+    else:
+        rows = []
+        for j in range(beta):
+            digit_idx, bhat_inv, w, dst = _digit_tables(params, level, j)
+            k = len(digit_idx)
+            src_np = np.array(poly.primes_for(params, digit_idx), np.uint64)
+            dj = d_coeff[digit_idx[0] : digit_idx[-1] + 1]
+            xhat = _scale_limbs(dj, bhat_inv, src_np, stage)
+            _boundary(n, k)
+            trace.record("BCONV", n, k, dst=m)
+            dj_ext = bconv_ops.bconv(xhat, w, dst, backend=stage)
+            _boundary(n, m)
+            rows.append(poly.to_eval(dj_ext, params, ext, stage))
+        digits = jnp.stack(rows)
+    _boundary(n, beta * m)  # hoisted digits round-trip to the MAC launches
+    return HoistedDigits(digits=digits, level=level)
+
+
+# Each cached entry is a full (β, 2, m, N) key copy — comparable to the
+# level-restricted key itself — so the per-KeySet cache is LRU-bounded BY
+# BYTES (an entry count would still admit ~β·m·N-sized blowups at production
+# parameters: one N=2^16 deep entry is >100 MB).  An entry larger than the
+# whole budget is simply not cached.
+HOIST_KSK_CACHE_BYTES = 256 * 2**20
+
+
+def hoisted_ksk(params: CkksParams, keys: KeySet, t: int, level: int):
+    """σ_t^{-1}-pre-permuted Galois key, restricted to the active basis.
+
+    (β, 2, m, N) uint32 — LRU-cached per KeySet/(t, level): the permutation
+    is a keygen-time precompute, not per-rotation work (no trace records).
+    """
+    cache = keys.hoist_cache
+    hit = cache.get((t, level))
+    if hit is not None:
+        cache[(t, level)] = cache.pop((t, level))  # move to MRU position
+        return hit
+    sel = _select_ksk(keys.galois(t), params, level, params.beta(level))
+    tinv = pow(t, -1, 2 * params.n)
+    pre = jnp.take(sel, poly._eval_perm(params.n, tinv), axis=-1)
+    if int(pre.nbytes) <= HOIST_KSK_CACHE_BYTES:
+        while cache and sum(int(v.nbytes) for v in cache.values()) + int(pre.nbytes) > (
+            HOIST_KSK_CACHE_BYTES
+        ):
+            cache.pop(next(iter(cache)))  # evict LRU (dicts preserve insertion order)
+        cache[(t, level)] = pre
+    return pre
+
+
+def hoisted_galois_ks(hd: HoistedDigits, ksk_stack, params: CkksParams, level: int,
+                      backend: str = "auto"):
+    """KSK inner products for a whole rotation group, σ_t^{-1} frame.
+
+    ksk_stack: (R, β, 2, m, N) pre-permuted key limbs (``hoisted_ksk``).
+    Returns (R, 2, m, N) accumulator pairs; the fused pipeline issues ONE
+    batched MAC launch with the hoisted digits VMEM-resident.
+    """
+    pipeline, stage = resolve_pipeline(backend)
+    n = params.n
+    beta = params.beta(level)
+    m = int(hd.digits.shape[1])
+    fused = pipeline == "fused"
+    for _ in range(ksk_stack.shape[0]):
+        trace.record("LOAD_KSK", n, beta * 2 * m)
+        for _j in range(beta):
+            trace.record("PMULT", n, 2 * m, mac=True, fused=fused)
+            if not fused:
+                _boundary(n, 2 * m)
+            trace.record("PADD", n, 2 * m, mac=True, fused=fused)
+    # non-fused: per-op MAC at the resolved stage backend, mirroring
+    # key_switch_selected's staged pipeline (stage="auto" uses per-op kernels
+    # on TPU, the u64 oracle elsewhere)
+    return hoist_ops.galois_mac(
+        hd.digits, ksk_stack, params, level,
+        backend="kernel" if fused else stage, staged=not fused,
+    )
+
+
+def mod_down_group(accs, params: CkksParams, level: int, backend: str = "auto"):
+    """ModDown every accumulator pair of a hoisted group.
+
+    accs: (R, 2, m, N) → (R, 2, level+1, N).  The fused pipeline batches all
+    2·R tails through ONE P-block iNTT + ONE ModDown launch.
+    """
+    pipeline, _stage = resolve_pipeline(backend)
+    nrot = accs.shape[0]
+    if pipeline != "fused":
+        return jnp.stack([
+            jnp.stack([mod_down(accs[i, c], params, level, backend) for c in range(2)])
+            for i in range(nrot)
+        ])
+    nq = level + 1
+    for _ in range(2 * nrot):
+        _record_fused_moddown(params, level)
+    p_part = accs[:, :, nq:].reshape(2 * nrot, params.alpha, params.n)
+    plan = poly.plan_for(params, poly.p_idx(params))
+    p_coeff = ntt_ops.ntt_inv(p_part, plan, _stage)
+    q_part = accs[:, :, :nq].reshape(2 * nrot, nq, params.n)
+    out = fused_ops.mod_down_digits(p_coeff, q_part, params, level, backend="kernel")
+    return out.reshape(nrot, 2, nq, params.n)
+
+
+def permute_last(c0_eval, ks0, ks1, t: int, params: CkksParams, level: int,
+                 backend: str = "auto"):
+    """The shared rotation epilogue: c0 + ks0, then ONE σ_t per component.
+
+    ``ks0``/``ks1`` come from a key-switch against the σ_t^{-1}-pre-permuted
+    key (``hoisted_ksk``), so the single automorphism here lands the rotated
+    ciphertext — it also absorbs the σ_t(c0) term.  Every rotation path
+    (standard, single-hoisted, group-hoisted) MUST end through this helper:
+    the trace shape ([PADD, AUTO, AUTO], matching the planner) and the
+    bit-exactness of hoisted vs standard both hang on the three paths doing
+    literally the same thing.
+    """
+    _pipeline, stage = resolve_pipeline(backend)
+    n = params.n
+    qs = np.array(params.q_primes[: level + 1], np.uint64)
+    trace.record("PADD", n, level + 1)
+    s0 = mo.pointwise_addmod(jnp.asarray(c0_eval, jnp.uint32), ks0, qs, backend=stage)
+    return poly.automorphism_eval(s0, n, t), poly.automorphism_eval(ks1, n, t)
+
+
+def rotate_hoisted(c0_eval, hd: HoistedDigits, t: int, keys: KeySet, params: CkksParams,
+                   level: int, backend: str = "auto"):
+    """One key-switched automorphism σ_t over a hoisted decomposition.
+
+    Runs only KSK-MAC + ModDown (+ the folded automorphism) — the expensive
+    ModUp was paid once when ``hd`` was built.  Returns the rotated
+    ciphertext's (c0, c1) eval-domain polynomials; bit-exact against the
+    un-hoisted ``ops.rotate`` path.
+    """
+    ksk_stack = hoisted_ksk(params, keys, t, level)[None]
+    accs = hoisted_galois_ks(hd, ksk_stack, params, level, backend)
+    ks = mod_down_group(accs, params, level, backend)
+    return permute_last(c0_eval, ks[0, 0], ks[0, 1], t, params, level, backend)

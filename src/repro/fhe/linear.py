@@ -24,17 +24,34 @@ from .params import CkksParams
 class BsgsPlan:
     n1: int  # baby-step count
     diags: dict[int, np.ndarray]  # d → diag_d(M) (length n complex)
+    _rot_cache: dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False
+    )
 
-    def rotations(self) -> set[int]:
-        """Slot rotations whose Galois keys the transform needs."""
-        rots = set()
-        for d in self.diags:
-            g, b = divmod(d, self.n1)
-            if b:
-                rots.add(b)
-            if g:
-                rots.add(g * self.n1)
-        return rots
+    def baby_steps(self) -> tuple[int, ...]:
+        """Sorted non-zero baby rotations {d mod n1} — one hoisting group."""
+        hit = self._rot_cache.get("babies")
+        if hit is None:
+            hit = tuple(sorted({d % self.n1 for d in self.diags} - {0}))
+            self._rot_cache["babies"] = hit
+        return hit
+
+    def giant_steps(self) -> tuple[int, ...]:
+        """Sorted non-zero giant rotations {(d // n1) · n1}."""
+        hit = self._rot_cache.get("giants")
+        if hit is None:
+            hit = tuple(sorted({(d // self.n1) * self.n1 for d in self.diags} - {0}))
+            self._rot_cache["giants"] = hit
+        return hit
+
+    def rotations(self) -> frozenset[int]:
+        """Slot rotations whose Galois keys the transform needs (cached —
+        keygen and every apply call share one computation)."""
+        hit = self._rot_cache.get("all")
+        if hit is None:
+            hit = frozenset(self.baby_steps()) | frozenset(self.giant_steps())
+            self._rot_cache["all"] = hit
+        return hit
 
 
 def plan_matrix(m: np.ndarray, n1: int | None = None, tol: float = 0.0) -> BsgsPlan:
@@ -60,16 +77,29 @@ def apply_bsgs(
     keys: KeySet,
     scale: float | None = None,
     backend: str = "auto",
+    hoisting: str = "auto",
 ) -> ops.Ciphertext:
-    """Homomorphic M·v.  Consumes one level (single rescale at the end)."""
-    n = params.slots
+    """Homomorphic M·v.  Consumes one level (single rescale at the end).
+
+    ``hoisting`` controls the baby-step rotations (the dominant key-switch
+    cost): "auto"/"always" share ONE ModUp across the whole baby group
+    (Halevi–Shoup; "auto" falls back to per-rotation key-switching when the
+    group has fewer than two rotations), "never" key-switches each baby
+    separately.  All modes are bit-exact against each other.  Giant-step
+    rotations apply to *different* ciphertexts (the per-group partial sums),
+    so they cannot share a ModUp and always run the standard path.
+    """
+    if hoisting not in ops.HOISTING_MODES:
+        raise ValueError(f"unknown hoisting mode {hoisting!r}")
     scale = params.scale if scale is None else scale
     lv = ct.level
 
     babies: dict[int, ops.Ciphertext] = {0: ct}
-    needed_b = sorted({d % plan.n1 for d in plan.diags})
-    for b in needed_b:
-        if b and b not in babies:
+    needed_b = plan.baby_steps()
+    if hoisting == "always" or (hoisting == "auto" and len(needed_b) >= 2):
+        babies.update(ops.rotate_hoisted_group(params, ct, needed_b, keys, backend))
+    else:
+        for b in needed_b:
             babies[b] = ops.rotate(params, ct, b, keys, backend)
 
     by_giant: dict[int, list[int]] = {}
@@ -99,13 +129,14 @@ def apply_bsgs_pair(
     keys: KeySet,
     scale: float | None = None,
     backend: str = "auto",
+    hoisting: str = "auto",
 ) -> tuple[ops.Ciphertext, ops.Ciphertext]:
     """Two transforms of the same input sharing the baby rotations."""
     # (simple composition; baby-step sharing is an optimisation the scheduler
     # models — numerically we just apply twice)
     return (
-        apply_bsgs(params, ct, plans[0], keys, scale, backend),
-        apply_bsgs(params, ct, plans[1], keys, scale, backend),
+        apply_bsgs(params, ct, plans[0], keys, scale, backend, hoisting),
+        apply_bsgs(params, ct, plans[1], keys, scale, backend, hoisting),
     )
 
 

@@ -299,26 +299,96 @@ def rescale(params: CkksParams, ct: Ciphertext, backend: str = "auto") -> Cipher
 # ---------------------------------------------------------------------------
 
 
-def rotate(params: CkksParams, ct: Ciphertext, r: int, keys: KeySet, backend: str = "auto") -> Ciphertext:
-    """Cyclic left-rotation of the slot vector by r (σ_{5^r} + key switch)."""
+HOISTING_MODES = ("never", "auto", "always")
+
+
+def rotate(params: CkksParams, ct: Ciphertext, r: int, keys: KeySet, backend: str = "auto",
+           hoisting: str = "never") -> Ciphertext:
+    """Cyclic left-rotation of the slot vector by r (σ_{5^r} + key switch).
+
+    ``hoisting`` selects the key-switch shape: "never"/"auto" run the standard
+    per-rotation ModUp (a single rotation has nothing to amortise); "always"
+    routes through the hoisted path (``rotate_hoisted``) — bit-exact either
+    way.  Groups of rotations of the same ciphertext should use
+    ``rotate_hoisted_group`` to actually share the ModUp.
+    """
+    if hoisting not in HOISTING_MODES:
+        raise ValueError(f"unknown hoisting mode {hoisting!r}")
+    if r % params.slots == 0:
+        return ct
+    if hoisting == "always":
+        return rotate_hoisted(params, ct, r, keys, backend)
+    t = pow(5, r % params.slots, 2 * params.n)
+    return _apply_galois(params, ct, t, keys, backend)
+
+
+def rotate_hoisted(params: CkksParams, ct: Ciphertext, r: int, keys: KeySet,
+                   backend: str = "auto",
+                   hoisted: keyswitch.HoistedDigits | None = None) -> Ciphertext:
+    """Hoisted rotation: reuse (or build) the ModUp decomposition of ct.c1.
+
+    Pass ``hoisted=keyswitch.hoisted_mod_up(ct.c1, ...)`` to amortise the
+    ModUp across several calls on the same ciphertext; each call then costs
+    only KSK-MAC + ModDown + one automorphism.  Bit-exact vs ``rotate``.
+    """
     if r % params.slots == 0:
         return ct
     t = pow(5, r % params.slots, 2 * params.n)
-    return _apply_galois(params, ct, t, keys.galois(t), backend)
+    hd = hoisted if hoisted is not None else keyswitch.hoisted_mod_up(
+        ct.c1, params, ct.level, backend
+    )
+    c0, c1 = keyswitch.rotate_hoisted(ct.c0, hd, t, keys, params, ct.level, backend)
+    return Ciphertext(c0=c0, c1=c1, level=ct.level, scale=ct.scale)
+
+
+def rotate_hoisted_group(params: CkksParams, ct: Ciphertext, rots, keys: KeySet,
+                         backend: str = "auto") -> dict[int, Ciphertext]:
+    """Halevi–Shoup hoisting: ONE ModUp shared by every rotation in ``rots``.
+
+    The fused pipeline batches the whole group: one ModUp launch, one Galois
+    KSK-MAC launch covering every rotation's key (hoisted digits resident in
+    VMEM), and one batched ModDown pair launch — O(β + k) extended-basis NTTs
+    for k rotations instead of O(k·β).  Returns {r: rotated ciphertext} keyed
+    by the input rotation values; each entry is bit-exact vs ``rotate``.
+    """
+    uniq: dict[int, int] = {}  # r mod slots → galois element
+    for r in rots:
+        rm = r % params.slots
+        if rm and rm not in uniq:
+            uniq[rm] = pow(5, rm, 2 * params.n)
+    if not uniq:
+        return {r: ct for r in rots}
+    lv = ct.level
+    hd = keyswitch.hoisted_mod_up(ct.c1, params, lv, backend)
+    ksk_stack = jnp.stack(
+        [keyswitch.hoisted_ksk(params, keys, t, lv) for t in uniq.values()]
+    )
+    accs = keyswitch.hoisted_galois_ks(hd, ksk_stack, params, lv, backend)
+    ks = keyswitch.mod_down_group(accs, params, lv, backend)
+    by_rm: dict[int, Ciphertext] = {}
+    for i, (rm, t) in enumerate(uniq.items()):
+        c0, c1 = keyswitch.permute_last(ct.c0, ks[i, 0], ks[i, 1], t, params, lv, backend)
+        by_rm[rm] = Ciphertext(c0=c0, c1=c1, level=lv, scale=ct.scale)
+    return {r: (by_rm[r % params.slots] if r % params.slots else ct) for r in rots}
 
 
 def conjugate(params: CkksParams, ct: Ciphertext, keys: KeySet, backend: str = "auto") -> Ciphertext:
     t = 2 * params.n - 1
-    return _apply_galois(params, ct, t, keys.galois(t), backend)
+    return _apply_galois(params, ct, t, keys, backend)
 
 
-def _apply_galois(params: CkksParams, ct: Ciphertext, t: int, gk: SwitchingKey, backend: str) -> Ciphertext:
-    qs = _qs(params, ct.level)
-    p0 = poly.automorphism_eval(ct.c0, params.n, t)
-    p1 = poly.automorphism_eval(ct.c1, params.n, t)
-    ks0, ks1 = keyswitch.key_switch(p1, params, ct.level, gk, backend)
-    trace.record("PADD", params.n, ct.level + 1)
-    return Ciphertext(
-        c0=mo.pointwise_addmod(p0, ks0, qs, backend=_stage(backend)),
-        c1=ks1, level=ct.level, scale=ct.scale,
-    )
+def _apply_galois(params: CkksParams, ct: Ciphertext, t: int, keys: KeySet, backend: str) -> Ciphertext:
+    """Key-switched automorphism σ_t, permute-last formulation.
+
+    The key-switch runs against the σ_t^{-1}-pre-permuted Galois key and the
+    shared ``keyswitch.permute_last`` epilogue lands the result.  This is the
+    same per-digit math as the hoisted path — ``rotate`` and
+    ``rotate_hoisted``/``rotate_hoisted_group`` are bit-exact against each
+    other — and the trace shape matches the classic permute-first pipeline
+    (2×AUTO + key-switch + PADD).
+    """
+    lv = ct.level
+    ksk_pre = keyswitch.hoisted_ksk(params, keys, t, lv)
+    ks0, ks1 = keyswitch.key_switch_selected(ct.c1, params, lv, ksk_pre, backend)
+    c0, c1 = keyswitch.permute_last(ct.c0, ks0, ks1, t, params, lv, backend)
+    return Ciphertext(c0=c0, c1=c1, level=lv, scale=ct.scale)

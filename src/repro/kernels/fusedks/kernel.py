@@ -176,19 +176,21 @@ def _fused_moddown_body(
 
 @functools.partial(jax.jit, static_argnames=("n1", "n2", "interpret"))
 def fused_moddown_pallas(pc, bh, b, binv, w, twa, v2, v1, t, cm, q, qinv, qpart, pinv, *, n1, n2, interpret):
-    """Fused prescale→BConv→NTT→(sub, ×P⁻¹) for both accumulators at once.
+    """Fused prescale→BConv→NTT→(sub, ×P⁻¹) for a batch of accumulators.
 
-    pc:    (2, k8, N) P-block coefficients of (acc0, acc1) after the iNTT
+    pc:    (C, k8, N) P-block coefficients of the accumulators after the iNTT
+           (C = 2 for one key-switch's pair; C = 2·R when a hoisted rotation
+           group ModDowns every rotation's pair in one launch)
     bh/b/binv: (k8, 1) prescale constants for the special block
-    w:     (k8, m) B̂ mod q_e;  qpart: (2, m, N) eval-domain q limbs
+    w:     (k8, m) B̂ mod q_e;  qpart: (C, m, N) eval-domain q limbs
     pinv:  (m, 1) Montgomery [P⁻¹]_{q_e}
-    NTT tables carry the q-basis (m = level+1 limbs).  Returns (2, m, N).
+    NTT tables carry the q-basis (m = level+1 limbs).  Returns (C, m, N).
     """
-    _, k8, n = pc.shape
+    nb, k8, n = pc.shape
     m = w.shape[1]
     return pl.pallas_call(
         functools.partial(_fused_moddown_body, n1=n1, n2=n2),
-        grid=(2, m),
+        grid=(nb, m),
         in_specs=[
             pl.BlockSpec((1, k8, n), lambda c, e: (c, 0, 0)),  # pc
             pl.BlockSpec((k8, 1), lambda c, e: (0, 0)),  # bh
@@ -206,6 +208,6 @@ def fused_moddown_pallas(pc, bh, b, binv, w, twa, v2, v1, t, cm, q, qinv, qpart,
             pl.BlockSpec((1, 1), lambda c, e: (e, 0)),  # pinv (mont)
         ],
         out_specs=pl.BlockSpec((1, 1, n), lambda c, e: (c, e, 0)),
-        out_shape=jax.ShapeDtypeStruct((2, m, n), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((nb, m, n), jnp.uint32),
         interpret=interpret,
     )(pc, bh, b, binv, w, twa, v2, v1, t, cm, q, qinv, qpart, pinv)

@@ -191,16 +191,19 @@ def key_switch_digits(d_coeff, ksk_sel, params: CkksParams, level: int, backend:
 
 
 def mod_down_digits(p_coeff, q_part, params: CkksParams, level: int, backend: str = "auto"):
-    """Fused ModDown tail for both accumulators.
+    """Fused ModDown tail for a batch of accumulators.
 
-    p_coeff: (2, α, N) coefficient-domain P-block limbs (post-iNTT);
-    q_part: (2, level+1, N) eval-domain q limbs.  Returns (2, level+1, N).
+    p_coeff: (C, α, N) coefficient-domain P-block limbs (post-iNTT);
+    q_part: (C, level+1, N) eval-domain q limbs.  Returns (C, level+1, N).
+    C = 2 for one key-switch's accumulator pair; a hoisted rotation group
+    passes C = 2·R to ModDown every rotation's pair in one launch.
     """
     if _resolve(backend) == "ref":
         return _ref.mod_down_digits_ref(p_coeff, q_part, params, level)
     tb = moddown_tables(params, level)
     alpha = params.alpha
-    pc = jnp.zeros((2, tb.k8, params.n), jnp.uint32).at[:, :alpha].set(
+    nb = p_coeff.shape[0]
+    pc = jnp.zeros((nb, tb.k8, params.n), jnp.uint32).at[:, :alpha].set(
         jnp.asarray(p_coeff, jnp.uint32)
     )
     dispatch.record("fused_moddown")

@@ -73,7 +73,7 @@ def mod_down_digits_ref(p_coeff, q_part, params: CkksParams, level: int):
     p_np, q_np, bhat_inv, w, pinv = _moddown_ref_tables(params, level)
     plan = poly.plan_for(params, poly.q_idx(params, level))
     outs = []
-    for c in range(2):
+    for c in range(p_coeff.shape[0]):
         xhat = _scale(p_coeff[c], bhat_inv, p_np)
         conv = bconv_ops.bconv(xhat, w, q_np, backend="ref")
         conv_eval = ntt_ops.ntt_fwd(conv, plan, "ref")

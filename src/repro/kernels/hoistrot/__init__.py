@@ -1,0 +1,1 @@
+"""Hoisted-rotation kernels: shared ModUp + batched Galois KSK-MAC."""

@@ -1,0 +1,137 @@
+"""Pallas TPU kernels for hoisted (Halevi–Shoup) rotation key-switching.
+
+A key-switched rotation splits into a ModUp half (digit decompose → prescale →
+BConv → NTT into the extended basis) and an apply half (KSK-MAC + ModDown).
+The ModUp half depends only on the input polynomial — never on the Galois
+element — so a group of rotations of the same ciphertext can share ONE ModUp.
+Two kernels realise that split:
+
+  * ``hoist_modup_pallas`` — the fused prescale→BConv→NTT pipeline of
+    ``kernels.fusedks`` with the MAC epilogue removed: grid = (ext_limb e,
+    digit j), one launch raises all β digits to the extended basis and
+    *materialises* them (β, m, N) instead of folding them into accumulators.
+
+  * ``hoist_mac_pallas`` — the batched Galois apply: grid = (ext_limb e,
+    rotation r) with r innermost, so the hoisted digit block for limb e
+    ((β, N) words) is copied into VMEM once and stays resident while every
+    rotation of the group streams its switching key through the MAC.  Keys
+    arrive pre-permuted by σ_t^{-1} (see ``fhe.keyswitch.hoisted_ksk``), which
+    turns the per-digit automorphism into a single post-ModDown permutation
+    and keeps this kernel a pure Montgomery multiply-accumulate.
+
+Per-rotation work after hoisting is one (1, β, 2, 1, N) key stream + 2N MACs
+per extended limb — no NTT, no BConv.  The β forward NTTs of the ModUp are
+paid once per group instead of once per rotation: O(β + k) vs O(k·β).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.fhe.ntt import NDIAG, NLIMB8
+from repro.kernels.fusedks.kernel import _ntt_fwd_inline, _prescale_bconv_row
+from repro.kernels.ntt.kernel import _montmul
+
+
+def _modup_body(
+    xd_ref, bh_ref, b_ref, binv_ref, w_ref, twa_ref, v2_ref, v1_ref, t_ref,
+    c_ref, q_ref, qinv_ref, o_ref, *, n1, n2,
+):
+    q = q_ref[0, 0]
+    qinv = qinv_ref[0, 0]
+    cm = c_ref[0]  # (NDIAG,)
+    y = _prescale_bconv_row(
+        xd_ref[0], bh_ref[0], b_ref[0], binv_ref[0], w_ref[0].T, cm, q, qinv
+    )
+    o_ref[0, 0] = _ntt_fwd_inline(
+        y.reshape(-1), twa_ref[0], v2_ref[0], v1_ref[0], t_ref[0], cm, q, qinv, n1, n2
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n1", "n2", "interpret"))
+def hoist_modup_pallas(xd, bh, b, binv, w, twa, v2, v1, t, cm, q, qinv, *, n1, n2, interpret):
+    """Raise all β digits of one polynomial to the extended basis: ONE launch.
+
+    Same inputs as ``fusedks.fused_ks_pallas`` minus the key material:
+    xd (β, k8, N) zero-padded digit source limbs (coeff domain), per-digit
+    prescale constants, BConv weights, and the extended-basis NTT plan.
+    Returns (β, m, N) uint32 — the hoisted digits, eval domain, reusable by
+    every rotation of the group.
+    """
+    beta, k8, n = xd.shape
+    m = w.shape[2]
+    return pl.pallas_call(
+        functools.partial(_modup_body, n1=n1, n2=n2),
+        grid=(m, beta),
+        in_specs=[
+            pl.BlockSpec((1, k8, n), lambda e, j: (j, 0, 0)),  # xd
+            pl.BlockSpec((1, k8, 1), lambda e, j: (j, 0, 0)),  # bh
+            pl.BlockSpec((1, k8, 1), lambda e, j: (j, 0, 0)),  # b
+            pl.BlockSpec((1, k8, 1), lambda e, j: (j, 0, 0)),  # binv
+            pl.BlockSpec((1, k8, 1), lambda e, j: (j, 0, e)),  # w column e
+            pl.BlockSpec((1, n1, n2), lambda e, j: (e, 0, 0)),  # twist
+            pl.BlockSpec((1, NLIMB8, n2, n2), lambda e, j: (e, 0, 0, 0)),  # V2
+            pl.BlockSpec((1, NLIMB8, n1, n1), lambda e, j: (e, 0, 0, 0)),  # V1
+            pl.BlockSpec((1, n1, n2), lambda e, j: (e, 0, 0)),  # inter-step twiddle
+            pl.BlockSpec((1, NDIAG), lambda e, j: (e, 0)),  # diagonal mont consts
+            pl.BlockSpec((1, 1), lambda e, j: (e, 0)),  # q
+            pl.BlockSpec((1, 1), lambda e, j: (e, 0)),  # qinv_neg
+        ],
+        out_specs=pl.BlockSpec((1, 1, n), lambda e, j: (j, e, 0)),
+        out_shape=jax.ShapeDtypeStruct((beta, m, n), jnp.uint32),
+        interpret=interpret,
+    )(xd, bh, b, binv, w, twa, v2, v1, t, cm, q, qinv)
+
+
+def _mac_body(dig_ref, ksk_ref, q_ref, qinv_ref, r2_ref, o_ref, *, beta):
+    q = q_ref[0, 0]
+    qinv = qinv_ref[0, 0]
+    r2 = r2_ref[0, 0]
+    acc0 = acc1 = None
+    for j in range(beta):  # β is static — the loop unrolls inside one program
+        x = dig_ref[j, 0]
+        t0 = _montmul(_montmul(x, ksk_ref[0, j, 0, 0], q, qinv), r2, q, qinv)
+        t1 = _montmul(_montmul(x, ksk_ref[0, j, 1, 0], q, qinv), r2, q, qinv)
+        if acc0 is None:
+            acc0, acc1 = t0, t1
+        else:
+            s0 = acc0 + t0
+            acc0 = jnp.where(s0 >= q, s0 - q, s0)
+            s1 = acc1 + t1
+            acc1 = jnp.where(s1 >= q, s1 - q, s1)
+    o_ref[0, 0, 0] = acc0
+    o_ref[0, 1, 0] = acc1
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hoist_mac_pallas(dig, ksk, q, qinv, r2, *, interpret):
+    """Every rotation of one hoisted group in a single launch.
+
+    dig: (β, m, N) hoisted digits (eval domain, extended basis) — the limb-e
+         block is VMEM-resident across all R rotations (r is the inner grid
+         axis, so its block index is constant while r sweeps);
+    ksk: (R, β, 2, m, N) σ_t^{-1}-pre-permuted switching-key limbs;
+    q/qinv/r2: (m, 1) extended-basis Montgomery constants.
+    Returns (R, 2, m, N): one MAC accumulator pair per rotation, still in the
+    σ_t^{-1} frame (the caller ModDowns, then applies the permutation once).
+    """
+    beta, m, n = dig.shape
+    nrot = ksk.shape[0]
+    return pl.pallas_call(
+        functools.partial(_mac_body, beta=beta),
+        grid=(m, nrot),
+        in_specs=[
+            pl.BlockSpec((beta, 1, n), lambda e, r: (0, e, 0)),  # dig (resident per e)
+            pl.BlockSpec((1, beta, 2, 1, n), lambda e, r: (r, 0, 0, e, 0)),  # ksk
+            pl.BlockSpec((1, 1), lambda e, r: (e, 0)),  # q
+            pl.BlockSpec((1, 1), lambda e, r: (e, 0)),  # qinv_neg
+            pl.BlockSpec((1, 1), lambda e, r: (e, 0)),  # r2
+        ],
+        out_specs=pl.BlockSpec((1, 2, 1, n), lambda e, r: (r, 0, e, 0)),
+        out_shape=jax.ShapeDtypeStruct((nrot, 2, m, n), jnp.uint32),
+        interpret=interpret,
+    )(dig, ksk, q, qinv, r2)

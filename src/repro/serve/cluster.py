@@ -73,6 +73,7 @@ class ClusterConfig:
     cold_start: bool = True  # model warm-set misses at all?
     cold_factor: float = 2.0  # penalty = factor × working_set_bytes / hbm_B_per_cycle
     warm_capacity_mb: float | None = None  # per-chip warm-set cap; default: chip L2
+    hoist: bool = False  # service-time kernel mode (hoisted rotations) per engine
 
     def __post_init__(self):
         if self.n_chips < 1:
@@ -132,7 +133,8 @@ class ClusterRouter:
         self.chip = chip
         self.config = config
         self.loop = loop if loop is not None else EventLoop()
-        self.engines = [ServingEngine(chip, loop=self.loop) for _ in range(config.n_chips)]
+        self.engines = [ServingEngine(chip, loop=self.loop, hoist=config.hoist)
+                        for _ in range(config.n_chips)]
         for i, eng in enumerate(self.engines):
             eng.on_job_complete = functools.partial(self._completed, i)
         # estimated outstanding service cycles per chip: the simulator prices
@@ -229,7 +231,7 @@ def serve_cluster(jobs: list[FheJob], chip: ChipConfig, n_chips: int = 2,
                   router: str = "jsq", seed: int = 0, cold_start: bool = True,
                   cold_factor: float = 2.0, warm_capacity_mb: float | None = None,
                   config: ClusterConfig | None = None,
-                  validate: bool = True) -> ClusterResult:
+                  validate: bool = True, hoist: bool = False) -> ClusterResult:
     """Serve an open-loop job list on an ``n_chips`` fleet; the one-call API.
 
     Pass ``config=`` to reuse a prepared ``ClusterConfig`` (the keyword
@@ -237,7 +239,7 @@ def serve_cluster(jobs: list[FheJob], chip: ChipConfig, n_chips: int = 2,
     """
     cfg = config if config is not None else ClusterConfig(
         n_chips=n_chips, router=router, seed=seed, cold_start=cold_start,
-        cold_factor=cold_factor, warm_capacity_mb=warm_capacity_mb)
+        cold_factor=cold_factor, warm_capacity_mb=warm_capacity_mb, hoist=hoist)
     rt = ClusterRouter(chip, cfg)
     for job in jobs:
         rt.submit(job)

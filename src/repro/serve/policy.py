@@ -99,6 +99,7 @@ class JobExec:
     chip_index: int = 0  # which fleet chip served the job (0 when single-chip)
     cold_start_cycles: float = 0.0  # router-charged warm-set miss, part of service_cycles
     _run_start: float | None = None
+    _suspended_at: float | None = None  # last preemption time (aging reference)
     _complete_ev: Event | None = None
 
     def __post_init__(self):
@@ -144,14 +145,18 @@ def working_set_bytes(job: FheJob) -> float:
 _SERVICE_MEMO: dict[tuple, SimResult] = {}
 
 
-def job_service_sim(job: FheJob, chip: ChipConfig) -> SimResult:
+def job_service_sim(job: FheJob, chip: ChipConfig, hoist: bool = False) -> SimResult:
     """Cycle-accurate service time for one job under its granted lanes.
 
-    Identical (chip, workload, kind) pairs share one SimResult — the planner
-    stream and lane grant are functions of those alone, so the simulation is
-    too.  Callers must treat the result as read-only.
+    Identical (chip, workload, kind, hoist) tuples share one SimResult — the
+    planner stream and lane grant are functions of those alone, so the
+    simulation is too.  ``hoist`` selects the kernel mode the planner expands
+    (per-rotation vs hoisted key-switching) and MUST be part of the memo key:
+    a memo keyed only on (chip, workload, kind) would silently hand
+    post-hoisting callers the pre-hoisting cycle counts.  Callers must treat
+    the result as read-only.
     """
-    key = (chip, job.workload, job.kind)
+    key = (chip, job.workload, job.kind, bool(hoist))
     hit = _SERVICE_MEMO.get(key)
     if hit is not None:
         return hit
@@ -163,7 +168,7 @@ def job_service_sim(job: FheJob, chip: ChipConfig) -> SimResult:
         cache_mb = chip.l1_mb_per_aff + chip.l2_mb / chip.n_affiliations
     else:
         lanes, cache_mb = lanes_deep(chip), chip.total_cache_mb
-    stream = workload_stream(job.workload, job.params, mode="hw")
+    stream = workload_stream(job.workload, job.params, mode="hw", hoist=hoist)
     sim = simulate_stream(stream, chip, lanes, cache_bytes=cache_mb * MB)
     _SERVICE_MEMO[key] = sim
     return sim
@@ -215,11 +220,27 @@ class _DeferredDispatchMixin:
 
 
 class FlashPolicy(_DeferredDispatchMixin):
-    """The paper's §4.2 heterogeneous multi-job policy (online form)."""
+    """The paper's §4.2 heterogeneous multi-job policy (online form).
 
-    def __init__(self, chip: ChipConfig):
+    ``aging_quanta`` is the deep-job aging / utilization-reserve knob
+    (ROADMAP): a saturating same-priority shallow stream would otherwise
+    starve a deep job indefinitely, because the gang launch needs every
+    affiliation free at once.  Once the oldest waiting (or suspended) deep
+    job has queued longer than ``aging_quanta`` × the observed mean shallow
+    service time, the policy stops admitting shallow jobs at or below the
+    deep job's priority — the chip drains within one shallow quantum and the
+    gang launches.  ``None`` (the default) disables aging: the knob trades
+    shallow tail latency for a deep-job starvation bound, so operators opt
+    in per deployment (``tests/test_serving.py`` pins both behaviours).
+    Strictly-higher-priority shallow traffic still overtakes an aged deep
+    job, so priorities keep their meaning.
+    """
+
+    def __init__(self, chip: ChipConfig, aging_quanta: float | None = None):
         assert chip.multi_job, f"{chip.name} cannot co-schedule jobs (multi_job=False)"
+        assert aging_quanta is None or aging_quanta > 0
         self.chip = chip
+        self.aging_quanta = aging_quanta
         self.loop: EventLoop | None = None
         self.on_complete: Callable[[JobExec], None] = lambda je: None
         self._dispatch_pending = False
@@ -227,6 +248,8 @@ class FlashPolicy(_DeferredDispatchMixin):
         self.shallow_q = _PriorityQueue()
         self.deep_q = _PriorityQueue()
         self.deep_active: JobExec | None = None
+        self._shallow_svc_sum = 0.0
+        self._shallow_svc_n = 0
 
     def bind(self, loop: EventLoop, on_complete: Callable[[JobExec], None]) -> None:
         self.loop = loop
@@ -235,6 +258,23 @@ class FlashPolicy(_DeferredDispatchMixin):
     def submit(self, je: JobExec) -> None:
         (self.shallow_q if je.kind == "shallow" else self.deep_q).push(je)
         self._schedule_dispatch()
+
+    def _aged(self, je: JobExec, now: float) -> bool:
+        """Has this deep job *waited* past the aging threshold?
+
+        Waiting is measured from arrival for a never-started job and from the
+        last suspension for a preempted one — time spent RUNNING must not
+        count, or a long-running deep job would be "aged" the instant it is
+        preempted.  The shallow quantum is the running mean of *completed*
+        shallow service times — before any shallow job completes there is
+        nothing to starve behind, so aging stays off and arrival-order
+        semantics are unchanged.
+        """
+        if self.aging_quanta is None or self._shallow_svc_n == 0:
+            return False
+        since = je._suspended_at if je._suspended_at is not None else je.job.arrival_cycle
+        quantum = self._shallow_svc_sum / self._shallow_svc_n
+        return (now - since) >= self.aging_quanta * quantum
 
     # -- dispatch -----------------------------------------------------------
 
@@ -263,23 +303,36 @@ class FlashPolicy(_DeferredDispatchMixin):
         d.n_preemptions += 1
         d.state = JobState.SUSPENDED
         d._run_start = None
+        d._suspended_at = now  # aging clock restarts: only waiting counts
         d._complete_ev = None
 
-    def _deep_fence_priority(self) -> float | None:
-        """Priority below which shallow jobs must yield to a waiting deep job."""
-        if self.deep_active is not None:  # suspended deep never fences (it was preempted)
+    def _deep_fence(self, now: float) -> tuple[float, bool] | None:
+        """(priority, strict) below which shallow jobs yield to a deep job.
+
+        ``strict`` (set by aging) also fences *equal*-priority shallow jobs —
+        the starvation case the knob exists for.  A suspended deep job fences
+        only once aged (it was legitimately preempted); a queued head fences
+        lower priorities always, equals only when aged."""
+        d = self.deep_active
+        if d is not None:
+            if d.state is JobState.SUSPENDED and self._aged(d, now):
+                return d.job.priority, True
             return None
         head = self.deep_q.peek()
-        return head.job.priority if head is not None else None
+        if head is None:
+            return None
+        return head.job.priority, self._aged(head, now)
 
     def _place_shallow(self, now: float) -> None:
         if self.deep_active is not None and self.deep_active.state is JobState.RUNNING:
             return  # deep gang owns every affiliation
-        fence = self._deep_fence_priority()
+        fence = self._deep_fence(now)
         while len(self.shallow_q):
             top = self.shallow_q.peek()
-            if fence is not None and top.job.priority < fence:
-                return  # drain for the higher-priority deep job
+            if fence is not None and (
+                top.job.priority < fence[0] or (fence[1] and top.job.priority <= fence[0])
+            ):
+                return  # drain for the (possibly aged) deep job
             free = [i for i, r in enumerate(self.aff_running) if r is None]
             if not free:
                 return
@@ -300,6 +353,8 @@ class FlashPolicy(_DeferredDispatchMixin):
         je.state = JobState.DONE
         je.completion = now
         self.aff_running[aff] = None
+        self._shallow_svc_sum += je.service_cycles
+        self._shallow_svc_n += 1
         self.on_complete(je)
         self._schedule_dispatch()
 
@@ -308,16 +363,24 @@ class FlashPolicy(_DeferredDispatchMixin):
             return  # gang needs the whole chip
         top = self.shallow_q.peek()
         if self.deep_active is not None:
-            # a suspended deep resumes only once the shallow system drains
-            if self.deep_active.state is JobState.SUSPENDED and top is None:
-                self._run_deep(self.deep_active, now)
+            # a suspended deep resumes once the shallow system drains — or,
+            # aged, once the fence has drained the equal/lower-priority queue
+            d = self.deep_active
+            if d.state is JobState.SUSPENDED and (
+                top is None or (self._aged(d, now) and top.job.priority <= d.job.priority)
+            ):
+                self._run_deep(d, now)
             return
         head = self.deep_q.peek()
         if head is None:
             return
         # after _place_shallow, any still-queued shallow job is fenced behind
         # this deep job's priority — the chip is drained, so the gang launches
-        if top is not None and top.job.priority >= head.job.priority:
+        # (an aged deep job also overtakes equal-priority queued shallow jobs)
+        if top is not None and (
+            top.job.priority > head.job.priority
+            or (top.job.priority == head.job.priority and not self._aged(head, now))
+        ):
             return
         self.deep_active = self.deep_q.pop()
         self._run_deep(self.deep_active, now)
@@ -445,12 +508,16 @@ class ServingEngine:
     ``repro.serve.traffic.ClosedLoopSource``).
     """
 
-    def __init__(self, chip: ChipConfig, policy=None, loop: EventLoop | None = None):
+    def __init__(self, chip: ChipConfig, policy=None, loop: EventLoop | None = None,
+                 hoist: bool = False):
         self.chip = chip
         self.policy = policy if policy is not None else policy_for(chip)
         # a caller-supplied loop lets N engines share one clock (fleet serving,
         # repro.serve.cluster); by default each engine owns its own
         self.loop = loop if loop is not None else EventLoop()
+        # kernel mode for service-time estimation: hoisted rotations amortise
+        # ModUp across BSGS baby steps, shrinking deep (CtS/StC-heavy) jobs
+        self.hoist = bool(hoist)
         self.jobs: list[JobExec] = []
         self._source = None
         # fleet hook: the cluster router tracks per-chip backlog through this
@@ -461,7 +528,7 @@ class ServingEngine:
         """Queue one job.  ``extra_cycles`` is added to the service demand —
         the cluster router charges warm-set cold starts (KSK/plaintext fetch)
         this way, so work conservation holds penalty-inclusive."""
-        sim = job_service_sim(job, self.chip)
+        sim = job_service_sim(job, self.chip, hoist=self.hoist)
         je = JobExec(job=job, service_cycles=sim.cycles + float(extra_cycles), sim=sim,
                      lanes="", cold_start_cycles=float(extra_cycles))
         self.jobs.append(je)
@@ -497,17 +564,19 @@ class ServingEngine:
         return self.result()
 
 
-def serve(jobs: list[FheJob], chip: ChipConfig, policy=None, validate: bool = True) -> ServeResult:
+def serve(jobs: list[FheJob], chip: ChipConfig, policy=None, validate: bool = True,
+          hoist: bool = False) -> ServeResult:
     """Run an open-loop job list through the event engine; the one-call API."""
-    eng = ServingEngine(chip, policy=policy)
+    eng = ServingEngine(chip, policy=policy, hoist=hoist)
     for job in jobs:
         eng.submit(job)
     result = eng.run()
     return result.validate() if validate else result
 
 
-def serve_source(source, chip: ChipConfig, policy=None, validate: bool = True) -> ServeResult:
+def serve_source(source, chip: ChipConfig, policy=None, validate: bool = True,
+                 hoist: bool = False) -> ServeResult:
     """Run a closed-loop traffic source (arrivals depend on completions)."""
-    eng = ServingEngine(chip, policy=policy)
+    eng = ServingEngine(chip, policy=policy, hoist=hoist)
     result = eng.run(source=source)
     return result.validate() if validate else result

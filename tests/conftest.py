@@ -49,6 +49,21 @@ except ModuleNotFoundError:
     def booleans() -> _Strategy:
         return _Strategy(lambda r: bool(r.getrandbits(1)))
 
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+              unique: bool = False) -> _Strategy:
+        def draw(r: random.Random):
+            out: list = []
+            for _ in range(200):  # rejection bound for unique draws
+                if len(out) >= r.randint(min_size, max_size) and len(out) >= min_size:
+                    break
+                v = elements.example_from(r)
+                if unique and v in out:
+                    continue
+                out.append(v)
+            return out
+
+        return _Strategy(draw)
+
     _DEFAULT_EXAMPLES = 20
 
     def given(*arg_strats, **kw_strats):
@@ -88,6 +103,7 @@ except ModuleNotFoundError:
     _strategies.floats = floats
     _strategies.sampled_from = sampled_from
     _strategies.booleans = booleans
+    _strategies.lists = lists
 
     _hyp = types.ModuleType("hypothesis")
     _hyp.given = given

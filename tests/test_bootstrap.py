@@ -84,3 +84,17 @@ def test_force_to_exactness(btctx):
     assert dropped.level == ct.level - 5
     assert dropped.scale == p.scale * 1.01
     np.testing.assert_allclose(ops.decrypt_decode(p, ctx.keys.sk, dropped), z, atol=2e-3)
+
+
+def test_context_precomputes_galois_union_without_overgeneration(btctx):
+    """build_context stores the per-plan rotation union and keygen produced
+    exactly one switching key per needed Galois element — no extras."""
+    from repro.fhe import keys as K
+
+    p, ctx = btctx
+    want = set()
+    for plan in (*ctx.cts_plans, *ctx.stc_plans):
+        want |= plan.rotations()
+    assert tuple(sorted(want)) == tuple(sorted(ctx.galois_rotations))
+    elements = K.galois_elements(p, ctx.galois_rotations, conjugate=True)
+    assert tuple(sorted(ctx.keys.gks)) == elements

@@ -1,0 +1,302 @@
+"""Hoisted rotation key-switching: bit-exactness vs ``ops.rotate`` across
+levels/dnum/rotation sets (hypothesis), dispatch-count amortisation
+(β + O(1) vs k·β extended-basis NTTs), planner trace parity for the hoisted
+shape, and simulator accounting."""
+
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hardware as H
+from repro.core import planner as PL
+from repro.core.simulator import lanes_deep, simulate_stream
+from repro.fhe import keys as K
+from repro.fhe import keyswitch as KS
+from repro.fhe import linear, ops
+from repro.fhe import params as P
+from repro.fhe import trace
+from repro.kernels import dispatch
+
+ROTS = (1, 2, 3, 5, 7)
+
+
+@pytest.fixture(scope="module", params=[1, 2, 3], ids=lambda d: f"dnum{d}")
+def hset(request):
+    p = P.make_params(1 << 9, 5, request.param, check_security=False)
+    ks = K.full_keyset(p, seed=0, rotations=ROTS, conjugate=True)
+    rng = np.random.default_rng(7)
+    z = rng.normal(size=p.slots) * 0.3
+    ct = ops.encrypt(p, ks.pk, ops.encode(p, z))
+    return p, ks, ct, z
+
+
+def _sig(instrs, skip=()):
+    return collections.Counter((i.op, i.n, i.limbs) for i in instrs if i.op not in skip)
+
+
+def _ct_equal(a, b) -> bool:
+    return bool(jnp.array_equal(a.c0, b.c0)) and bool(jnp.array_equal(a.c1, b.c1))
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: hoisted == standard, every (level, dnum, rotation set)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(level=st.integers(min_value=1, max_value=5),
+       rs=st.lists(st.sampled_from(ROTS), min_size=1, max_size=4, unique=True))
+def test_group_bitexact_vs_rotate(hset, level, rs):
+    p, ks, ct, _ = hset
+    c = ops.level_drop(ct, level)
+    group = ops.rotate_hoisted_group(p, c, tuple(rs), ks, backend="ref")
+    for r in rs:
+        assert _ct_equal(group[r], ops.rotate(p, c, r, ks, backend="ref")), (level, r)
+
+
+def test_group_bitexact_fused_kernels(hset):
+    """The batched Pallas path (ModUp + Galois-MAC + batched ModDown kernels)
+    against the staged u64 oracle rotations."""
+    p, ks, ct, _ = hset
+    for level in (p.L, max(1, p.alpha - 1)):
+        c = ops.level_drop(ct, level)
+        group = ops.rotate_hoisted_group(p, c, ROTS, ks, backend="fused")
+        for r in ROTS:
+            assert _ct_equal(group[r], ops.rotate(p, c, r, ks, backend="ref")), (level, r)
+
+
+def test_single_hoisted_and_modes(hset):
+    p, ks, ct, _ = hset
+    std = ops.rotate(p, ct, 3, ks, backend="ref")
+    assert _ct_equal(ops.rotate_hoisted(p, ct, 3, ks, backend="ref"), std)
+    assert _ct_equal(ops.rotate(p, ct, 3, ks, backend="ref", hoisting="always"), std)
+    assert _ct_equal(ops.rotate(p, ct, 3, ks, backend="ref", hoisting="auto"), std)
+    with pytest.raises(ValueError):
+        ops.rotate(p, ct, 3, ks, hoisting="sometimes")
+
+
+def test_rotation_values_correct(hset):
+    """Hoisted rotations still *rotate*: decode matches np.roll."""
+    p, ks, ct, z = hset
+    group = ops.rotate_hoisted_group(p, ct, (1, 5), ks, backend="ref")
+    for r in (1, 5):
+        got = ops.decrypt_decode(p, ks.sk, group[r])
+        np.testing.assert_allclose(got.real, np.roll(z, -r), atol=2e-2)
+
+
+def test_hoisted_digits_reused_across_calls(hset):
+    """A precomputed ``HoistedDigits`` skips the ModUp entirely: only the
+    ModDown's two forward NTTs remain per rotation."""
+    p, ks, ct, _ = hset
+    hd = KS.hoisted_mod_up(ct.c1, p, ct.level, backend="ref")
+    with dispatch.count_dispatches() as c:
+        out = ops.rotate_hoisted(p, ct, 2, ks, backend="ref", hoisted=hd)
+    assert c.get("ntt", 0) == 2 and c.get("intt", 0) == 2  # ModDown only
+    assert _ct_equal(out, ops.rotate(p, ct, 2, ks, backend="ref"))
+
+
+def test_hoisted_ksk_cached_per_keyset(hset):
+    p, ks, ct, _ = hset
+    t = pow(5, 3, 2 * p.n)
+    a = KS.hoisted_ksk(p, ks, t, p.L)
+    assert KS.hoisted_ksk(p, ks, t, p.L) is a
+    assert (t, p.L) in ks.hoist_cache
+
+
+# ---------------------------------------------------------------------------
+# dispatch counts: the measurable amortisation (β + O(1) vs k·β)
+# ---------------------------------------------------------------------------
+
+
+def test_group_kernel_dispatches_amortised(hset):
+    p, ks, ct, _ = hset
+    k = len(ROTS)
+    with dispatch.count_dispatches() as ch:
+        ops.rotate_hoisted_group(p, ct, ROTS, ks, backend="fused")
+    with dispatch.count_dispatches() as cs:
+        for r in ROTS:
+            ops.rotate(p, ct, r, ks, backend="fused")
+    # hoisted: shared iNTT + ModUp launch + ONE batched Galois-MAC launch +
+    # ONE batched ModDown (P-block iNTT + kernel) + k c0-adds
+    assert ch["hoistmodup"] == 1 and ch["hoistmac"] == 1
+    assert ch["fused_moddown"] == 1 and ch["intt"] == 2
+    assert dispatch.total(ch) == 5 + k
+    # per-rotation fused path: {iNTT, fused-KS, P-iNTT, ModDown, add} each
+    assert cs["fusedks"] == k and cs["fused_moddown"] == k
+    assert dispatch.total(cs) == 5 * k
+    assert dispatch.total(ch) / dispatch.total(cs) <= 0.6
+
+
+def test_ref_ntt_launches_beta_plus_k(hset):
+    """Staged pipeline: forward-NTT launches collapse from k·(β+2) to β+2k —
+    the per-rotation extended-basis NTTs disappear entirely."""
+    p, ks, ct, _ = hset
+    beta, k = p.beta(p.L), len(ROTS)
+    with dispatch.count_dispatches() as ch:
+        ops.rotate_hoisted_group(p, ct, ROTS, ks, backend="ref")
+    with dispatch.count_dispatches() as cs:
+        for r in ROTS:
+            ops.rotate(p, ct, r, ks, backend="ref")
+    assert ch["ntt"] == beta + 2 * k  # β ModUp + 2 ModDown per rotation
+    assert cs["ntt"] == k * (beta + 2)
+
+
+def test_ext_basis_ntt_records_beta_vs_k_beta(hset):
+    """Trace-level: the group performs exactly β extended-basis forward NTTs
+    (one per digit, shared), vs k·β on the per-rotation path."""
+    p, ks, ct, _ = hset
+    beta, k = p.beta(p.L), len(ROTS)
+    m = p.L + 1 + p.alpha
+    with trace.capture_trace() as th:
+        ops.rotate_hoisted_group(p, ct, ROTS, ks, backend="ref")
+    with trace.capture_trace() as ts:
+        for r in ROTS:
+            ops.rotate(p, ct, r, ks, backend="ref")
+    ext_ntts = lambda t: sum(1 for i in t if i.op == "NTT" and i.limbs == m)
+    assert ext_ntts(th) == beta
+    assert ext_ntts(ts) == k * beta
+
+
+# ---------------------------------------------------------------------------
+# planner parity: executable traces == analytic hoisted streams
+# ---------------------------------------------------------------------------
+
+
+def test_planner_parity_hoisted_group(hset):
+    p, ks, ct, _ = hset
+    pp = PL.PlanParams.of(p)
+    for level in (p.L, max(1, p.alpha - 1)):
+        c = ops.level_drop(ct, level)
+        for bk, fused in (("ref", False), ("fused", True)):
+            with trace.capture_trace() as t:
+                ops.rotate_hoisted_group(p, c, ROTS, ks, backend=bk)
+            want = PL.hoisted_rotations(pp, level, len(ROTS), fused=fused)
+            assert _sig(t) == _sig(want), (level, bk)
+
+
+def test_planner_parity_standard_rotate_unchanged(hset):
+    """The permute-last refactor must not change the standard rotation's
+    trace shape — planner ``rotate`` streams still match."""
+    p, ks, ct, _ = hset
+    pp = PL.PlanParams.of(p)
+    for bk, fused in (("ref", False), ("fused", True)):
+        with trace.capture_trace() as t:
+            ops.rotate(p, ct, 5, ks, backend=bk)
+        assert _sig(t) == _sig(PL.rotate(pp, p.L, fused=fused)), bk
+
+
+# ---------------------------------------------------------------------------
+# BSGS integration: apply_bsgs hoists its baby group
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def bsgs_setup():
+    p = P.make_params(1 << 9, 5, 2, check_security=False)
+    rng = np.random.default_rng(3)
+    mat = (rng.normal(size=(p.slots, p.slots))
+           + 1j * rng.normal(size=(p.slots, p.slots))) / p.slots
+    plan = linear.plan_matrix(mat)
+    ks = K.full_keyset(p, seed=1, rotations=tuple(plan.rotations()))
+    z = rng.normal(size=p.slots) * 0.5
+    ct = ops.encrypt(p, ks.pk, ops.encode(p, z))
+    return p, ks, plan, mat, ct, z
+
+
+def test_apply_bsgs_hoisting_bitexact(bsgs_setup):
+    p, ks, plan, mat, ct, z = bsgs_setup
+    hoisted = linear.apply_bsgs(p, ct, plan, ks, backend="ref", hoisting="always")
+    staged = linear.apply_bsgs(p, ct, plan, ks, backend="ref", hoisting="never")
+    assert _ct_equal(hoisted, staged)
+    got = ops.decrypt_decode(p, ks.sk, hoisted)
+    np.testing.assert_allclose(got, mat @ z, atol=5e-2)
+
+
+def test_apply_bsgs_planner_parity_both_modes(bsgs_setup):
+    p, ks, plan, _mat, ct, _z = bsgs_setup
+    pp = PL.PlanParams.of(p)
+    n_diags = len(plan.diags)
+    for hoisting, hoist in (("always", True), ("never", False)):
+        with trace.capture_trace() as t:
+            linear.apply_bsgs(p, ct, plan, ks, backend="ref", hoisting=hoisting)
+        want = PL.bsgs_matvec(pp, ct.level, n_diags, plan.n1, mode="exec",
+                              hoist=hoist, fused=False)
+        assert _sig(t) == _sig(want), hoisting
+
+
+def test_bsgs_plan_caches_rotations(bsgs_setup):
+    _p, _ks, plan, _mat, _ct, _z = bsgs_setup
+    assert plan.rotations() is plan.rotations()
+    assert plan.baby_steps() is plan.baby_steps()
+    assert set(plan.baby_steps()) == {d % plan.n1 for d in plan.diags} - {0}
+    assert set(plan.giant_steps()) == {(d // plan.n1) * plan.n1 for d in plan.diags} - {0}
+
+
+def test_full_keyset_no_overgeneration():
+    """Keygen produces exactly one switching key per needed Galois element:
+    r = 0 and slot-congruent rotations must not generate extra keys."""
+    p = P.make_params(1 << 9, 5, 2, check_security=False)
+    rots = (0, 1, 2, 1 + p.slots, 2 + 2 * p.slots)
+    ks = K.full_keyset(p, seed=0, rotations=rots, conjugate=True)
+    want = K.galois_elements(p, rots, conjugate=True)
+    assert tuple(sorted(ks.gks)) == want
+    assert len(ks.gks) == 3  # {σ for r∈{1,2}} + conjugation
+
+
+# ---------------------------------------------------------------------------
+# simulator accounting
+# ---------------------------------------------------------------------------
+
+
+def test_simulator_parity_executable_vs_planner(hset):
+    """Simulating a captured hoisted trace equals simulating the planner's
+    analytic hoisted stream — cycles, HBM bytes, and per-unit totals."""
+    p, ks, ct, _ = hset
+    pp = PL.PlanParams.of(p)
+    with trace.capture_trace() as t:
+        ops.rotate_hoisted_group(p, ct, ROTS, ks, backend="fused")
+    chip = H.FLASH_FHE
+    got = simulate_stream(list(t), chip, lanes_deep(chip))
+    want = simulate_stream(
+        PL.hoisted_rotations(pp, p.L, len(ROTS), fused=True), chip, lanes_deep(chip)
+    )
+    assert got.cycles == pytest.approx(want.cycles)
+    assert got.hbm_bytes == pytest.approx(want.hbm_bytes)
+    for unit in ("ntt", "bconv", "modmul"):
+        assert got.unit_cycles[unit] == pytest.approx(want.unit_cycles[unit])
+
+
+def test_simulator_rewards_hoisting():
+    """hw-mode deep workload streams: hoisting must cut the NTT-unit work and
+    the bottleneck cycles on the fused-pipeline chip."""
+    job_params = P.workload_params("lstm")
+    st_base = PL.workload_stream("lstm", job_params, mode="hw", hoist=False)
+    st_hoist = PL.workload_stream("lstm", job_params, mode="hw", hoist=True)
+    chip = H.FLASH_FHE
+    rb = simulate_stream(st_base, chip, lanes_deep(chip))
+    rh = simulate_stream(st_hoist, chip, lanes_deep(chip))
+    assert rh.unit_cycles["ntt"] < rb.unit_cycles["ntt"]
+    assert rh.unit_cycles["bconv"] < rb.unit_cycles["bconv"]
+    assert rh.cycles < rb.cycles
+
+
+def test_planner_hoisted_stream_counts():
+    """Analytic sanity: a hoisted k-rotation group carries β ext-NTT records
+    + 2k ModDown NTTs; the per-rotation stream carries k·(β + 2)."""
+    pp = PL.PlanParams(n=1 << 16, L=23, alpha=8)
+    level, k = 23, 12
+    beta = pp.beta(level)
+    ext = level + 1 + pp.alpha
+    hoisted = PL.hoisted_rotations(pp, level, k)
+    per_rot = []
+    for _ in range(k):
+        per_rot += PL.rotate(pp, level)
+    ext_ntts = lambda s: sum(1 for i in s if i.op == "NTT" and i.limbs == ext)
+    all_ntts = lambda s: sum(1 for i in s if i.op == "NTT")
+    assert ext_ntts(hoisted) == beta
+    assert ext_ntts(per_rot) == k * beta
+    assert all_ntts(hoisted) == beta + 2 * k
+    assert all_ntts(per_rot) == k * (beta + 2)

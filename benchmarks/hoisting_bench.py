@@ -4,17 +4,20 @@ Two measurement shapes, both executed for real through the kernel pipelines
 (Pallas interpret off-TPU — dispatch counts are the architecture-honest
 metric there; wall clock still rewards fewer launches):
 
-  * ``group``     — a k-rotation hoisting group (`ops.rotate_hoisted_group`)
-                    vs k standalone `ops.rotate` calls on the same ciphertext:
+  * ``group``     — a k-rotation hoisting group (`ctx.rotate_hoisted_group`)
+                    vs k standalone `ctx.rotate` calls on the same ciphertext:
                     kernel dispatches, extended-basis forward-NTT trace
                     records (β + O(1) vs k·β), wall clock, bit-exactness.
   * ``cts_stage`` — a radix-32 CoeffToSlot stage shape at N=2^14 (63
-                    diagonals, n1 = 16 → 15 baby + 3 giant rotations; the
-                    diagonal *values* are random, the rotation/BSGS structure
-                    is the real one) through `linear.apply_bsgs` with
-                    hoisting="always" vs "never".  n1 = 16 over the √63
-                    default is deliberate: hoisting makes baby steps nearly
-                    free, shifting the BSGS optimum toward more babies.
+                    diagonals; the diagonal *values* are random, the
+                    rotation/BSGS structure is the real one) through
+                    `ctx.apply_bsgs` under hoisting="always" vs "never".
+                    n1 comes from the planner's hoisting-aware cost model
+                    (`linear.choose_n1`), which finds n1 = 16 (15 baby + 3
+                    giant rotations) over the √63 ≈ 8 classic balance point:
+                    hoisting makes baby steps nearly free, shifting the BSGS
+                    optimum toward more babies.  The bench asserts the model
+                    picks 16 so the planner and the measured win stay coupled.
 
 CI gates (``check_gates``; `python -m benchmarks.hoisting_bench` exits
 non-zero on failure):
@@ -36,8 +39,9 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.fhe import ExecPolicy, FheContext
 from repro.fhe import keys as K
-from repro.fhe import linear, ops
+from repro.fhe import linear
 from repro.fhe import params as P
 from repro.fhe import trace
 from repro.kernels import dispatch
@@ -77,25 +81,26 @@ def bench_group(n: int, L: int, dnum: int, k: int, iters: int = 2, seed: int = 0
     """One k-rotation hoisting group vs k standalone rotations (fused path)."""
     p = P.make_params(n, L, dnum, check_security=False)
     rots = tuple(range(1, k + 1))
-    ks = K.full_keyset(p, seed=seed, rotations=rots)
+    ctx = FheContext(params=p, keys=K.full_keyset(p, seed=seed, rotations=rots),
+                     policy=ExecPolicy(backend="fused", hoisting="never"))
     rng = np.random.default_rng(seed + 1)
-    ct = ops.encrypt(p, ks.pk, ops.encode(p, rng.normal(size=p.slots) * 0.3))
+    ct = ctx.encrypt(ctx.encode(rng.normal(size=p.slots) * 0.3))
     level, beta = p.L, p.beta(p.L)
     m = level + 1 + p.alpha
 
-    group = ops.rotate_hoisted_group(p, ct, rots, ks, backend="fused")
-    singles = {r: ops.rotate(p, ct, r, ks, backend="fused") for r in rots}
+    group = ctx.rotate_hoisted_group(ct, rots)
+    singles = {r: ctx.rotate(ct, r) for r in rots}
     bitexact = int(all(_ct_equal(group[r], singles[r]) for r in rots))
 
     with dispatch.count_dispatches() as ch, trace.capture_trace() as th:
-        ops.rotate_hoisted_group(p, ct, rots, ks, backend="fused")
+        ctx.rotate_hoisted_group(ct, rots)
     with dispatch.count_dispatches() as cs, trace.capture_trace() as ts:
         for r in rots:
-            ops.rotate(p, ct, r, ks, backend="fused")
+            ctx.rotate(ct, r)
 
-    t_h = _time_call(lambda: ops.rotate_hoisted_group(p, ct, rots, ks, backend="fused"), iters)
+    t_h = _time_call(lambda: ctx.rotate_hoisted_group(ct, rots), iters)
     t_s = _time_call(
-        lambda: [ops.rotate(p, ct, r, ks, backend="fused") for r in rots], iters
+        lambda: [ctx.rotate(ct, r) for r in rots], iters
     )
     return {
         "config": f"group_n{n}_L{L}_dnum{dnum}_k{k}",
@@ -112,19 +117,26 @@ def bench_group(n: int, L: int, dnum: int, k: int, iters: int = 2, seed: int = 0
     }
 
 
-def _cts_stage_plan(p: P.CkksParams, radix: int = 32, n1: int = 16, seed: int = 0):
+def _cts_stage_plan(p: P.CkksParams, radix: int = 32, seed: int = 0):
     """A radix-``radix`` CoeffToSlot stage *shape*: 2·radix−1 diagonals.
 
     The true CtS factor matrices at N=2^14 are slots×slots dense (1 GB+) —
     structurally the level-collapsed FFT stage is a banded matrix with
     2·radix−1 populated diagonals, which is what drives the rotation count.
-    We build that structure directly with random diagonal values."""
+    We build that structure directly with random diagonal values; n1 comes
+    from the hoisting-aware cost model (``linear.plan_diags``), which must
+    find the n1 = 16 optimum this bench used to hand-pick."""
     rng = np.random.default_rng(seed)
     diags = {
         int(d): (rng.normal(size=p.slots) + 1j * rng.normal(size=p.slots)) / radix
         for d in range(2 * radix - 1)
     }
-    return linear.BsgsPlan(n1=n1, diags=diags)
+    plan = linear.plan_diags(diags, p, level=p.L, hoisting=True)
+    assert plan.n1 == 16, (
+        f"hoisting-aware cost model picked n1={plan.n1}, expected the measured "
+        "optimum 16 — model and bench have diverged"
+    )
+    return plan
 
 
 def bench_cts_stage(n: int = 1 << 14, L: int = 3, dnum: int = 3,
@@ -133,30 +145,29 @@ def bench_cts_stage(n: int = 1 << 14, L: int = 3, dnum: int = 3,
     p = P.make_params(n, L, dnum, check_security=False)
     plan = _cts_stage_plan(p, seed=seed)
     ks = K.full_keyset(p, seed=seed, rotations=tuple(plan.rotations()))
+    hctx = FheContext(params=p, keys=ks,
+                      policy=ExecPolicy(backend="fused", hoisting="always"))
+    sctx = hctx.with_policy(hoisting="never")
     rng = np.random.default_rng(seed + 1)
-    ct = ops.encrypt(p, ks.pk, ops.encode(p, rng.normal(size=p.slots) * 0.3))
+    ct = hctx.encrypt(hctx.encode(rng.normal(size=p.slots) * 0.3))
     beta = p.beta(p.L)
     m = p.L + 1 + p.alpha
     k = len(plan.baby_steps())
 
-    hoisted = linear.apply_bsgs(p, ct, plan, ks, backend="fused", hoisting="always")
-    staged = linear.apply_bsgs(p, ct, plan, ks, backend="fused", hoisting="never")
+    hoisted = hctx.apply_bsgs(ct, plan)
+    staged = sctx.apply_bsgs(ct, plan)
     bitexact = int(_ct_equal(hoisted, staged))
 
     with dispatch.count_dispatches() as ch, trace.capture_trace() as th:
-        linear.apply_bsgs(p, ct, plan, ks, backend="fused", hoisting="always")
+        hctx.apply_bsgs(ct, plan)
     with dispatch.count_dispatches() as cs, trace.capture_trace() as ts:
-        linear.apply_bsgs(p, ct, plan, ks, backend="fused", hoisting="never")
+        sctx.apply_bsgs(ct, plan)
 
-    t_h = _time_call(
-        lambda: linear.apply_bsgs(p, ct, plan, ks, backend="fused", hoisting="always"), iters
-    )
-    t_s = _time_call(
-        lambda: linear.apply_bsgs(p, ct, plan, ks, backend="fused", hoisting="never"), iters
-    )
+    t_h = _time_call(lambda: hctx.apply_bsgs(ct, plan), iters)
+    t_s = _time_call(lambda: sctx.apply_bsgs(ct, plan), iters)
     return {
         "config": f"cts_stage_n{n}_L{L}_dnum{dnum}",
-        "n": n, "L": L, "dnum": dnum, "k": k, "beta": beta,
+        "n": n, "L": L, "dnum": dnum, "k": k, "beta": beta, "n1": plan.n1,
         "n_diags": len(plan.diags), "n_giants": len(plan.giant_steps()),
         "bitexact": bitexact,
         "ext_ntt_hoisted": _ext_ntts(th, m),

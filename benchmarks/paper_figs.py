@@ -133,12 +133,15 @@ def perf_beyond_paper() -> dict:
     """
     from repro.core.planner import workload_stream
     from repro.core.simulator import lanes_deep, simulate_stream
+    from repro.fhe.context import ExecPolicy
 
     out = {}
+    base = ExecPolicy(backend="fused", hoisting="never")
+    opt = ExecPolicy(backend="fused", hoisting="always")
     for w in FP.DEEP_WORKLOADS:
         job = J.make_job(w)
-        st_b = workload_stream(job.workload, job.params, mode="hw", hoist=False)
-        st_o = workload_stream(job.workload, job.params, mode="hw", hoist=True)
+        st_b = workload_stream(job.workload, job.params, mode="hw", policy=base)
+        st_o = workload_stream(job.workload, job.params, mode="hw", policy=opt)
         rb = simulate_stream(st_b, H.FLASH_FHE, lanes_deep(H.FLASH_FHE))
         ro = simulate_stream(st_o, H.FLASH_FHE_FUSED_MAC,
                              lanes_deep(H.FLASH_FHE_FUSED_MAC))

@@ -62,9 +62,11 @@ def run(smoke: bool = True) -> list[dict]:
                          "sim_wall_s": round(time.perf_counter() - t0, 3), **metrics})
         # hoisted-rotation kernel mode on FLASH-FHE: deep (CtS/StC-heavy)
         # service times shrink, so the same stream clears faster — the
-        # serving-level view of the kernels/hoistrot amortisation
+        # serving-level view of the kernels/hoistrot amortisation.  Selected
+        # through an ExecPolicy; its policy_key() keys the service-time memo.
         t0 = time.perf_counter()
-        result = serve.serve(jobs, FLASH_FHE, validate=True, hoist=True)
+        hoisted_policy = serve.ExecPolicy(backend="fused", hoisting="always")
+        result = serve.serve(jobs, FLASH_FHE, validate=True, exec_policy=hoisted_policy)
         rows.append({"scenario": f"{scen}_hoisted", "chip": FLASH_FHE.name,
                      "sim_wall_s": round(time.perf_counter() - t0, 3),
                      **serve.summarize(result)})

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core import hardware as H
 from repro.core.simulator import lanes_shallow, simulate_stream
-from repro.fhe import keys as K, linear, ops, params as P, trace
+from repro.fhe import FheContext, keys as K, linear, params as P, trace
 
 
 def main():
@@ -39,17 +39,17 @@ def main():
     plan1 = linear.plan_matrix(block_matrix(w1), tol=1e-12)
     plan2 = linear.plan_matrix(block_matrix(w2), tol=1e-12)
     rots = sorted(plan1.rotations() | plan2.rotations())
-    ks = K.full_keyset(p, seed=0, rotations=tuple(rots))
+    ctx = FheContext(params=p, keys=K.full_keyset(p, seed=0, rotations=tuple(rots)))
 
     xin = np.zeros(p.slots)
     xin[:d_in] = x
-    ct = ops.encrypt(p, ks.pk, ops.encode(p, xin))
+    ct = ctx.encrypt(ctx.encode(xin))
 
     with trace.capture_trace() as t:
-        ct = linear.apply_bsgs(p, ct, plan1, ks)  # x @ w1
-        ct = ops.square(p, ct, ks.rlk)  # (·)²
-        ct = linear.apply_bsgs(p, ct, plan2, ks)  # @ w2
-    got = ops.decrypt_decode(p, ks.sk, ct).real[:d_out]
+        ct = ctx.apply_bsgs(ct, plan1)  # x @ w1
+        ct = ctx.square(ct)  # (·)²
+        ct = ctx.apply_bsgs(ct, plan2)  # @ w2
+    got = ctx.decrypt_decode(ct).real[:d_out]
     print(f"[fhe-inference] encrypted MLP err: {np.abs(got - want).max():.2e} "
           f"(|y| ~ {np.abs(want).max():.2f})")
 

@@ -22,12 +22,12 @@ import numpy as np
 from repro import serve
 from repro.core import executor as E
 from repro.core import hardware as H, jobs as J, scheduler as S
-from repro.fhe import keys as K, ops, params as P
+from repro.fhe import FheContext, keys as K, params as P
 
 
 def numeric_affiliations():
     p = P.make_params(1 << 9, 4, 2, check_security=False)
-    ks = K.full_keyset(p, seed=0)
+    ctx = FheContext(params=p, keys=K.full_keyset(p, seed=0))
     rng = np.random.default_rng(0)
 
     n_jobs = 4
@@ -36,12 +36,12 @@ def numeric_affiliations():
         z1 = rng.normal(size=p.slots) * 0.4
         z2 = rng.normal(size=p.slots) * 0.4
         zs.append((z1, z2))
-        pairs.append((ops.encrypt(p, ks.pk, ops.encode(p, z1), seed=j),
-                      ops.encrypt(p, ks.pk, ops.encode(p, z2), seed=50 + j)))
+        pairs.append((ctx.encrypt(ctx.encode(z1), seed=j),
+                      ctx.encrypt(ctx.encode(z2), seed=50 + j)))
 
     mesh = E.affiliation_mesh(1)  # all local devices as one affiliation group
-    outs = E.parallel_shallow_mul(p, ks, pairs, mesh)
-    errs = [np.abs(ops.decrypt_decode(p, ks.sk, o) - z1 * z2).max()
+    outs = E.parallel_shallow_mul(p, ctx.keys, pairs, mesh)
+    errs = [np.abs(ctx.decrypt_decode(o) - z1 * z2).max()
             for o, (z1, z2) in zip(outs, zs)]
     print(f"[multijob] {n_jobs} jobs executed in one shard_map program; "
           f"max err {max(errs):.2e}")
@@ -70,6 +70,13 @@ def open_loop_serving():
               f"queue p99 {m['queue_p99_cycles']/1e6:6.2f}M  "
               f"makespan {m['makespan_mcycles']:6.1f}M  "
               f"util {m['util_mean']:.2f}  preemptions {int(m['n_preemptions'])}")
+    # hoisted-rotation kernel mode, selected through an execution policy: its
+    # policy_key() keys the service-time memo, so modes never alias
+    hoisted = serve.ExecPolicy(backend="fused", hoisting="always")
+    m = serve.summarize(serve.serve(jobs, H.FLASH_FHE, exec_policy=hoisted))
+    print(f"[serving]   flash-fhe (hoisted policy): "
+          f"p99 {m['latency_p99_cycles']/1e6:6.2f}M  "
+          f"makespan {m['makespan_mcycles']:6.1f}M")
 
 
 def closed_loop_serving():

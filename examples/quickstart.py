@@ -6,22 +6,22 @@
 import numpy as np
 
 from repro.core import hardware as H, jobs as J, scheduler as S
-from repro.fhe import keys as K, ops, params as P
+from repro.fhe import FheContext, keys as K, params as P
 
 
 def main():
     # --- 1. CKKS: encrypt, compute, decrypt -------------------------------
     p = P.make_params(1 << 9, 6, 2, check_security=False)  # toy ring
-    ks = K.full_keyset(p, seed=0, rotations=(1,))
+    ctx = FheContext(params=p, keys=K.full_keyset(p, seed=0, rotations=(1,)))
     rng = np.random.default_rng(0)
     x = rng.normal(size=p.slots) * 0.5
     y = rng.normal(size=p.slots) * 0.5
 
-    ct_x = ops.encrypt(p, ks.pk, ops.encode(p, x))
-    ct_y = ops.encrypt(p, ks.pk, ops.encode(p, y))
-    ct = ops.mul(p, ops.add(p, ct_x, ct_y), ct_y, ks.rlk)  # (x+y)·y
-    ct = ops.rotate(p, ct, 1, ks)
-    got = ops.decrypt_decode(p, ks.sk, ct)
+    ct_x = ctx.encrypt(ctx.encode(x))
+    ct_y = ctx.encrypt(ctx.encode(y))
+    ct = ctx.mul(ctx.add(ct_x, ct_y), ct_y)  # (x+y)·y
+    ct = ctx.rotate(ct, 1)
+    got = ctx.decrypt_decode(ct)
     want = np.roll((x + y) * y, -1)
     print(f"[quickstart] homomorphic (x+y)·y rotated: max err "
           f"{np.abs(got - want).max():.2e}")

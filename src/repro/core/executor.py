@@ -21,6 +21,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.fhe import ops
+from repro.fhe.context import ExecPolicy, FheContext
 from repro.fhe.keys import KeySet
 from repro.fhe.params import CkksParams
 
@@ -62,6 +63,7 @@ def parallel_shallow_mul(
     a0, a1 = _stack_jobs([p[0] for p in pairs])
     b0, b1 = _stack_jobs([p[1] for p in pairs])
     rlk = keys.rlk.k
+    ctx = FheContext(params=params, keys=keys, policy=ExecPolicy(backend="ref"))
 
     @functools.partial(
         shard_map,
@@ -77,7 +79,7 @@ def parallel_shallow_mul(
             cta = ops.Ciphertext(a0s[j], a1s[j], level, scale)
             ctb = ops.Ciphertext(b0s[j], b1s[j], level, scale)
             kk = keys.rlk.__class__(k=rlk_arr)
-            out = ops.mul(params, cta, ctb, kk, rescale_after=True, backend="ref")
+            out = ctx.mul(cta, ctb, rlk=kk, rescale_after=True)
             outs0.append(out.c0)
             outs1.append(out.c1)
         return jnp.stack(outs0), jnp.stack(outs1)
@@ -99,6 +101,7 @@ def lower_multi_job_step(params: CkksParams, keys: KeySet, mesh: Mesh, jobs_per_
     level = params.L
     scale = params.scale
     rlk = keys.rlk.k
+    ctx = FheContext(params=params, keys=keys, policy=ExecPolicy(backend="ref"))
 
     def run(a0, a1, b0, b1):
         def body(a0s, a1s, b0s, b1s):
@@ -106,7 +109,7 @@ def lower_multi_job_step(params: CkksParams, keys: KeySet, mesh: Mesh, jobs_per_
             for j in range(jobs_per_aff):
                 cta = ops.Ciphertext(a0s[j], a1s[j], level, scale)
                 ctb = ops.Ciphertext(b0s[j], b1s[j], level, scale)
-                out = ops.mul(params, cta, ctb, keys.rlk, backend="ref")
+                out = ctx.mul(cta, ctb, rescale_after=True)
                 outs0.append(out.c0)
                 outs1.append(out.c1)
             return jnp.stack(outs0), jnp.stack(outs1)

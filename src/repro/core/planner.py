@@ -229,8 +229,8 @@ def bsgs_matvec(
     return out
 
 
-def conjugate(pp: PlanParams, level: int) -> list[Instr]:
-    return rotate(pp, level)
+def conjugate(pp: PlanParams, level: int, fused: bool = True) -> list[Instr]:
+    return rotate(pp, level, fused)
 
 
 # ---------------------------------------------------------------------------
@@ -238,18 +238,20 @@ def conjugate(pp: PlanParams, level: int) -> list[Instr]:
 # ---------------------------------------------------------------------------
 
 
-def chebyshev_basis_full(pp: PlanParams, level: int, degree: int) -> list[Instr]:
+def chebyshev_basis_full(pp: PlanParams, level: int, degree: int,
+                         fused: bool = True) -> list[Instr]:
     """mode="exec": T_2..T_degree each one hmul (+ alignment ops, counted coarsely)."""
     out: list[Instr] = []
     lv = level
     depth_of = lambda j: math.ceil(math.log2(j)) if j > 1 else 0
     for j in range(2, degree + 1):
         lj = level - depth_of(j)
-        out += hmul(pp, lj + 1 - 1)  # product at the operand level
+        out += hmul(pp, lj + 1 - 1, fused=fused)  # product at the operand level
     return out
 
 
-def eval_mod(pp: PlanParams, level: int, degree: int, mode: str = "exec") -> list[Instr]:
+def eval_mod(pp: PlanParams, level: int, degree: int, mode: str = "exec",
+             fused: bool = True) -> list[Instr]:
     """Normalise + Chebyshev basis + linear combination.
 
     mode="hw" uses the Paterson–Stockmeyer count: k = ⌈√(d+1)⌉ babies +
@@ -259,7 +261,7 @@ def eval_mod(pp: PlanParams, level: int, degree: int, mode: str = "exec") -> lis
     out = mul_plain(pp, level, mode=mode)  # exact-scale normalisation
     lv = level - 1
     if mode == "exec":
-        out += chebyshev_basis_full(pp, lv, degree)
+        out += chebyshev_basis_full(pp, lv, degree, fused=fused)
         n_terms = (degree + 1) // 2  # odd sine coefficients
         for _ in range(n_terms):
             out += mul_plain(pp, lv, mode=mode)
@@ -269,7 +271,7 @@ def eval_mod(pp: PlanParams, level: int, degree: int, mode: str = "exec") -> lis
         giants = math.ceil(math.log2((degree + 1) / k)) if (degree + 1) > k else 0
         n_mults = (k - 1) + giants + math.ceil((degree + 1) / k)
         for i in range(n_mults):
-            out += hmul(pp, max(1, lv - depth_estimate(i, k)))
+            out += hmul(pp, max(1, lv - depth_estimate(i, k)), fused=fused)
         out += [I("LOAD_PT", n, lv), I("PMULT", n, 2 * lv)] * (degree // 2)
         out += [I("PADD", n, 2 * lv)] * (degree // 2)
     return out
@@ -285,7 +287,7 @@ def mod_raise(pp: PlanParams) -> list[Instr]:
 
 
 def _dft_transform(pp: PlanParams, level: int, mode: str, radix: int = 32,
-                   hoist: bool = False) -> tuple[list[Instr], int]:
+                   hoist: bool = False, fused: bool = True) -> tuple[list[Instr], int]:
     """CoeffToSlot/SlotToCoeff as homomorphic DFT.
 
     mode="exec" mirrors the executable library: one dense matvec (all `slots`
@@ -298,40 +300,40 @@ def _dft_transform(pp: PlanParams, level: int, mode: str, radix: int = 32,
     out: list[Instr] = []
     if mode == "exec":
         n1 = max(1, 1 << int(round(math.log2(math.sqrt(slots)))))
-        out += bsgs_matvec(pp, level, slots, n1, mode=mode, hoist=hoist)
+        out += bsgs_matvec(pp, level, slots, n1, mode=mode, hoist=hoist, fused=fused)
         return out, 1
     stages = max(1, math.ceil(math.log(slots, radix)))
     diags = 2 * radix - 1
     n1 = max(1, 1 << int(round(math.log2(math.sqrt(diags)))))
     lv = level
     for _ in range(stages):
-        out += bsgs_matvec(pp, lv, diags, n1, mode=mode, hoist=hoist)
+        out += bsgs_matvec(pp, lv, diags, n1, mode=mode, hoist=hoist, fused=fused)
         lv -= 1
     return out, stages
 
 
 def bootstrap(
     pp: PlanParams, degree: int, mode: str = "exec", n1: int | None = None,
-    hoist: bool = False,
+    hoist: bool = False, fused: bool = True,
 ) -> list[Instr]:
     """Full packed bootstrapping instruction stream."""
     n = pp.n
     out = mod_raise(pp)
     L = pp.L
     # CoeffToSlot: two transform chains (+2 conjugations for the real parts)
-    s0, used = _dft_transform(pp, L, mode, hoist=hoist)
-    s1, _ = _dft_transform(pp, L, mode, hoist=hoist)
+    s0, used = _dft_transform(pp, L, mode, hoist=hoist, fused=fused)
+    s1, _ = _dft_transform(pp, L, mode, hoist=hoist, fused=fused)
     out += s0 + s1
     lv = L - used
-    out += conjugate(pp, lv) + [I("PADD", n, 2 * (lv + 1))]
-    out += conjugate(pp, lv) + [I("PADD", n, 2 * (lv + 1))]
+    out += conjugate(pp, lv, fused) + [I("PADD", n, 2 * (lv + 1))]
+    out += conjugate(pp, lv, fused) + [I("PADD", n, 2 * (lv + 1))]
     # EvalMod on both halves
-    out += eval_mod(pp, lv, degree, mode=mode) * 2
+    out += eval_mod(pp, lv, degree, mode=mode, fused=fused) * 2
     # SlotToCoeff
     cheb_depth = math.ceil(math.log2(max(2, degree))) + 1
     lv2 = max(1, lv - 1 - cheb_depth)
-    s2, _ = _dft_transform(pp, lv2, mode, hoist=hoist)
-    s3, _ = _dft_transform(pp, lv2, mode, hoist=hoist)
+    s2, _ = _dft_transform(pp, lv2, mode, hoist=hoist, fused=fused)
+    s3, _ = _dft_transform(pp, lv2, mode, hoist=hoist, fused=fused)
     out += s2 + s3
     out += [I("PADD", n, 2 * max(1, lv2 - used))]
     return out
@@ -344,17 +346,42 @@ def bootstrap(
 
 import contextvars
 
-_HOIST: contextvars.ContextVar[bool] = contextvars.ContextVar("plan_hoist", default=False)
+# (hoist, fused) plan flags for the workload expansion below — set per
+# workload_stream call so the _WORKLOADS bodies stay signature-stable.
+_PLAN: contextvars.ContextVar[tuple[bool, bool]] = contextvars.ContextVar(
+    "plan_flags", default=(False, True)
+)
 
 
-def workload_stream(name: str, params, mode: str = "hw", hoist: bool = False) -> list[Instr]:
+def _plan_hoist() -> bool:
+    return _PLAN.get()[0]
+
+
+def _plan_fused() -> bool:
+    return _PLAN.get()[1]
+
+
+def workload_stream(name: str, params, mode: str = "hw", hoist: bool = False,
+                    policy=None) -> list[Instr]:
+    """Expand one workload to its instruction stream.
+
+    ``policy`` (an ``repro.fhe.context.ExecPolicy``) is the context-first way
+    to choose the mirrored trace shape: ``policy.plan_hoist`` selects hoisted
+    BSGS baby groups and ``policy.plan_fused`` selects the fused key-switch
+    pipeline (no working-set boundary records).  The legacy ``hoist=`` bool is
+    honoured when no policy is given (with the fused pipeline, as before).
+    """
     pp = PlanParams.of(params)
     fn = _WORKLOADS[name]
-    tok = _HOIST.set(hoist)
+    if policy is not None:
+        flags = (policy.plan_hoist, policy.plan_fused)
+    else:
+        flags = (hoist, True)
+    tok = _PLAN.set(flags)
     try:
         stream = fn(pp, mode)
     finally:
-        _HOIST.reset(tok)
+        _PLAN.reset(tok)
     if mode == "hw":
         stream = add_hw_annotations(stream, pp)
     return stream
@@ -389,7 +416,7 @@ def _w_matmul(pp: PlanParams, mode: str) -> list[Instr]:
     for _ in range(cols):
         out += mul_plain(pp, lv, mode=mode)
     for _ in range(int(math.log2(1024)) * cols):  # rotate-and-add reduction
-        out += rotate(pp, lv - 1) + add_ct(pp, lv - 1)
+        out += rotate(pp, lv - 1, _plan_fused()) + add_ct(pp, lv - 1)
     return out
 
 
@@ -401,10 +428,10 @@ def _w_dblookup(pp: PlanParams, mode: str) -> list[Instr]:
     key_bits = 8
     lvl = lv
     for _ in range(key_bits):  # bitwise XNOR via (1-a-b+2ab): 1 hmul each
-        out += hmul(pp, lvl)
+        out += hmul(pp, lvl, fused=_plan_fused())
         lvl -= 1
     for _ in range(int(math.log2(key_bits))):  # AND-tree
-        out += hmul(pp, lvl)
+        out += hmul(pp, lvl, fused=_plan_fused())
         lvl -= 1
     for _ in range(64):  # table mask-and-aggregate
         out += mul_plain(pp, lvl, mode=mode) + add_ct(pp, max(1, lvl - 1))
@@ -415,16 +442,16 @@ def _w_lola_mnist(pp: PlanParams, mode: str, encrypted_weights: bool = False) ->
     """LoLa-MNIST (§6.1): dense 785→1000 (as BSGS matvec), square, dense
     1000→10, square — the low-latency packed pipeline."""
     lv = pp.L
-    out = bsgs_matvec(pp, lv, 64, 8, mode=mode, hoist=_HOIST.get())
+    out = bsgs_matvec(pp, lv, 64, 8, mode=mode, hoist=_plan_hoist(), fused=_plan_fused())
     lvl = lv - 1
     if encrypted_weights:
-        out += hmul(pp, lvl)  # ct×ct matvec core surrogate
+        out += hmul(pp, lvl, fused=_plan_fused())  # ct×ct matvec core surrogate
         lvl -= 1
-    out += hmul(pp, lvl)  # square activation
+    out += hmul(pp, lvl, fused=_plan_fused())  # square activation
     lvl -= 1
-    out += bsgs_matvec(pp, lvl, 32, 4, mode=mode, hoist=_HOIST.get())
+    out += bsgs_matvec(pp, lvl, 32, 4, mode=mode, hoist=_plan_hoist(), fused=_plan_fused())
     lvl -= 1
-    out += hmul(pp, lvl)  # square activation
+    out += hmul(pp, lvl, fused=_plan_fused())  # square activation
     return out
 
 
@@ -434,15 +461,15 @@ def _w_lola_cifar(pp: PlanParams, mode: str) -> list[Instr]:
     out: list[Instr] = []
     lvl = lv
     for _ in range(16):  # conv as shifted pt-muls
-        out += mul_plain(pp, lvl, mode=mode) + rotate(pp, lvl - 1) + add_ct(pp, lvl - 1)
+        out += mul_plain(pp, lvl, mode=mode) + rotate(pp, lvl - 1, _plan_fused()) + add_ct(pp, lvl - 1)
     lvl -= 1
-    out += hmul(pp, lvl)  # square
+    out += hmul(pp, lvl, fused=_plan_fused())  # square
     lvl -= 1
-    out += bsgs_matvec(pp, lvl, 128, 8, mode=mode, hoist=_HOIST.get())
+    out += bsgs_matvec(pp, lvl, 128, 8, mode=mode, hoist=_plan_hoist(), fused=_plan_fused())
     lvl -= 1
-    out += hmul(pp, lvl)  # square
+    out += hmul(pp, lvl, fused=_plan_fused())  # square
     lvl -= 1
-    out += bsgs_matvec(pp, lvl, 32, 4, mode=mode, hoist=_HOIST.get())
+    out += bsgs_matvec(pp, lvl, 32, 4, mode=mode, hoist=_plan_hoist(), fused=_plan_fused())
     return out
 
 
@@ -453,19 +480,19 @@ def _w_logreg(pp: PlanParams, mode: str) -> list[Instr]:
     out: list[Instr] = []
     lvl = pp.L
     # X·w: BSGS matvec over packed features
-    out += bsgs_matvec(pp, lvl, 256, 16, mode=mode, hoist=_HOIST.get())
+    out += bsgs_matvec(pp, lvl, 256, 16, mode=mode, hoist=_plan_hoist(), fused=_plan_fused())
     lvl -= 1
     # sigmoid degree-7 (3 mult levels, 4 mults)
     for _ in range(4):
-        out += hmul(pp, lvl)
+        out += hmul(pp, lvl, fused=_plan_fused())
         lvl -= 1 if _ % 2 else 0
     lvl -= 2
     # gradient: Xᵀ·err matvec + weight update
-    out += bsgs_matvec(pp, lvl, 256, 16, mode=mode, hoist=_HOIST.get())
+    out += bsgs_matvec(pp, lvl, 256, 16, mode=mode, hoist=_plan_hoist(), fused=_plan_fused())
     lvl -= 1
     out += mul_plain(pp, lvl, mode=mode) + add_ct(pp, lvl - 1)
     # bootstrap once per iteration (level budget exhausted)
-    out += bootstrap(pp, degree=63, mode=mode, hoist=_HOIST.get())
+    out += bootstrap(pp, degree=63, mode=mode, hoist=_plan_hoist(), fused=_plan_fused())
     return out
 
 
@@ -475,14 +502,14 @@ def _w_lstm(pp: PlanParams, mode: str) -> list[Instr]:
     out: list[Instr] = []
     lvl = pp.L
     for _ in range(8):  # W_g·x and U_g·h for 4 gates
-        out += bsgs_matvec(pp, lvl, 128, 8, mode=mode, hoist=_HOIST.get())
+        out += bsgs_matvec(pp, lvl, 128, 8, mode=mode, hoist=_plan_hoist(), fused=_plan_fused())
     lvl -= 1
     for _ in range(4 * 2):  # activation polys (deg-3: 2 mults each)
-        out += hmul(pp, max(1, lvl))
+        out += hmul(pp, max(1, lvl), fused=_plan_fused())
         lvl -= 1 if _ % 4 == 3 else 0
     for _ in range(3):  # gate element-products
-        out += hmul(pp, max(1, lvl))
-    out += bootstrap(pp, degree=63, mode=mode, hoist=_HOIST.get())
+        out += hmul(pp, max(1, lvl), fused=_plan_fused())
+    out += bootstrap(pp, degree=63, mode=mode, hoist=_plan_hoist(), fused=_plan_fused())
     return out
 
 
@@ -494,15 +521,15 @@ def _w_resnet20(pp: PlanParams, mode: str) -> list[Instr]:
     lvl = pp.L
     for block in range(9):  # 9 residual blocks
         for _ in range(2):  # two convs per block (as BSGS matvecs over channels)
-            out += bsgs_matvec(pp, max(4, lvl), 64, 8, mode=mode, hoist=_HOIST.get())
+            out += bsgs_matvec(pp, max(4, lvl), 64, 8, mode=mode, hoist=_plan_hoist(), fused=_plan_fused())
             lvl = max(4, lvl - 1)
             for _ in range(6):  # poly-ReLU mults
-                out += hmul(pp, max(2, lvl))
+                out += hmul(pp, max(2, lvl), fused=_plan_fused())
             lvl = max(4, lvl - 3)
         out += add_ct(pp, max(1, lvl))  # residual add
-        out += bootstrap(pp, degree=63, mode=mode, hoist=_HOIST.get())
+        out += bootstrap(pp, degree=63, mode=mode, hoist=_plan_hoist(), fused=_plan_fused())
         lvl = pp.L - 14  # post-bootstrap budget
-    out += bsgs_matvec(pp, max(4, lvl), 64, 8, mode=mode, hoist=_HOIST.get())  # final FC
+    out += bsgs_matvec(pp, max(4, lvl), 64, 8, mode=mode, hoist=_plan_hoist(), fused=_plan_fused())  # final FC
     return out
 
 
@@ -511,9 +538,9 @@ def _w_packed_bootstrap(pp: PlanParams, mode: str) -> list[Instr]:
     out: list[Instr] = []
     lvl = 3
     for _ in range(3):
-        out += hmul(pp, lvl)
+        out += hmul(pp, lvl, fused=_plan_fused())
         lvl -= 1
-    out += bootstrap(pp, degree=63, mode=mode, hoist=_HOIST.get())
+    out += bootstrap(pp, degree=63, mode=mode, hoist=_plan_hoist(), fused=_plan_fused())
     return out
 
 

@@ -46,14 +46,15 @@ class ScheduledJob:
 
 
 def schedule(jobs: list[FheJob], chip: ChipConfig, n_chips: int = 1,
-             router: str = "jsq") -> list[ScheduledJob]:
+             router: str = "jsq", exec_policy=None) -> list[ScheduledJob]:
     """Run ``jobs`` through the event-driven serving engine; returns per-job
     placement and completion in submission order.  Timeline consistency
     (no overlapping placements, work conservation) is asserted on every call.
 
     ``n_chips > 1`` shards the stream across a fleet of identical chips via
     ``repro.serve.cluster`` (dispatch policy = ``router``); each returned
-    ``ScheduledJob.chip_index`` names the chip that ran it.
+    ``ScheduledJob.chip_index`` names the chip that ran it.  ``exec_policy``
+    (an ``repro.fhe.ExecPolicy``) selects the service-time kernel mode.
     """
     # deferred import: repro.core.__init__ imports this module, and the serve
     # package imports repro.core submodules — a top-level import would cycle
@@ -61,9 +62,10 @@ def schedule(jobs: list[FheJob], chip: ChipConfig, n_chips: int = 1,
     from repro.serve.policy import serve
 
     if n_chips <= 1:
-        jes = serve(jobs, chip, validate=True).jobs
+        jes = serve(jobs, chip, validate=True, exec_policy=exec_policy).jobs
     else:
-        jes = serve_cluster(jobs, chip, n_chips=n_chips, router=router, validate=True).jobs
+        jes = serve_cluster(jobs, chip, n_chips=n_chips, router=router, validate=True,
+                            exec_policy=exec_policy).jobs
     return [
         ScheduledJob(
             job=je.job,

@@ -6,8 +6,28 @@ The FHE layer uses exact integer arithmetic:
 
 x64 is enabled here (and only here) because RNS arithmetic on the host/reference path
 needs 64-bit integers.  Model/training code is dtype-explicit and unaffected.
+
+Public API: ``FheContext`` (an immutable bundle of params + keys + an
+``ExecPolicy``) is the primary way to evaluate — see ``repro.fhe.context``.
+The per-op ``backend=`` kwargs on the module-level free functions are a
+deprecated compatibility surface.  Both names are exported lazily so that
+lightweight imports (``repro.fhe.params``, ``repro.fhe.trace``) stay cheap.
 """
 
 import jax
 
 jax.config.update("jax_enable_x64", True)
+
+_CONTEXT_EXPORTS = ("FheContext", "ExecPolicy")
+
+
+def __getattr__(name):
+    if name in _CONTEXT_EXPORTS:
+        from . import context
+
+        return getattr(context, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_CONTEXT_EXPORTS))

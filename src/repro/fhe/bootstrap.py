@@ -13,6 +13,12 @@ Math summary (DESIGN.md §6): with E0[j,i] = ζ^{g_j·i} (i < n), E1 the second
 half, and z = slots of the ModRaise'd ciphertext, the coefficient halves are
 a0 = Re(A0·z), a1 = Re(A1·z) with A{0,1} = (2/N)·E{0,1}^H.  EvalMod applies
 (q0/2πΔ)·sin(2π·a/q0) via Chebyshev on [-(K+½)θ, (K+½)θ], θ = q0/Δ.
+
+``BootstrapContext`` holds the precomputes (params, keys, BSGS plans, sine
+coefficients); *how* to execute comes from an ``FheContext``:
+``fhe_ctx.bootstrap(bctx, ct)`` is the primary API, with the policy choosing
+the key-switch pipeline and whether CtS/StC baby groups hoist.  The
+``backend=``/``hoisting=``-kwarg free functions are deprecated shims.
 """
 
 from __future__ import annotations
@@ -86,7 +92,6 @@ def build_context(
     # EvalMod target: h(x) = (q0/Δ)·sin(2π·(K+½)·x)/(2π) fitted on [-1, 1];
     # input is a/q0 normalised by (K+½)·θ with θ = q0/Δ.
     q0 = float(params.q_primes[0])
-    theta = q0 / params.scale
     c = 2.0 * np.pi * (K + 0.5)
     f = lambda x: (q0 / params.scale) * np.sin(c * x) / (2.0 * np.pi)
     coeffs = polyeval.chebyshev_fit(f, degree)
@@ -111,14 +116,19 @@ def _default_degree(K: int) -> int:
     return int(np.ceil(1.25 * c + 12))
 
 
-def mod_raise(ctx: BootstrapContext, ct: ops.Ciphertext, backend: str = "auto") -> ops.Ciphertext:
+# ---------------------------------------------------------------------------
+# context implementations (fc: FheContext over bctx.params/bctx.keys)
+# ---------------------------------------------------------------------------
+
+
+def _mod_raise(fc, bctx: BootstrapContext, ct: ops.Ciphertext) -> ops.Ciphertext:
     """Level-0 ciphertext → top level; plaintext becomes m + q0·I."""
-    params = ctx.params
+    params = bctx.params
     assert ct.level == 0, "mod_raise expects an exhausted (level-0) ciphertext"
     q0 = int(params.q_primes[0])
     L = params.L
     trace.record("MODRAISE", params.n, L + 1)
-    bk = ops._stage(backend)
+    bk = fc.stage
 
     def raise_poly(c_eval):
         c = poly.to_coeff(c_eval, params, (0,), bk)  # (1, N) residues mod q0
@@ -132,67 +142,107 @@ def mod_raise(ctx: BootstrapContext, ct: ops.Ciphertext, backend: str = "auto") 
     )
 
 
-def coeff_to_slot(ctx: BootstrapContext, ct: ops.Ciphertext, backend: str = "auto",
-                  hoisting: str = "auto") -> tuple[ops.Ciphertext, ops.Ciphertext]:
+def _coeff_to_slot(fc, bctx: BootstrapContext,
+                   ct: ops.Ciphertext) -> tuple[ops.Ciphertext, ops.Ciphertext]:
     """Slots become the coefficient halves a0, a1 (each real).
 
-    Both BSGS transforms hoist their baby-step rotations per group
-    (``hoisting`` threads through to ``linear.apply_bsgs``)."""
-    p, keys = ctx.params, ctx.keys
-    u0 = linear.apply_bsgs(p, ct, ctx.cts_plans[0], keys, backend=backend, hoisting=hoisting)
-    u1 = linear.apply_bsgs(p, ct, ctx.cts_plans[1], keys, backend=backend, hoisting=hoisting)
-    return linear.real_part(p, u0, keys, backend), linear.real_part(p, u1, keys, backend)
+    Both BSGS transforms hoist their baby-step rotations per group when the
+    policy's hoisting mode allows (see ``linear._apply_bsgs``)."""
+    u0 = linear._apply_bsgs(fc, ct, bctx.cts_plans[0])
+    u1 = linear._apply_bsgs(fc, ct, bctx.cts_plans[1])
+    return linear._real_part(fc, u0), linear._real_part(fc, u1)
 
 
-def eval_mod(ctx: BootstrapContext, ct: ops.Ciphertext, coeff_scale: float,
-             backend: str = "auto") -> ops.Ciphertext:
+def _eval_mod(fc, bctx: BootstrapContext, ct: ops.Ciphertext,
+              coeff_scale: float) -> ops.Ciphertext:
     """Remove the q0·I component: slot values v = a/coeff_scale → (q0/Δ)·sin(2π·a/q0)/(2π) ≈ m/Δ.
 
     ``coeff_scale`` is the ModRaise'd ciphertext's scale — the factor relating
     the CtS slot *values* to the underlying integer coefficients a (homomorphic
     ops preserve values, so the CtS output's own bookkeeping scale is NOT it).
     """
-    p, keys = ctx.params, ctx.keys
+    p = bctx.params
     q0 = float(p.q_primes[0])
-    norm = coeff_scale / ((ctx.K + 0.5) * q0)  # v·norm = a/((K+½)·q0) ∈ [-1, 1]
+    norm = coeff_scale / ((bctx.K + 0.5) * q0)  # v·norm = a/((K+½)·q0) ∈ [-1, 1]
     # exact-scale normalisation: seeds the Chebyshev tree at scale Δ so the
     # multiplicative scale-doubling dynamics stay bounded
-    x = ops.mul_const_exact(p, ct, norm, p.scale, backend)
-    basis = polyeval.ChebyshevBasis(p, x, keys, ctx.eval_mod_degree, backend)
-    return polyeval.eval_chebyshev(p, basis, ctx.sine_coeffs, keys, backend)
+    x = ops._mul_const_exact(fc, ct, norm, p.scale)
+    basis = polyeval.ChebyshevBasis(fc, x, bctx.eval_mod_degree)
+    return polyeval._eval_chebyshev(fc, basis, bctx.sine_coeffs)
+
+
+def _slot_to_coeff(fc, bctx: BootstrapContext, a0: ops.Ciphertext,
+                   a1: ops.Ciphertext) -> ops.Ciphertext:
+    v0 = linear._apply_bsgs(fc, a0, bctx.stc_plans[0])
+    v1 = linear._apply_bsgs(fc, a1, bctx.stc_plans[1])
+    return polyeval._add_any(fc, v0, v1)
+
+
+def _bootstrap(fc, bctx: BootstrapContext, ct: ops.Ciphertext,
+               post_scale: float | None = None) -> ops.Ciphertext:
+    """Refresh an exhausted ciphertext to level L − depth.
+
+    ``post_scale``: uniform-prime adaptation (DESIGN.md §6) — with 30-bit q0 ≈ Δ
+    the message must enter bootstrapping attenuated (|m| ≪ q0); the caller
+    divides before exhaustion and passes the same factor here to restore it.
+    The policy on ``fc`` selects the key-switch pipeline for every
+    rotation/relin inside and whether CtS/StC baby-step groups share one ModUp
+    per group (bit-exact either way).
+    """
+    trace.record("BOOTSTRAP_BEGIN", bctx.params.n, bctx.params.L + 1)
+    in_scale = ct.scale
+    raised = _mod_raise(fc, bctx, ct)
+    a0, a1 = _coeff_to_slot(fc, bctx, raised)
+    m0 = _eval_mod(fc, bctx, a0, raised.scale)
+    m1 = _eval_mod(fc, bctx, a1, raised.scale)
+    out = _slot_to_coeff(fc, bctx, m0, m1)
+    # amplitude bookkeeping: the sine was fitted for input scale = params.scale
+    out = ops.Ciphertext(out.c0, out.c1, out.level, out.scale * in_scale / bctx.params.scale)
+    if post_scale is not None:
+        out = ops._mul_const(fc, out, float(post_scale), rescale_after=True)
+    trace.record("BOOTSTRAP_END", bctx.params.n, out.level + 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# deprecated free-function shims
+# ---------------------------------------------------------------------------
+
+
+def _warn_deprecated(name: str, repl: str | None = None) -> None:
+    ops._warn_deprecated(name, repl, module="repro.fhe.bootstrap", stacklevel=4)
+
+
+def _shim_fc(ctx: BootstrapContext, backend: str, hoisting: str = "auto"):
+    return ops._shim_ctx(ctx.params, backend, ctx.keys, hoisting)
+
+
+def mod_raise(ctx: BootstrapContext, ct: ops.Ciphertext, backend: str = "auto") -> ops.Ciphertext:
+    _warn_deprecated("mod_raise")
+    return _mod_raise(_shim_fc(ctx, backend), ctx, ct)
+
+
+def coeff_to_slot(ctx: BootstrapContext, ct: ops.Ciphertext, backend: str = "auto",
+                  hoisting: str = "auto") -> tuple[ops.Ciphertext, ops.Ciphertext]:
+    _warn_deprecated("coeff_to_slot")
+    return _coeff_to_slot(_shim_fc(ctx, backend, hoisting), ctx, ct)
+
+
+def eval_mod(ctx: BootstrapContext, ct: ops.Ciphertext, coeff_scale: float,
+             backend: str = "auto") -> ops.Ciphertext:
+    _warn_deprecated("eval_mod")
+    return _eval_mod(_shim_fc(ctx, backend), ctx, ct, coeff_scale)
 
 
 def slot_to_coeff(ctx: BootstrapContext, a0: ops.Ciphertext, a1: ops.Ciphertext,
                   backend: str = "auto", hoisting: str = "auto") -> ops.Ciphertext:
-    p, keys = ctx.params, ctx.keys
-    v0 = linear.apply_bsgs(p, a0, ctx.stc_plans[0], keys, backend=backend, hoisting=hoisting)
-    v1 = linear.apply_bsgs(p, a1, ctx.stc_plans[1], keys, backend=backend, hoisting=hoisting)
-    return polyeval.add_any(p, v0, v1, backend)
+    _warn_deprecated("slot_to_coeff")
+    return _slot_to_coeff(_shim_fc(ctx, backend, hoisting), ctx, a0, a1)
 
 
 def bootstrap(
     ctx: BootstrapContext, ct: ops.Ciphertext, post_scale: float | None = None,
     backend: str = "auto", hoisting: str = "auto",
 ) -> ops.Ciphertext:
-    """Refresh an exhausted ciphertext to level L − depth.
-
-    ``post_scale``: uniform-prime adaptation (DESIGN.md §6) — with 30-bit q0 ≈ Δ
-    the message must enter bootstrapping attenuated (|m| ≪ q0); the caller
-    divides before exhaustion and passes the same factor here to restore it.
-    ``backend`` selects the key-switch pipeline for every rotation/relin inside
-    (see ``keyswitch.resolve_pipeline``); ``hoisting`` selects whether CtS/StC
-    baby-step groups share one ModUp per group (bit-exact either way).
-    """
-    trace.record("BOOTSTRAP_BEGIN", ctx.params.n, ctx.params.L + 1)
-    in_scale = ct.scale
-    raised = mod_raise(ctx, ct, backend)
-    a0, a1 = coeff_to_slot(ctx, raised, backend, hoisting)
-    m0 = eval_mod(ctx, a0, raised.scale, backend)
-    m1 = eval_mod(ctx, a1, raised.scale, backend)
-    out = slot_to_coeff(ctx, m0, m1, backend, hoisting)
-    # amplitude bookkeeping: the sine was fitted for input scale = params.scale
-    out = ops.Ciphertext(out.c0, out.c1, out.level, out.scale * in_scale / ctx.params.scale)
-    if post_scale is not None:
-        out = ops.mul_const(ctx.params, out, float(post_scale), rescale_after=True, backend=backend)
-    trace.record("BOOTSTRAP_END", ctx.params.n, out.level + 1)
-    return out
+    _warn_deprecated("bootstrap")
+    return _bootstrap(_shim_fc(ctx, backend, hoisting), ctx, ct, post_scale)

@@ -6,6 +6,13 @@ Baby rotations rot_b(v) are shared across giants, so an n×n dense transform
 costs ≈ 2√n key-switched rotations + n plaintext multiplies — the dominant
 workload of CoeffToSlot/SlotToCoeff in bootstrapping (paper §3.3: rotation-
 heavy deep pipelines).
+
+Execution policy comes from ``repro.fhe.context.FheContext`` —
+``ctx.apply_bsgs``/``ctx.plan_matrix`` are the primary API, and
+``plan_matrix`` picks the baby-step count n1 from a hoisting-aware cost model
+(under hoisting, baby steps are nearly free — see ``choose_n1``).  The
+module-level free functions taking ``backend=``/``hoisting=`` kwargs are
+deprecated shims that delegate to an equivalent context.
 """
 
 from __future__ import annotations
@@ -54,12 +61,78 @@ class BsgsPlan:
         return hit
 
 
-def plan_matrix(m: np.ndarray, n1: int | None = None, tol: float = 0.0) -> BsgsPlan:
-    """Extract (optionally sparse) diagonals of an n×n matrix for BSGS."""
+# ---------------------------------------------------------------------------
+# BSGS planning: the hoisting-aware n1 cost model
+# ---------------------------------------------------------------------------
+
+
+def bsgs_rotation_cost(diag_indices, n1: int, params: CkksParams, level: int,
+                       hoisted: bool) -> float:
+    """Key-switch cost of a BSGS split, in limb-NTT-equivalents.
+
+    The model counts the (i)NTT limb-transforms each rotation path issues —
+    the planner's own instruction shapes, collapsed to the dominant unit:
+
+      * a full key-switched rotation (unhoisted baby, or any giant — giants
+        act on *different* partial sums, so they can never share a ModUp):
+        ModUp (1 iNTT over nq limbs + β forward NTTs over m = nq+α limbs)
+        plus two ModDown tails (each α iNTT + nq NTT limbs);
+      * a hoisted baby: only the two ModDown tails — the group's single ModUp
+        is charged once.
+
+    Plaintext multiplies are diagonal-count work, identical for every n1, so
+    they cancel out of the argmin and are omitted.
+    """
+    nq = level + 1
+    alpha = params.alpha
+    beta = params.beta(level)
+    m = nq + alpha
+    full = nq + beta * m + 2 * (alpha + nq)  # ModUp + 2× ModDown
+    baby_hoisted = 2 * (alpha + nq)  # MAC rides the exit; ModDown dominates
+    babies = len({d % n1 for d in diag_indices} - {0})
+    giants = len({(d // n1) * n1 for d in diag_indices} - {0})
+    if not hoisted:
+        return (babies + giants) * full
+    modup_once = nq + beta * m if babies else 0.0
+    return modup_once + babies * baby_hoisted + giants * full
+
+
+def choose_n1(diag_indices, params: CkksParams, level: int, hoisted: bool) -> int:
+    """Baby-step count minimising the rotation cost model over powers of two.
+
+    Without hoisting the optimum sits at the classic ≈ √(#diags) balance
+    point.  With hoisting, baby steps cost only a ModDown each (the ModUp is
+    shared), so the optimum shifts toward more babies / fewer giants — e.g.
+    the radix-32 CtS stage (63 diagonals) moves from n1 = 8 to n1 = 16, the
+    value ``benchmarks/hoisting_bench.py`` exploits.
+    """
+    diag_indices = tuple(diag_indices)
+    if not diag_indices:
+        return 1
+    top = 1 << max(0, (max(diag_indices)).bit_length())
+    candidates = []
+    n1 = 1
+    while n1 <= max(2, top):
+        candidates.append(n1)
+        n1 <<= 1
+    return min(
+        candidates,
+        key=lambda c: (bsgs_rotation_cost(diag_indices, c, params, level, hoisted), c),
+    )
+
+
+def plan_matrix(m: np.ndarray, n1: int | None = None, tol: float = 0.0,
+                params: CkksParams | None = None, level: int | None = None,
+                hoisting: bool = False) -> BsgsPlan:
+    """Extract (optionally sparse) diagonals of an n×n matrix for BSGS.
+
+    n1 selection, in priority order: an explicit ``n1``; the hoisting-aware
+    cost model when ``params`` is given (``choose_n1`` — pass
+    ``hoisting=True`` when the transform will run under a hoisting policy);
+    otherwise the classic ≈ √n power of two.
+    """
     n = m.shape[0]
     assert m.shape == (n, n)
-    if n1 is None:
-        n1 = max(1, 1 << int(round(math.log2(math.sqrt(n)))))  # ≈ √n, power of two
     idx = np.arange(n)
     diags = {}
     mx = np.abs(m).max() or 1.0
@@ -67,40 +140,53 @@ def plan_matrix(m: np.ndarray, n1: int | None = None, tol: float = 0.0) -> BsgsP
         u = m[idx, (idx + d) % n]
         if tol == 0.0 or np.abs(u).max() > tol * mx:
             diags[int(d)] = u.astype(np.complex128)
+    if n1 is None:
+        if params is not None:
+            n1 = choose_n1(diags, params, params.L if level is None else level, hoisting)
+        else:
+            n1 = max(1, 1 << int(round(math.log2(math.sqrt(n)))))  # ≈ √n, power of two
     return BsgsPlan(n1=n1, diags=diags)
 
 
-def apply_bsgs(
-    params: CkksParams,
-    ct: ops.Ciphertext,
-    plan: BsgsPlan,
-    keys: KeySet,
-    scale: float | None = None,
-    backend: str = "auto",
-    hoisting: str = "auto",
-) -> ops.Ciphertext:
+def plan_diags(diags: dict[int, np.ndarray], params: CkksParams, level: int | None = None,
+               hoisting: bool = False, n1: int | None = None) -> BsgsPlan:
+    """BSGS plan straight from a diagonal dict (for banded transforms whose
+    dense matrix is too large to materialise), n1 from the cost model."""
+    if n1 is None:
+        n1 = choose_n1(diags, params, params.L if level is None else level, hoisting)
+    return BsgsPlan(n1=n1, diags=dict(diags))
+
+
+# ---------------------------------------------------------------------------
+# context implementations
+# ---------------------------------------------------------------------------
+
+
+def _apply_bsgs(ctx, ct: ops.Ciphertext, plan: BsgsPlan,
+                scale: float | None = None) -> ops.Ciphertext:
     """Homomorphic M·v.  Consumes one level (single rescale at the end).
 
-    ``hoisting`` controls the baby-step rotations (the dominant key-switch
-    cost): "auto"/"always" share ONE ModUp across the whole baby group
-    (Halevi–Shoup; "auto" falls back to per-rotation key-switching when the
-    group has fewer than two rotations), "never" key-switches each baby
+    The policy's hoisting mode controls the baby-step rotations (the dominant
+    key-switch cost): "auto"/"always" share ONE ModUp across the whole baby
+    group (Halevi–Shoup; "auto" falls back to per-rotation key-switching when
+    the group has fewer than two rotations), "never" key-switches each baby
     separately.  All modes are bit-exact against each other.  Giant-step
     rotations apply to *different* ciphertexts (the per-group partial sums),
     so they cannot share a ModUp and always run the standard path.
     """
-    if hoisting not in ops.HOISTING_MODES:
-        raise ValueError(f"unknown hoisting mode {hoisting!r}")
+    params = ctx.params
+    keys = ctx.require_keys()
+    hoisting = ctx.policy.hoisting
     scale = params.scale if scale is None else scale
     lv = ct.level
 
     babies: dict[int, ops.Ciphertext] = {0: ct}
     needed_b = plan.baby_steps()
     if hoisting == "always" or (hoisting == "auto" and len(needed_b) >= 2):
-        babies.update(ops.rotate_hoisted_group(params, ct, needed_b, keys, backend))
+        babies.update(ops._rotate_hoisted_group(ctx, ct, needed_b, keys))
     else:
         for b in needed_b:
-            babies[b] = ops.rotate(params, ct, b, keys, backend)
+            babies[b] = ops._rotate_standard(ctx, ct, b, keys)
 
     by_giant: dict[int, list[int]] = {}
     for d in plan.diags:
@@ -112,14 +198,48 @@ def apply_bsgs(
         for d in ds:
             b = d % plan.n1
             u = np.roll(plan.diags[d], g * plan.n1)  # pre-rotate the diagonal
-            pt = ops.encode(params, u, level=lv, scale=scale, backend=backend)
-            term = ops.mul_plain(params, babies[b], pt, rescale_after=False, backend=backend)
-            acc = term if acc is None else ops.add(params, acc, term, backend)
+            pt = ops._encode(ctx, u, level=lv, scale=scale)
+            term = ops._mul_plain(ctx, babies[b], pt, rescale_after=False)
+            acc = term if acc is None else ops._add(ctx, acc, term)
         if g:
-            acc = ops.rotate(params, acc, g * plan.n1, keys, backend)
-        total = acc if total is None else ops.add(params, total, acc, backend)
+            acc = ops._rotate_standard(ctx, acc, g * plan.n1, keys)
+        total = acc if total is None else ops._add(ctx, total, acc)
 
-    return ops.rescale(params, total, backend)
+    return ops._rescale(ctx, total)
+
+
+def _real_part(ctx, ct: ops.Ciphertext) -> ops.Ciphertext:
+    """(ct + conj(ct)) / 2 — scale the ½ into the bookkeeping (free)."""
+    s = ops._add(ctx, ct, ops._conjugate(ctx, ct, ctx.require_keys()))
+    return ops.Ciphertext(s.c0, s.c1, s.level, s.scale * 2.0)
+
+
+def _imag_part(ctx, ct: ops.Ciphertext) -> ops.Ciphertext:
+    """(ct − conj(ct)) / 2i — fold 1/(2i) into a plaintext mul."""
+    d = ops._sub(ctx, ct, ops._conjugate(ctx, ct, ctx.require_keys()))
+    return ops._mul_const(ctx, d, -0.5j, rescale_after=True)
+
+
+# ---------------------------------------------------------------------------
+# deprecated free-function shims
+# ---------------------------------------------------------------------------
+
+
+def _warn_deprecated(name: str, repl: str | None = None) -> None:
+    ops._warn_deprecated(name, repl, module="repro.fhe.linear", stacklevel=4)
+
+
+def apply_bsgs(
+    params: CkksParams,
+    ct: ops.Ciphertext,
+    plan: BsgsPlan,
+    keys: KeySet,
+    scale: float | None = None,
+    backend: str = "auto",
+    hoisting: str = "auto",
+) -> ops.Ciphertext:
+    _warn_deprecated("apply_bsgs")
+    return _apply_bsgs(ops._shim_ctx(params, backend, keys, hoisting), ct, plan, scale)
 
 
 def apply_bsgs_pair(
@@ -134,21 +254,18 @@ def apply_bsgs_pair(
     """Two transforms of the same input sharing the baby rotations."""
     # (simple composition; baby-step sharing is an optimisation the scheduler
     # models — numerically we just apply twice)
-    return (
-        apply_bsgs(params, ct, plans[0], keys, scale, backend, hoisting),
-        apply_bsgs(params, ct, plans[1], keys, scale, backend, hoisting),
-    )
+    _warn_deprecated("apply_bsgs_pair")
+    ctx = ops._shim_ctx(params, backend, keys, hoisting)
+    return (_apply_bsgs(ctx, ct, plans[0], scale), _apply_bsgs(ctx, ct, plans[1], scale))
 
 
 def real_part(params: CkksParams, ct: ops.Ciphertext, keys: KeySet,
               backend: str = "auto") -> ops.Ciphertext:
-    """(ct + conj(ct)) / 2 — scale the ½ into the bookkeeping (free)."""
-    s = ops.add(params, ct, ops.conjugate(params, ct, keys, backend), backend)
-    return ops.Ciphertext(s.c0, s.c1, s.level, s.scale * 2.0)
+    _warn_deprecated("real_part")
+    return _real_part(ops._shim_ctx(params, backend, keys), ct)
 
 
 def imag_part(params: CkksParams, ct: ops.Ciphertext, keys: KeySet,
               backend: str = "auto") -> ops.Ciphertext:
-    """(ct − conj(ct)) / 2i — fold 1/(2i) into a plaintext mul."""
-    d = ops.sub(params, ct, ops.conjugate(params, ct, keys, backend), backend)
-    return ops.mul_const(params, d, -0.5j, rescale_after=True, backend=backend)
+    _warn_deprecated("imag_part")
+    return _imag_part(ops._shim_ctx(params, backend, keys), ct)

@@ -5,14 +5,19 @@ tracked floating-point scale (Lattigo-style scale management).  All heavy ops
 dispatch through the kernel wrappers (Pallas on TPU, u64 oracle elsewhere) and
 record trace instructions for the core scheduler/simulator.
 
-Every op takes a ``backend`` choice and threads it through to the kernel layer
-("auto" = Pallas kernels on TPU, u64 oracle elsewhere); key-switching ops
-additionally understand "fused"/"staged"/"ref" — see ``keyswitch``.
+Execution choices (kernel backend, rotation-hoisting mode, numerics mode) are
+owned by ``repro.fhe.context.FheContext`` — every op here is implemented ONCE
+as a context-consuming ``_impl`` function, and the context's methods
+(``ctx.add``, ``ctx.rotate``, ...) are the primary API.  The module-level free
+functions that take a loose ``backend=`` kwarg are **deprecated** shims kept
+for source compatibility: they build an equivalent context and delegate,
+emitting a ``DeprecationWarning``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -22,6 +27,8 @@ from repro.kernels.modops import ops as mo
 from . import encoder, keyswitch, poly, trace
 from .keys import KeySet, PublicKey, SecretKey, SwitchingKey
 from .params import CkksParams
+
+HOISTING_MODES = ("never", "auto", "always")
 
 
 @dataclasses.dataclass
@@ -47,6 +54,34 @@ def _qs(params: CkksParams, level: int) -> np.ndarray:
     return np.array(params.q_primes[: level + 1], np.uint64)
 
 
+# ---------------------------------------------------------------------------
+# legacy-shim machinery
+# ---------------------------------------------------------------------------
+
+
+def _warn_deprecated(name: str, repl: str | None = None,
+                     module: str = "repro.fhe.ops", stacklevel: int = 3) -> None:
+    """The one deprecation-message emitter for every legacy shim in this
+    package (``linear``/``polyeval``/``bootstrap`` delegate through their own
+    one-line wrappers with ``stacklevel=4``) — message shape and attribution
+    stay consistent by construction."""
+    repl = repl if repl is not None else name
+    warnings.warn(
+        f"{module}.{name}() is deprecated; use repro.fhe.FheContext.{repl}()",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )
+
+
+def _shim_ctx(params: CkksParams, backend: str, keys: KeySet | None = None,
+              hoisting: str = "auto"):
+    """The context equivalent of one legacy (params, backend[, hoisting]) call."""
+    from .context import ExecPolicy, FheContext
+
+    return FheContext(params=params, keys=keys,
+                      policy=ExecPolicy(backend=backend, hoisting=hoisting))
+
+
 def _stage(backend: str) -> str:
     """Pointwise-stage backend for an op-level backend choice."""
     _, stage = keyswitch.resolve_pipeline(backend)
@@ -54,41 +89,42 @@ def _stage(backend: str) -> str:
 
 
 # ---------------------------------------------------------------------------
-# encode / encrypt / decrypt
+# encode / encrypt / decrypt — context implementations
 # ---------------------------------------------------------------------------
 
 
-def encode(params: CkksParams, z, level: int | None = None, scale: float | None = None,
-           backend: str = "auto") -> Plaintext:
+def _encode(ctx, z, level: int | None = None, scale: float | None = None) -> Plaintext:
+    params = ctx.params
     level = params.L if level is None else level
     scale = params.scale if scale is None else scale
     primes = params.q_primes[: level + 1]
     coeffs = encoder.encode(np.asarray(z), params.n, scale, primes)
-    data = poly.to_eval(coeffs, params, poly.q_idx(params, level), _stage(backend))
+    data = poly.to_eval(coeffs, params, poly.q_idx(params, level), ctx.stage)
     return Plaintext(data=data, level=level, scale=scale)
 
 
-def encode_const(params: CkksParams, c, level: int, scale: float,
-                 backend: str = "auto") -> Plaintext:
+def _encode_const(ctx, c, level: int, scale: float) -> Plaintext:
+    params = ctx.params
     primes = params.q_primes[: level + 1]
     coeffs = encoder.encode_const(c, params.n, scale, primes)
-    data = poly.to_eval(coeffs, params, poly.q_idx(params, level), _stage(backend))
+    data = poly.to_eval(coeffs, params, poly.q_idx(params, level), ctx.stage)
     return Plaintext(data=data, level=level, scale=scale)
 
 
-def decode(params: CkksParams, pt: Plaintext, backend: str = "auto") -> np.ndarray:
-    coeffs = poly.to_coeff(pt.data, params, poly.q_idx(params, pt.level), _stage(backend))
+def _decode(ctx, pt: Plaintext) -> np.ndarray:
+    params = ctx.params
+    coeffs = poly.to_coeff(pt.data, params, poly.q_idx(params, pt.level), ctx.stage)
     limbs = min(pt.level + 1, 4)
     return encoder.decode(np.asarray(coeffs), params.q_primes[: pt.level + 1], pt.scale, max_limbs=limbs)
 
 
-def encrypt(params: CkksParams, pk: PublicKey, pt: Plaintext, seed: int = 17,
-            backend: str = "auto") -> Ciphertext:
+def _encrypt(ctx, pk: PublicKey, pt: Plaintext, seed: int = 17) -> Ciphertext:
+    params = ctx.params
     rng = np.random.default_rng(seed)
     level = pt.level
     idx = poly.q_idx(params, level)
     qs = _qs(params, level)
-    bk = _stage(backend)
+    bk = ctx.stage
     v = poly.to_eval(
         poly.to_rns_signed(poly.sample_ternary(rng, params.n, params.n // 2), params.q_primes[: level + 1]),
         params, idx, bk,
@@ -108,9 +144,10 @@ def encrypt(params: CkksParams, pk: PublicKey, pt: Plaintext, seed: int = 17,
     return Ciphertext(c0=c0, c1=c1, level=level, scale=pt.scale)
 
 
-def decrypt(params: CkksParams, sk: SecretKey, ct: Ciphertext, backend: str = "auto") -> Plaintext:
+def _decrypt(ctx, sk: SecretKey, ct: Ciphertext) -> Plaintext:
+    params = ctx.params
     qs = _qs(params, ct.level)
-    bk = _stage(backend)
+    bk = ctx.stage
     trace.record("PMULT", params.n, ct.level + 1)
     m = mo.pointwise_addmod(
         ct.c0, mo.pointwise_mulmod(ct.c1, sk.s_eval[: ct.level + 1], qs, backend=bk), qs, backend=bk
@@ -118,13 +155,8 @@ def decrypt(params: CkksParams, sk: SecretKey, ct: Ciphertext, backend: str = "a
     return Plaintext(data=m, level=ct.level, scale=ct.scale)
 
 
-def decrypt_decode(params: CkksParams, sk: SecretKey, ct: Ciphertext,
-                   backend: str = "auto") -> np.ndarray:
-    return decode(params, decrypt(params, sk, ct, backend), backend)
-
-
 # ---------------------------------------------------------------------------
-# additive ops
+# additive ops — context implementations
 # ---------------------------------------------------------------------------
 
 
@@ -144,10 +176,11 @@ def level_drop(ct: Ciphertext, level: int) -> Ciphertext:
     return Ciphertext(c0=ct.c0[: level + 1], c1=ct.c1[: level + 1], level=level, scale=ct.scale)
 
 
-def add(params: CkksParams, a: Ciphertext, b: Ciphertext, backend: str = "auto") -> Ciphertext:
+def _add(ctx, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+    params = ctx.params
     a, b = _align(params, a, b)
     qs = _qs(params, a.level)
-    bk = _stage(backend)
+    bk = ctx.stage
     trace.record("PADD", params.n, 2 * (a.level + 1))
     return Ciphertext(
         c0=mo.pointwise_addmod(a.c0, b.c0, qs, backend=bk),
@@ -156,10 +189,11 @@ def add(params: CkksParams, a: Ciphertext, b: Ciphertext, backend: str = "auto")
     )
 
 
-def sub(params: CkksParams, a: Ciphertext, b: Ciphertext, backend: str = "auto") -> Ciphertext:
+def _sub(ctx, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+    params = ctx.params
     a, b = _align(params, a, b)
     qs = _qs(params, a.level)
-    bk = _stage(backend)
+    bk = ctx.stage
     trace.record("PSUB", params.n, 2 * (a.level + 1))
     return Ciphertext(
         c0=mo.pointwise_submod(a.c0, b.c0, qs, backend=bk),
@@ -168,9 +202,10 @@ def sub(params: CkksParams, a: Ciphertext, b: Ciphertext, backend: str = "auto")
     )
 
 
-def negate(params: CkksParams, a: Ciphertext, backend: str = "auto") -> Ciphertext:
+def _negate(ctx, a: Ciphertext) -> Ciphertext:
+    params = ctx.params
     qs = _qs(params, a.level)
-    bk = _stage(backend)
+    bk = ctx.stage
     z = jnp.zeros_like(a.c0)
     trace.record("PSUB", params.n, 2 * (a.level + 1))
     return Ciphertext(
@@ -180,31 +215,32 @@ def negate(params: CkksParams, a: Ciphertext, backend: str = "auto") -> Cipherte
     )
 
 
-def add_plain(params: CkksParams, a: Ciphertext, pt: Plaintext, backend: str = "auto") -> Ciphertext:
+def _add_plain(ctx, a: Ciphertext, pt: Plaintext) -> Ciphertext:
+    params = ctx.params
     assert pt.level >= a.level
     qs = _qs(params, a.level)
     trace.record("PADD", params.n, a.level + 1)
     return Ciphertext(
-        c0=mo.pointwise_addmod(a.c0, pt.data[: a.level + 1], qs, backend=_stage(backend)),
+        c0=mo.pointwise_addmod(a.c0, pt.data[: a.level + 1], qs, backend=ctx.stage),
         c1=a.c1, level=a.level, scale=a.scale,
     )
 
 
-def add_const(params: CkksParams, a: Ciphertext, c, backend: str = "auto") -> Ciphertext:
-    pt = encode_const(params, c, a.level, a.scale, backend)
-    return add_plain(params, a, pt, backend)
+def _add_const(ctx, a: Ciphertext, c) -> Ciphertext:
+    pt = _encode_const(ctx, c, a.level, a.scale)
+    return _add_plain(ctx, a, pt)
 
 
 # ---------------------------------------------------------------------------
-# multiplicative ops
+# multiplicative ops — context implementations
 # ---------------------------------------------------------------------------
 
 
-def mul_plain(params: CkksParams, a: Ciphertext, pt: Plaintext, rescale_after: bool = True,
-              backend: str = "auto") -> Ciphertext:
+def _mul_plain(ctx, a: Ciphertext, pt: Plaintext, rescale_after: bool = True) -> Ciphertext:
+    params = ctx.params
     assert pt.level >= a.level
     qs = _qs(params, a.level)
-    bk = _stage(backend)
+    bk = ctx.stage
     trace.record("PMULT", params.n, 2 * (a.level + 1))
     d = pt.data[: a.level + 1]
     out = Ciphertext(
@@ -212,34 +248,34 @@ def mul_plain(params: CkksParams, a: Ciphertext, pt: Plaintext, rescale_after: b
         c1=mo.pointwise_mulmod(a.c1, d, qs, backend=bk),
         level=a.level, scale=a.scale * pt.scale,
     )
-    return rescale(params, out, backend) if rescale_after else out
+    return _rescale(ctx, out) if rescale_after else out
 
 
-def mul_const(params: CkksParams, a: Ciphertext, c, rescale_after: bool = True,
-              backend: str = "auto") -> Ciphertext:
-    pt = encode_const(params, c, a.level, params.scale, backend)
-    return mul_plain(params, a, pt, rescale_after, backend)
+def _mul_const(ctx, a: Ciphertext, c, rescale_after: bool = True) -> Ciphertext:
+    pt = _encode_const(ctx, c, a.level, ctx.params.scale)
+    return _mul_plain(ctx, a, pt, rescale_after)
 
 
-def mul_const_exact(params: CkksParams, a: Ciphertext, c, target_scale: float,
-                    backend: str = "auto") -> Ciphertext:
+def _mul_const_exact(ctx, a: Ciphertext, c, target_scale: float) -> Ciphertext:
     """a·c with the constant's encoding scale chosen so the rescaled result has
     exactly ``target_scale`` — the anchor that keeps scale bookkeeping from
     drifting through multiplicative trees (see polyeval)."""
+    params = ctx.params
     q = float(params.q_primes[a.level])
     enc_scale = target_scale * q / a.scale
     assert enc_scale > 256.0, f"enc_scale underflow ({enc_scale}); scale drift upstream"
-    pt = encode_const(params, c, a.level, enc_scale, backend)
-    out = mul_plain(params, a, pt, rescale_after=True, backend=backend)
+    pt = _encode_const(ctx, c, a.level, enc_scale)
+    out = _mul_plain(ctx, a, pt, rescale_after=True)
     return Ciphertext(out.c0, out.c1, out.level, target_scale)
 
 
-def mul(params: CkksParams, a: Ciphertext, b: Ciphertext, rlk: SwitchingKey,
-        rescale_after: bool = True, backend: str = "auto") -> Ciphertext:
+def _mul(ctx, a: Ciphertext, b: Ciphertext, rlk: SwitchingKey,
+         rescale_after: bool = True) -> Ciphertext:
     """Full homomorphic multiplication with relinearisation (key-switch of d2)."""
+    params = ctx.params
     a, b = _align_mul(params, a, b)
     qs = _qs(params, a.level)
-    bk = _stage(backend)
+    bk = ctx.stage
     trace.record("PMULT", params.n, 4 * (a.level + 1))
     d0 = mo.pointwise_mulmod(a.c0, b.c0, qs, backend=bk)
     d2 = mo.pointwise_mulmod(a.c1, b.c1, qs, backend=bk)
@@ -247,14 +283,14 @@ def mul(params: CkksParams, a: Ciphertext, b: Ciphertext, rlk: SwitchingKey,
     cross2 = mo.pointwise_mulmod(a.c1, b.c0, qs, backend=bk)
     trace.record("PADD", params.n, a.level + 1)
     d1 = mo.pointwise_addmod(cross1, cross2, qs, backend=bk)
-    ks0, ks1 = keyswitch.key_switch(d2, params, a.level, rlk, backend)
+    ks0, ks1 = keyswitch.key_switch(d2, params, a.level, rlk, ctx.backend)
     trace.record("PADD", params.n, 2 * (a.level + 1))
     out = Ciphertext(
         c0=mo.pointwise_addmod(d0, ks0, qs, backend=bk),
         c1=mo.pointwise_addmod(d1, ks1, qs, backend=bk),
         level=a.level, scale=a.scale * b.scale,
     )
-    return rescale(params, out, backend) if rescale_after else out
+    return _rescale(ctx, out) if rescale_after else out
 
 
 def _align_mul(params: CkksParams, a: Ciphertext, b: Ciphertext):
@@ -262,19 +298,15 @@ def _align_mul(params: CkksParams, a: Ciphertext, b: Ciphertext):
     return level_drop(a, lv), level_drop(b, lv)
 
 
-def square(params: CkksParams, a: Ciphertext, rlk: SwitchingKey, rescale_after: bool = True,
-           backend: str = "auto") -> Ciphertext:
-    return mul(params, a, a, rlk, rescale_after, backend)
-
-
-def rescale(params: CkksParams, ct: Ciphertext, backend: str = "auto") -> Ciphertext:
+def _rescale(ctx, ct: Ciphertext) -> Ciphertext:
     """Divide by q_ℓ and drop a level (eval-domain RNS rescale)."""
+    params = ctx.params
     lv = ct.level
     assert lv >= 1, "cannot rescale at level 0"
     q_last = int(params.q_primes[lv])
     qs_rem = _qs(params, lv - 1)
     rem_primes = params.q_primes[:lv]
-    bk = _stage(backend)
+    bk = ctx.stage
     qinv = np.array([pow(q_last % int(q), -1, int(q)) for q in rem_primes], np.uint64)
     qinv_b = jnp.asarray(qinv[:, None].astype(np.uint32))
 
@@ -295,54 +327,58 @@ def rescale(params: CkksParams, ct: Ciphertext, backend: str = "auto") -> Cipher
 
 
 # ---------------------------------------------------------------------------
-# rotations / conjugation
+# rotations / conjugation — context implementations
 # ---------------------------------------------------------------------------
 
 
-HOISTING_MODES = ("never", "auto", "always")
-
-
-def rotate(params: CkksParams, ct: Ciphertext, r: int, keys: KeySet, backend: str = "auto",
-           hoisting: str = "never") -> Ciphertext:
+def _rotate(ctx, ct: Ciphertext, r: int, keys: KeySet) -> Ciphertext:
     """Cyclic left-rotation of the slot vector by r (σ_{5^r} + key switch).
 
-    ``hoisting`` selects the key-switch shape: "never"/"auto" run the standard
-    per-rotation ModUp (a single rotation has nothing to amortise); "always"
-    routes through the hoisted path (``rotate_hoisted``) — bit-exact either
+    The policy's hoisting mode selects the key-switch shape: "never"/"auto"
+    run the standard per-rotation ModUp (a single rotation has nothing to
+    amortise); "always" routes through the hoisted path — bit-exact either
     way.  Groups of rotations of the same ciphertext should use
     ``rotate_hoisted_group`` to actually share the ModUp.
     """
-    if hoisting not in HOISTING_MODES:
-        raise ValueError(f"unknown hoisting mode {hoisting!r}")
+    params = ctx.params
     if r % params.slots == 0:
         return ct
-    if hoisting == "always":
-        return rotate_hoisted(params, ct, r, keys, backend)
+    if ctx.policy.hoisting == "always":
+        return _rotate_hoisted(ctx, ct, r, keys)
+    return _rotate_standard(ctx, ct, r, keys)
+
+
+def _rotate_standard(ctx, ct: Ciphertext, r: int, keys: KeySet) -> Ciphertext:
+    """Per-rotation key switch regardless of the policy's hoisting mode —
+    the path for rotations of *distinct* ciphertexts (e.g. BSGS giant steps),
+    which can never share a ModUp."""
+    params = ctx.params
+    if r % params.slots == 0:
+        return ct
     t = pow(5, r % params.slots, 2 * params.n)
-    return _apply_galois(params, ct, t, keys, backend)
+    return _apply_galois(ctx, ct, t, keys)
 
 
-def rotate_hoisted(params: CkksParams, ct: Ciphertext, r: int, keys: KeySet,
-                   backend: str = "auto",
-                   hoisted: keyswitch.HoistedDigits | None = None) -> Ciphertext:
+def _rotate_hoisted(ctx, ct: Ciphertext, r: int, keys: KeySet,
+                    hoisted: keyswitch.HoistedDigits | None = None) -> Ciphertext:
     """Hoisted rotation: reuse (or build) the ModUp decomposition of ct.c1.
 
     Pass ``hoisted=keyswitch.hoisted_mod_up(ct.c1, ...)`` to amortise the
     ModUp across several calls on the same ciphertext; each call then costs
     only KSK-MAC + ModDown + one automorphism.  Bit-exact vs ``rotate``.
     """
+    params = ctx.params
     if r % params.slots == 0:
         return ct
     t = pow(5, r % params.slots, 2 * params.n)
     hd = hoisted if hoisted is not None else keyswitch.hoisted_mod_up(
-        ct.c1, params, ct.level, backend
+        ct.c1, params, ct.level, ctx.backend
     )
-    c0, c1 = keyswitch.rotate_hoisted(ct.c0, hd, t, keys, params, ct.level, backend)
+    c0, c1 = keyswitch.rotate_hoisted(ct.c0, hd, t, keys, params, ct.level, ctx.backend)
     return Ciphertext(c0=c0, c1=c1, level=ct.level, scale=ct.scale)
 
 
-def rotate_hoisted_group(params: CkksParams, ct: Ciphertext, rots, keys: KeySet,
-                         backend: str = "auto") -> dict[int, Ciphertext]:
+def _rotate_hoisted_group(ctx, ct: Ciphertext, rots, keys: KeySet) -> dict[int, Ciphertext]:
     """Halevi–Shoup hoisting: ONE ModUp shared by every rotation in ``rots``.
 
     The fused pipeline batches the whole group: one ModUp launch, one Galois
@@ -351,6 +387,8 @@ def rotate_hoisted_group(params: CkksParams, ct: Ciphertext, rots, keys: KeySet,
     for k rotations instead of O(k·β).  Returns {r: rotated ciphertext} keyed
     by the input rotation values; each entry is bit-exact vs ``rotate``.
     """
+    params = ctx.params
+    backend = ctx.backend
     uniq: dict[int, int] = {}  # r mod slots → galois element
     for r in rots:
         rm = r % params.slots
@@ -372,12 +410,12 @@ def rotate_hoisted_group(params: CkksParams, ct: Ciphertext, rots, keys: KeySet,
     return {r: (by_rm[r % params.slots] if r % params.slots else ct) for r in rots}
 
 
-def conjugate(params: CkksParams, ct: Ciphertext, keys: KeySet, backend: str = "auto") -> Ciphertext:
-    t = 2 * params.n - 1
-    return _apply_galois(params, ct, t, keys, backend)
+def _conjugate(ctx, ct: Ciphertext, keys: KeySet) -> Ciphertext:
+    t = 2 * ctx.params.n - 1
+    return _apply_galois(ctx, ct, t, keys)
 
 
-def _apply_galois(params: CkksParams, ct: Ciphertext, t: int, keys: KeySet, backend: str) -> Ciphertext:
+def _apply_galois(ctx, ct: Ciphertext, t: int, keys: KeySet) -> Ciphertext:
     """Key-switched automorphism σ_t, permute-last formulation.
 
     The key-switch runs against the σ_t^{-1}-pre-permuted Galois key and the
@@ -387,8 +425,133 @@ def _apply_galois(params: CkksParams, ct: Ciphertext, t: int, keys: KeySet, back
     other — and the trace shape matches the classic permute-first pipeline
     (2×AUTO + key-switch + PADD).
     """
+    params = ctx.params
     lv = ct.level
     ksk_pre = keyswitch.hoisted_ksk(params, keys, t, lv)
-    ks0, ks1 = keyswitch.key_switch_selected(ct.c1, params, lv, ksk_pre, backend)
-    c0, c1 = keyswitch.permute_last(ct.c0, ks0, ks1, t, params, lv, backend)
+    ks0, ks1 = keyswitch.key_switch_selected(ct.c1, params, lv, ksk_pre, ctx.backend)
+    c0, c1 = keyswitch.permute_last(ct.c0, ks0, ks1, t, params, lv, ctx.backend)
     return Ciphertext(c0=c0, c1=c1, level=lv, scale=ct.scale)
+
+
+# ---------------------------------------------------------------------------
+# deprecated free-function shims (kwarg-threading era API)
+# ---------------------------------------------------------------------------
+
+
+def encode(params: CkksParams, z, level: int | None = None, scale: float | None = None,
+           backend: str = "auto") -> Plaintext:
+    _warn_deprecated("encode")
+    return _encode(_shim_ctx(params, backend), z, level, scale)
+
+
+def encode_const(params: CkksParams, c, level: int, scale: float,
+                 backend: str = "auto") -> Plaintext:
+    _warn_deprecated("encode_const")
+    return _encode_const(_shim_ctx(params, backend), c, level, scale)
+
+
+def decode(params: CkksParams, pt: Plaintext, backend: str = "auto") -> np.ndarray:
+    _warn_deprecated("decode")
+    return _decode(_shim_ctx(params, backend), pt)
+
+
+def encrypt(params: CkksParams, pk: PublicKey, pt: Plaintext, seed: int = 17,
+            backend: str = "auto") -> Ciphertext:
+    _warn_deprecated("encrypt")
+    return _encrypt(_shim_ctx(params, backend), pk, pt, seed)
+
+
+def decrypt(params: CkksParams, sk: SecretKey, ct: Ciphertext, backend: str = "auto") -> Plaintext:
+    _warn_deprecated("decrypt")
+    return _decrypt(_shim_ctx(params, backend), sk, ct)
+
+
+def decrypt_decode(params: CkksParams, sk: SecretKey, ct: Ciphertext,
+                   backend: str = "auto") -> np.ndarray:
+    _warn_deprecated("decrypt_decode")
+    ctx = _shim_ctx(params, backend)
+    return _decode(ctx, _decrypt(ctx, sk, ct))
+
+
+def add(params: CkksParams, a: Ciphertext, b: Ciphertext, backend: str = "auto") -> Ciphertext:
+    _warn_deprecated("add")
+    return _add(_shim_ctx(params, backend), a, b)
+
+
+def sub(params: CkksParams, a: Ciphertext, b: Ciphertext, backend: str = "auto") -> Ciphertext:
+    _warn_deprecated("sub")
+    return _sub(_shim_ctx(params, backend), a, b)
+
+
+def negate(params: CkksParams, a: Ciphertext, backend: str = "auto") -> Ciphertext:
+    _warn_deprecated("negate")
+    return _negate(_shim_ctx(params, backend), a)
+
+
+def add_plain(params: CkksParams, a: Ciphertext, pt: Plaintext, backend: str = "auto") -> Ciphertext:
+    _warn_deprecated("add_plain")
+    return _add_plain(_shim_ctx(params, backend), a, pt)
+
+
+def add_const(params: CkksParams, a: Ciphertext, c, backend: str = "auto") -> Ciphertext:
+    _warn_deprecated("add_const")
+    return _add_const(_shim_ctx(params, backend), a, c)
+
+
+def mul_plain(params: CkksParams, a: Ciphertext, pt: Plaintext, rescale_after: bool = True,
+              backend: str = "auto") -> Ciphertext:
+    _warn_deprecated("mul_plain")
+    return _mul_plain(_shim_ctx(params, backend), a, pt, rescale_after)
+
+
+def mul_const(params: CkksParams, a: Ciphertext, c, rescale_after: bool = True,
+              backend: str = "auto") -> Ciphertext:
+    _warn_deprecated("mul_const")
+    return _mul_const(_shim_ctx(params, backend), a, c, rescale_after)
+
+
+def mul_const_exact(params: CkksParams, a: Ciphertext, c, target_scale: float,
+                    backend: str = "auto") -> Ciphertext:
+    _warn_deprecated("mul_const_exact")
+    return _mul_const_exact(_shim_ctx(params, backend), a, c, target_scale)
+
+
+def mul(params: CkksParams, a: Ciphertext, b: Ciphertext, rlk: SwitchingKey,
+        rescale_after: bool = True, backend: str = "auto") -> Ciphertext:
+    _warn_deprecated("mul")
+    return _mul(_shim_ctx(params, backend), a, b, rlk, rescale_after)
+
+
+def square(params: CkksParams, a: Ciphertext, rlk: SwitchingKey, rescale_after: bool = True,
+           backend: str = "auto") -> Ciphertext:
+    _warn_deprecated("square")
+    return _mul(_shim_ctx(params, backend), a, a, rlk, rescale_after)
+
+
+def rescale(params: CkksParams, ct: Ciphertext, backend: str = "auto") -> Ciphertext:
+    _warn_deprecated("rescale")
+    return _rescale(_shim_ctx(params, backend), ct)
+
+
+def rotate(params: CkksParams, ct: Ciphertext, r: int, keys: KeySet, backend: str = "auto",
+           hoisting: str = "never") -> Ciphertext:
+    _warn_deprecated("rotate")
+    return _rotate(_shim_ctx(params, backend, keys, hoisting), ct, r, keys)
+
+
+def rotate_hoisted(params: CkksParams, ct: Ciphertext, r: int, keys: KeySet,
+                   backend: str = "auto",
+                   hoisted: keyswitch.HoistedDigits | None = None) -> Ciphertext:
+    _warn_deprecated("rotate_hoisted")
+    return _rotate_hoisted(_shim_ctx(params, backend, keys), ct, r, keys, hoisted)
+
+
+def rotate_hoisted_group(params: CkksParams, ct: Ciphertext, rots, keys: KeySet,
+                         backend: str = "auto") -> dict[int, Ciphertext]:
+    _warn_deprecated("rotate_hoisted_group")
+    return _rotate_hoisted_group(_shim_ctx(params, backend, keys), ct, rots, keys)
+
+
+def conjugate(params: CkksParams, ct: Ciphertext, keys: KeySet, backend: str = "auto") -> Ciphertext:
+    _warn_deprecated("conjugate")
+    return _conjugate(_shim_ctx(params, backend, keys), ct, keys)

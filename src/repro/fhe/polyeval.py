@@ -15,6 +15,10 @@ Scale discipline (exact — no tolerance fudging):
 The mult count here is O(d); the hardware planner (repro.core.planner) models
 the Paterson–Stockmeyer count ~2√d when emitting instruction streams — the
 *depth* (what the level budget sees) is identical.
+
+Evaluate through a context: ``ctx.eval_poly(ct, coeffs)`` (or
+``ctx.chebyshev_basis`` + ``ctx.eval_chebyshev`` to reuse a basis).  The
+``backend=``-kwarg free functions below are deprecated shims.
 """
 
 from __future__ import annotations
@@ -32,14 +36,19 @@ def chebyshev_fit(f, degree: int, k: float = 1.0) -> np.ndarray:
     return cheb.coef
 
 
-def force_to(params: CkksParams, ct: ops.Ciphertext, level: int, scale: float,
-             backend: str = "auto") -> ops.Ciphertext:
+# ---------------------------------------------------------------------------
+# context implementations
+# ---------------------------------------------------------------------------
+
+
+def _force_to(ctx, ct: ops.Ciphertext, level: int, scale: float) -> ops.Ciphertext:
     """Bring ct to exactly (level, scale).
 
     Exact whenever ≥1 level is consumed: the scale ratio is folded into a
     mul-by-one encoded at scale  target·q_{lv+1}/current  (≈ 2^30 ≫ 1),
     followed by one rescale.
     """
+    params = ctx.params
     assert ct.level >= level
     if ct.level == level:
         if scale != ct.scale:
@@ -52,57 +61,76 @@ def force_to(params: CkksParams, ct: ops.Ciphertext, level: int, scale: float,
     ct = ops.level_drop(ct, level + 1)
     q = float(params.q_primes[level + 1])
     enc_scale = scale * q / ct.scale
-    pt = ops.encode_const(params, 1.0, ct.level, enc_scale, backend)
-    out = ops.mul_plain(params, ct, pt, rescale_after=True, backend=backend)
+    pt = ops._encode_const(ctx, 1.0, ct.level, enc_scale)
+    out = ops._mul_plain(ctx, ct, pt, rescale_after=True)
     return ops.Ciphertext(out.c0, out.c1, out.level, scale)  # exact by construction
 
 
-def add_any(params: CkksParams, a: ops.Ciphertext, b: ops.Ciphertext,
-            backend: str = "auto") -> ops.Ciphertext:
+def _add_any(ctx, a: ops.Ciphertext, b: ops.Ciphertext) -> ops.Ciphertext:
     """Add ciphertexts at arbitrary levels (aligns to the deeper one, exactly)."""
     if a.level < b.level:
-        b = force_to(params, b, a.level, a.scale, backend)
+        b = _force_to(ctx, b, a.level, a.scale)
     elif b.level < a.level:
-        a = force_to(params, a, b.level, b.scale, backend)
+        a = _force_to(ctx, a, b.level, b.scale)
     elif a.scale != b.scale:
-        b = force_to(params, b, a.level, a.scale, backend)  # asserts near-equality
-    return ops.add(params, a, b, backend)
+        b = _force_to(ctx, b, a.level, a.scale)  # asserts near-equality
+    return ops._add(ctx, a, b)
 
 
 class ChebyshevBasis:
-    """T_1..T_degree over a normalised input x ∈ [-1, 1] (log-depth tree)."""
+    """T_1..T_degree over a normalised input x ∈ [-1, 1] (log-depth tree).
 
-    def __init__(self, params: CkksParams, x: ops.Ciphertext, keys: KeySet, degree: int,
-                 backend: str = "auto"):
-        self.params = params
-        self.keys = keys
+    Context-first construction: ``ChebyshevBasis(ctx, x, degree)`` (or
+    ``ctx.chebyshev_basis(x, degree)``).  The legacy positional form
+    ``ChebyshevBasis(params, x, keys, degree, backend=...)`` still works and
+    builds an equivalent context internally.
+    """
+
+    def __init__(self, params_or_ctx, x: ops.Ciphertext, keys_or_degree=None,
+                 degree: int | None = None, backend: str = "auto"):
+        from .context import FheContext
+
+        if isinstance(params_or_ctx, FheContext):
+            ctx = params_or_ctx
+            assert degree is None and isinstance(keys_or_degree, int), (
+                "context form is ChebyshevBasis(ctx, x, degree)"
+            )
+            degree = keys_or_degree
+        else:
+            assert isinstance(keys_or_degree, KeySet) and degree is not None, (
+                "legacy form is ChebyshevBasis(params, x, keys, degree, backend=...)"
+            )
+            ops._warn_deprecated("ChebyshevBasis", "chebyshev_basis",
+                                 module="repro.fhe.polyeval")
+            ctx = ops._shim_ctx(params_or_ctx, backend, keys_or_degree)
+        self.ctx = ctx
+        self.params = ctx.params
+        self.keys = ctx.keys
         self.degree = degree
-        self.backend = backend
+        self.backend = ctx.backend
         self.t: dict[int, ops.Ciphertext] = {1: x}
         for j in range(2, degree + 1):
             self.t[j] = self._pair(j)
 
     def _pair(self, j: int) -> ops.Ciphertext:
         """T_j = 2·T_a·T_b − T_{|a−b|},  a = ⌊j/2⌋."""
-        p, keys, bk = self.params, self.keys, self.backend
+        ctx = self.ctx
         a = j // 2
         b = j - a
-        prod = ops.mul(p, self.t[a], self.t[b], keys.rlk, backend=bk)  # rescaled
-        two = ops.add(p, prod, prod, bk)
+        prod = ops._mul(ctx, self.t[a], self.t[b], ctx.require_keys().rlk)  # rescaled
+        two = ops._add(ctx, prod, prod)
         if a == b:
-            return ops.add_const(p, two, -1.0, bk)
+            return ops._add_const(ctx, two, -1.0)
         # T_{|a-b|} = T_{b-a} was built earlier ⇒ strictly higher level ⇒ exact
-        return add_any(p, two, ops.negate(p, self.t[b - a], bk), bk)
+        return _add_any(ctx, two, ops._negate(ctx, self.t[b - a]))
 
     def min_level(self) -> int:
         return min(ct.level for ct in self.t.values())
 
 
-def eval_chebyshev(
-    params: CkksParams, basis: ChebyshevBasis, coeffs: np.ndarray, keys: KeySet,
-    backend: str = "auto",
-) -> ops.Ciphertext:
+def _eval_chebyshev(ctx, basis: ChebyshevBasis, coeffs: np.ndarray) -> ops.Ciphertext:
     """Σ c_i·T_i(x) as one exact plaintext linear combination."""
+    params = ctx.params
     c = np.asarray(coeffs, dtype=np.float64)
     assert len(c) - 1 <= basis.degree
     s_star = params.scale
@@ -116,14 +144,43 @@ def eval_chebyshev(
         # encode so the rescaled product lands at exactly (ti.level-1, s*)
         enc_scale = s_star * float(params.q_primes[ti.level]) / ti.scale
         assert enc_scale > 256.0, f"enc_scale underflow at T_{i} (scale drift)"
-        pt = ops.encode_const(params, float(c[i]), ti.level, enc_scale, backend)
-        term = ops.mul_plain(params, ti, pt, rescale_after=True, backend=backend)
+        pt = ops._encode_const(ctx, float(c[i]), ti.level, enc_scale)
+        term = ops._mul_plain(ctx, ti, pt, rescale_after=True)
         term = ops.Ciphertext(term.c0, term.c1, term.level, s_star)  # exact
-        term = force_to(params, term, lv_star, s_star, backend)
-        acc = term if acc is None else ops.add(params, acc, term, backend)
+        term = _force_to(ctx, term, lv_star, s_star)
+        acc = term if acc is None else ops._add(ctx, acc, term)
     if acc is None:
-        z = ops.mul_const(params, basis.t[1], 0.0, backend=backend)
-        acc = force_to(params, ops.Ciphertext(z.c0, z.c1, z.level, s_star), lv_star, s_star, backend)
+        z = ops._mul_const(ctx, basis.t[1], 0.0)
+        acc = _force_to(ctx, ops.Ciphertext(z.c0, z.c1, z.level, s_star), lv_star, s_star)
     if abs(c[0]) > 1e-14:
-        acc = ops.add_const(params, acc, float(c[0]), backend)
+        acc = ops._add_const(ctx, acc, float(c[0]))
     return acc
+
+
+# ---------------------------------------------------------------------------
+# deprecated free-function shims
+# ---------------------------------------------------------------------------
+
+
+def _warn_deprecated(name: str, repl: str | None = None) -> None:
+    ops._warn_deprecated(name, repl, module="repro.fhe.polyeval", stacklevel=4)
+
+
+def force_to(params: CkksParams, ct: ops.Ciphertext, level: int, scale: float,
+             backend: str = "auto") -> ops.Ciphertext:
+    _warn_deprecated("force_to")
+    return _force_to(ops._shim_ctx(params, backend), ct, level, scale)
+
+
+def add_any(params: CkksParams, a: ops.Ciphertext, b: ops.Ciphertext,
+            backend: str = "auto") -> ops.Ciphertext:
+    _warn_deprecated("add_any")
+    return _add_any(ops._shim_ctx(params, backend), a, b)
+
+
+def eval_chebyshev(
+    params: CkksParams, basis: ChebyshevBasis, coeffs: np.ndarray, keys: KeySet,
+    backend: str = "auto",
+) -> ops.Ciphertext:
+    _warn_deprecated("eval_chebyshev")
+    return _eval_chebyshev(ops._shim_ctx(params, backend, keys), basis, coeffs)

@@ -20,6 +20,9 @@ import contextvars
 _COUNTS: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
     "kernel_dispatch_counts", default=None
 )
+_HOOKS: contextvars.ContextVar[tuple] = contextvars.ContextVar(
+    "kernel_dispatch_hooks", default=()
+)
 
 
 def record(op: str) -> None:
@@ -27,6 +30,8 @@ def record(op: str) -> None:
     c = _COUNTS.get()
     if c is not None:
         c[op] = c.get(op, 0) + 1
+    for hook in _HOOKS.get():
+        hook(op)
 
 
 @contextlib.contextmanager
@@ -37,6 +42,22 @@ def count_dispatches():
         yield _COUNTS.get()
     finally:
         _COUNTS.reset(token)
+
+
+@contextlib.contextmanager
+def hook_dispatches(fn):
+    """Invoke ``fn(op)`` on every kernel dispatch inside the block.
+
+    Unlike ``count_dispatches`` (one aggregate dict per block), hooks compose:
+    nested blocks stack, and every active hook sees every dispatch.  This is
+    the mechanism behind ``ExecPolicy.dispatch_hook`` — an evaluation context
+    can observe its own kernel-launch stream without owning the call site.
+    """
+    token = _HOOKS.set(_HOOKS.get() + (fn,))
+    try:
+        yield
+    finally:
+        _HOOKS.reset(token)
 
 
 def total(counts: dict) -> int:

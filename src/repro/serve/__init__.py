@@ -28,9 +28,17 @@ Quick use::
                                 n_chips=4, router="jsq")
     print(serve.summarize(fleet))
 
+Service-time execution modes (kernel pipeline, rotation hoisting, numerics)
+are selected with an ``repro.fhe.ExecPolicy`` (re-exported here):
+``serve(..., exec_policy=ExecPolicy(backend="fused", hoisting="always"))``.
+The policy's ``policy_key()`` keys the per-(chip, workload, kind) service
+memo, so distinct modes never alias.
+
 ``repro.core.scheduler.schedule`` is a thin compatibility wrapper over this
 package (``n_chips=`` routes through the cluster).
 """
+
+from repro.fhe.context import ExecPolicy
 
 from . import cluster, events, metrics, policy, traffic
 from .cluster import ClusterConfig, ClusterResult, ClusterRouter, serve_cluster
@@ -44,6 +52,7 @@ from .policy import (
     SequentialPolicy,
     ServeResult,
     ServingEngine,
+    exec_policy_from_hoist,
     job_service_sim,
     serve,
     serve_source,

@@ -56,6 +56,7 @@ import numpy as np
 from repro.core.cache import MB
 from repro.core.hardware import ChipConfig
 from repro.core.jobs import FheJob
+from repro.fhe.context import ExecPolicy
 
 from .events import EventLoop
 from .policy import JobExec, ServeResult, ServingEngine, working_set_bytes
@@ -73,7 +74,10 @@ class ClusterConfig:
     cold_start: bool = True  # model warm-set misses at all?
     cold_factor: float = 2.0  # penalty = factor × working_set_bytes / hbm_B_per_cycle
     warm_capacity_mb: float | None = None  # per-chip warm-set cap; default: chip L2
-    hoist: bool = False  # service-time kernel mode (hoisted rotations) per engine
+    hoist: bool = False  # legacy bool spelling of the hoisted-rotation kernel mode
+    # service-time execution policy per engine; wins over ``hoist`` when set —
+    # its ``policy_key()`` is what keys the per-(chip, workload, kind) memo
+    exec_policy: ExecPolicy | None = None
 
     def __post_init__(self):
         if self.n_chips < 1:
@@ -133,7 +137,8 @@ class ClusterRouter:
         self.chip = chip
         self.config = config
         self.loop = loop if loop is not None else EventLoop()
-        self.engines = [ServingEngine(chip, loop=self.loop, hoist=config.hoist)
+        self.engines = [ServingEngine(chip, loop=self.loop, hoist=config.hoist,
+                                      exec_policy=config.exec_policy)
                         for _ in range(config.n_chips)]
         for i, eng in enumerate(self.engines):
             eng.on_job_complete = functools.partial(self._completed, i)
@@ -231,15 +236,18 @@ def serve_cluster(jobs: list[FheJob], chip: ChipConfig, n_chips: int = 2,
                   router: str = "jsq", seed: int = 0, cold_start: bool = True,
                   cold_factor: float = 2.0, warm_capacity_mb: float | None = None,
                   config: ClusterConfig | None = None,
-                  validate: bool = True, hoist: bool = False) -> ClusterResult:
+                  validate: bool = True, hoist: bool = False,
+                  exec_policy: ExecPolicy | None = None) -> ClusterResult:
     """Serve an open-loop job list on an ``n_chips`` fleet; the one-call API.
 
     Pass ``config=`` to reuse a prepared ``ClusterConfig`` (the keyword
-    arguments are ignored in that case).
+    arguments are ignored in that case); ``exec_policy`` sets the per-engine
+    service-time execution policy (wins over the legacy ``hoist=`` bool).
     """
     cfg = config if config is not None else ClusterConfig(
         n_chips=n_chips, router=router, seed=seed, cold_start=cold_start,
-        cold_factor=cold_factor, warm_capacity_mb=warm_capacity_mb, hoist=hoist)
+        cold_factor=cold_factor, warm_capacity_mb=warm_capacity_mb, hoist=hoist,
+        exec_policy=exec_policy)
     rt = ClusterRouter(chip, cfg)
     for job in jobs:
         rt.submit(job)

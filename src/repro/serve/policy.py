@@ -28,8 +28,10 @@ non-preemptive, highest-priority-then-arrival at each dispatch point.
 
 Per-job service times come from the cycle-level simulator
 (``core.simulator.simulate_stream``) over planner instruction streams, so the
-fused-key-switch accounting composes directly.  Identical (chip, workload,
-kind) jobs share one memoised ``SimResult``.
+fused-key-switch accounting composes directly.  Identical
+(chip, workload, kind, ``ExecPolicy.policy_key()``) jobs share one memoised
+``SimResult`` — the policy key is the canonical identity of the execution
+mode (kernel pipeline, hoisting, numerics).
 """
 
 from __future__ import annotations
@@ -51,6 +53,7 @@ from repro.core.simulator import (
     lanes_whole_chip,
     simulate_stream,
 )
+from repro.fhe.context import ExecPolicy
 
 from .events import Event, EventLoop
 
@@ -145,18 +148,28 @@ def working_set_bytes(job: FheJob) -> float:
 _SERVICE_MEMO: dict[tuple, SimResult] = {}
 
 
-def job_service_sim(job: FheJob, chip: ChipConfig, hoist: bool = False) -> SimResult:
+def exec_policy_from_hoist(hoist: bool) -> ExecPolicy:
+    """The ExecPolicy equivalent of the legacy ``hoist=`` bool: the fused
+    accelerator pipeline, with hoisted vs per-rotation key-switching."""
+    return ExecPolicy(backend="fused", hoisting="always" if hoist else "never")
+
+
+def job_service_sim(job: FheJob, chip: ChipConfig, hoist: bool = False,
+                    policy: ExecPolicy | None = None) -> SimResult:
     """Cycle-accurate service time for one job under its granted lanes.
 
-    Identical (chip, workload, kind, hoist) tuples share one SimResult — the
-    planner stream and lane grant are functions of those alone, so the
-    simulation is too.  ``hoist`` selects the kernel mode the planner expands
-    (per-rotation vs hoisted key-switching) and MUST be part of the memo key:
-    a memo keyed only on (chip, workload, kind) would silently hand
-    post-hoisting callers the pre-hoisting cycle counts.  Callers must treat
-    the result as read-only.
+    Identical (chip, workload, kind, policy_key) tuples share one SimResult —
+    the planner stream and lane grant are functions of those alone, so the
+    simulation is too.  ``ExecPolicy.policy_key()`` is the single source of
+    truth for the execution-mode part of the key: it covers the kernel
+    pipeline, the hoisting mode, and the numerics mode, and distinct policies
+    never alias — a memo keyed only on (chip, workload, kind) would silently
+    hand post-hoisting callers the pre-hoisting cycle counts.  The legacy
+    ``hoist=`` bool maps through ``exec_policy_from_hoist`` when no policy is
+    given.  Callers must treat the result as read-only.
     """
-    key = (chip, job.workload, job.kind, bool(hoist))
+    policy = policy if policy is not None else exec_policy_from_hoist(hoist)
+    key = (chip, job.workload, job.kind, policy.policy_key())
     hit = _SERVICE_MEMO.get(key)
     if hit is not None:
         return hit
@@ -168,7 +181,7 @@ def job_service_sim(job: FheJob, chip: ChipConfig, hoist: bool = False) -> SimRe
         cache_mb = chip.l1_mb_per_aff + chip.l2_mb / chip.n_affiliations
     else:
         lanes, cache_mb = lanes_deep(chip), chip.total_cache_mb
-    stream = workload_stream(job.workload, job.params, mode="hw", hoist=hoist)
+    stream = workload_stream(job.workload, job.params, mode="hw", policy=policy)
     sim = simulate_stream(stream, chip, lanes, cache_bytes=cache_mb * MB)
     _SERVICE_MEMO[key] = sim
     return sim
@@ -509,15 +522,19 @@ class ServingEngine:
     """
 
     def __init__(self, chip: ChipConfig, policy=None, loop: EventLoop | None = None,
-                 hoist: bool = False):
+                 hoist: bool = False, exec_policy: ExecPolicy | None = None):
         self.chip = chip
         self.policy = policy if policy is not None else policy_for(chip)
         # a caller-supplied loop lets N engines share one clock (fleet serving,
         # repro.serve.cluster); by default each engine owns its own
         self.loop = loop if loop is not None else EventLoop()
-        # kernel mode for service-time estimation: hoisted rotations amortise
-        # ModUp across BSGS baby steps, shrinking deep (CtS/StC-heavy) jobs
-        self.hoist = bool(hoist)
+        # execution policy for service-time estimation (kernel pipeline +
+        # hoisting + numerics mode); ``hoist=`` is the legacy bool spelling.
+        # Hoisted rotations amortise ModUp across BSGS baby steps, shrinking
+        # deep (CtS/StC-heavy) jobs.
+        self.exec_policy = (exec_policy if exec_policy is not None
+                            else exec_policy_from_hoist(hoist))
+        self.hoist = self.exec_policy.plan_hoist
         self.jobs: list[JobExec] = []
         self._source = None
         # fleet hook: the cluster router tracks per-chip backlog through this
@@ -528,7 +545,7 @@ class ServingEngine:
         """Queue one job.  ``extra_cycles`` is added to the service demand —
         the cluster router charges warm-set cold starts (KSK/plaintext fetch)
         this way, so work conservation holds penalty-inclusive."""
-        sim = job_service_sim(job, self.chip, hoist=self.hoist)
+        sim = job_service_sim(job, self.chip, policy=self.exec_policy)
         je = JobExec(job=job, service_cycles=sim.cycles + float(extra_cycles), sim=sim,
                      lanes="", cold_start_cycles=float(extra_cycles))
         self.jobs.append(je)
@@ -565,9 +582,13 @@ class ServingEngine:
 
 
 def serve(jobs: list[FheJob], chip: ChipConfig, policy=None, validate: bool = True,
-          hoist: bool = False) -> ServeResult:
-    """Run an open-loop job list through the event engine; the one-call API."""
-    eng = ServingEngine(chip, policy=policy, hoist=hoist)
+          hoist: bool = False, exec_policy: ExecPolicy | None = None) -> ServeResult:
+    """Run an open-loop job list through the event engine; the one-call API.
+
+    ``exec_policy`` selects the service-time kernel mode (an
+    ``repro.fhe.ExecPolicy``); the legacy ``hoist=`` bool is honoured when no
+    policy is given."""
+    eng = ServingEngine(chip, policy=policy, hoist=hoist, exec_policy=exec_policy)
     for job in jobs:
         eng.submit(job)
     result = eng.run()
@@ -575,8 +596,8 @@ def serve(jobs: list[FheJob], chip: ChipConfig, policy=None, validate: bool = Tr
 
 
 def serve_source(source, chip: ChipConfig, policy=None, validate: bool = True,
-                 hoist: bool = False) -> ServeResult:
+                 hoist: bool = False, exec_policy: ExecPolicy | None = None) -> ServeResult:
     """Run a closed-loop traffic source (arrivals depend on completions)."""
-    eng = ServingEngine(chip, policy=policy, hoist=hoist)
+    eng = ServingEngine(chip, policy=policy, hoist=hoist, exec_policy=exec_policy)
     result = eng.run(source=source)
     return result.validate() if validate else result

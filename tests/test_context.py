@@ -1,0 +1,353 @@
+"""FheContext / ExecPolicy: the evaluation-context API.
+
+Three contracts pinned here:
+
+  * **shim parity** — every legacy free function in ``fhe.ops``/``fhe.linear``
+    (and the polyeval/bootstrap entry points) is a thin shim over the SAME
+    context-consuming implementation, so context and legacy results are
+    bit-exact across backend × hoisting combinations (hypothesis-driven);
+  * **policy identity** — ``ExecPolicy.policy_key()`` distinguishes every
+    (backend, hoisting, numerics) combination, excludes the dispatch hook,
+    and is what keys the serving service-time memo (no mode aliasing);
+  * **planning** — ``plan_matrix``/``choose_n1`` pick the baby-step count
+    from the hoisting-aware cost model (n1 = 16 for the radix-32 CtS stage
+    shape the hoisting bench measures, vs the classic √n without hoisting).
+"""
+
+import itertools
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hardware as H
+from repro.core import jobs as J
+from repro.core import planner as PL
+from repro.fhe import keys as K
+from repro.fhe import linear, ops, polyeval
+from repro.fhe import params as P
+from repro.fhe.context import BACKENDS, HOISTING_MODES, NUMERICS_MODES, ExecPolicy, FheContext
+from repro.kernels import dispatch
+from repro.serve import policy as SP
+
+ROTS = (1, 2, 3, 4, 5)
+
+
+def _ct_equal(a, b) -> bool:
+    return bool(jnp.array_equal(a.c0, b.c0)) and bool(jnp.array_equal(a.c1, b.c1))
+
+
+@pytest.fixture(scope="module")
+def cset():
+    p = P.make_params(1 << 9, 5, 2, check_security=False)
+    ks = K.full_keyset(p, seed=0, rotations=ROTS, conjugate=True)
+    ctx = FheContext(params=p, keys=ks)
+    rng = np.random.default_rng(3)
+    za = rng.normal(size=p.slots) * 0.3
+    zb = rng.normal(size=p.slots) * 0.3
+    ct_a = ctx.encrypt(ctx.encode(za))
+    ct_b = ctx.encrypt(ctx.encode(zb), seed=23)
+    return p, ks, ctx, ct_a, ct_b, za, zb
+
+
+def _legacy(fn, *args, **kwargs):
+    """Call a deprecated shim, asserting it actually warns."""
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = fn(*args, **kwargs)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w), fn.__name__
+    return out
+
+
+# ---------------------------------------------------------------------------
+# shim parity: context methods ≡ legacy free functions, bit-exact
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(backend=st.sampled_from(("ref", "fused")),
+       hoisting=st.sampled_from(HOISTING_MODES),
+       r=st.sampled_from(ROTS))
+def test_ops_context_vs_legacy_bitexact(cset, backend, hoisting, r):
+    p, ks, _, ct_a, ct_b, _, _ = cset
+    ctx = FheContext(params=p, keys=ks,
+                     policy=ExecPolicy(backend=backend, hoisting=hoisting))
+    pairs = [
+        (ctx.add(ct_a, ct_b), _legacy(ops.add, p, ct_a, ct_b, backend)),
+        (ctx.sub(ct_a, ct_b), _legacy(ops.sub, p, ct_a, ct_b, backend)),
+        (ctx.negate(ct_a), _legacy(ops.negate, p, ct_a, backend)),
+        (ctx.mul(ct_a, ct_b),
+         _legacy(ops.mul, p, ct_a, ct_b, ks.rlk, backend=backend)),
+        (ctx.square(ct_a), _legacy(ops.square, p, ct_a, ks.rlk, backend=backend)),
+        (ctx.rotate(ct_a, r),
+         _legacy(ops.rotate, p, ct_a, r, ks, backend=backend, hoisting=hoisting)),
+        (ctx.conjugate(ct_a), _legacy(ops.conjugate, p, ct_a, ks, backend)),
+        (ctx.rescale(ct_a), _legacy(ops.rescale, p, ct_a, backend)),
+        (ctx.add_const(ct_a, 0.25), _legacy(ops.add_const, p, ct_a, 0.25, backend)),
+        (ctx.mul_const(ct_a, 0.5), _legacy(ops.mul_const, p, ct_a, 0.5, backend=backend)),
+    ]
+    for got, want in pairs:
+        assert _ct_equal(got, want)
+        assert got.level == want.level and got.scale == want.scale
+
+
+@settings(max_examples=4, deadline=None)
+@given(backend=st.sampled_from(("ref", "fused")),
+       hoisting=st.sampled_from(HOISTING_MODES))
+def test_encode_encrypt_decrypt_parity(cset, backend, hoisting):
+    p, ks, _, _, _, za, _ = cset
+    ctx = FheContext(params=p, keys=ks,
+                     policy=ExecPolicy(backend=backend, hoisting=hoisting))
+    pt = ctx.encode(za)
+    pt_l = _legacy(ops.encode, p, za, backend=backend)
+    assert bool(jnp.array_equal(pt.data, pt_l.data))
+    ct = ctx.encrypt(pt, seed=5)
+    ct_l = _legacy(ops.encrypt, p, ks.pk, pt_l, seed=5, backend=backend)
+    assert _ct_equal(ct, ct_l)
+    got = ctx.decrypt_decode(ct)
+    want = _legacy(ops.decrypt_decode, p, ks.sk, ct_l, backend)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert np.abs(got - za).max() < 1e-3
+
+
+@settings(max_examples=6, deadline=None)
+@given(backend=st.sampled_from(("ref", "fused")),
+       hoisting=st.sampled_from(HOISTING_MODES))
+def test_apply_bsgs_context_vs_legacy_bitexact(cset, backend, hoisting):
+    p, ks, _, ct_a, _, _, _ = cset
+    rng = np.random.default_rng(11)
+    m = np.zeros((p.slots, p.slots))
+    for d in range(4):
+        m[np.arange(p.slots), (np.arange(p.slots) + d) % p.slots] = rng.normal(size=p.slots) * 0.2
+    plan = linear.plan_matrix(m, n1=2, tol=1e-12)
+    assert plan.rotations() <= set(ROTS)  # keys for every needed rotation exist
+    ctx = FheContext(params=p, keys=ks,
+                     policy=ExecPolicy(backend=backend, hoisting=hoisting))
+    got = ctx.apply_bsgs(ct_a, plan)
+    want = _legacy(linear.apply_bsgs, p, ct_a, plan, ks,
+                   backend=backend, hoisting=hoisting)
+    assert _ct_equal(got, want)
+
+
+def test_real_imag_part_parity(cset):
+    p, ks, ctx, ct_a, _, _, _ = cset
+    assert _ct_equal(ctx.real_part(ct_a), _legacy(linear.real_part, p, ct_a, ks))
+    assert _ct_equal(ctx.imag_part(ct_a), _legacy(linear.imag_part, p, ct_a, ks))
+
+
+def test_eval_poly_parity(cset):
+    p, ks, ctx, ct_a, _, _, _ = cset
+    coeffs = np.array([0.1, 0.8, 0.0, -0.2])
+    got = ctx.eval_poly(ct_a, coeffs)
+    basis = polyeval.ChebyshevBasis(p, ct_a, ks, len(coeffs) - 1)
+    want = _legacy(polyeval.eval_chebyshev, p, basis, coeffs, ks)
+    assert _ct_equal(got, want)
+    assert got.scale == want.scale and got.level == want.level
+
+
+def test_force_to_add_any_parity(cset):
+    p, ks, ctx, ct_a, ct_b, _, _ = cset
+    lo = ctx.rescale(ct_a)
+    assert _ct_equal(ctx.force_to(ct_b, lo.level, lo.scale),
+                     _legacy(polyeval.force_to, p, ct_b, lo.level, lo.scale))
+    assert _ct_equal(ctx.add_any(lo, ct_b), _legacy(polyeval.add_any, p, lo, ct_b))
+
+
+def test_hoisting_modes_bitexact_through_context(cset):
+    """All three hoisting modes agree through the context API (group sharing
+    included) — the context must not change the numerics contract."""
+    _, _, ctx, ct_a, _, _, _ = cset
+    base = {r: ctx.with_policy(hoisting="never").rotate(ct_a, r) for r in ROTS}
+    always = ctx.with_policy(hoisting="always")
+    group = always.rotate_hoisted_group(ct_a, ROTS)
+    for r in ROTS:
+        assert _ct_equal(base[r], always.rotate(ct_a, r))
+        assert _ct_equal(base[r], group[r])
+
+
+# ---------------------------------------------------------------------------
+# policy identity: policy_key never aliases
+# ---------------------------------------------------------------------------
+
+
+def test_policy_key_distinguishes_every_combination():
+    keys = set()
+    combos = list(itertools.product(BACKENDS, HOISTING_MODES, NUMERICS_MODES))
+    for backend, hoisting, numerics in combos:
+        keys.add(ExecPolicy(backend=backend, hoisting=hoisting,
+                            numerics=numerics).policy_key())
+    assert len(keys) == len(combos), "policy_key aliases distinct policies"
+
+
+def test_policy_key_excludes_dispatch_hook():
+    a = ExecPolicy(backend="ref")
+    b = ExecPolicy(backend="ref", dispatch_hook=lambda op: None)
+    assert a.policy_key() == b.policy_key()
+    assert a == b  # observation must not change equality either
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        ExecPolicy(backend="vectorized")
+    with pytest.raises(ValueError):
+        ExecPolicy(hoisting="sometimes")
+    with pytest.raises(ValueError):
+        ExecPolicy(numerics="double_hoist")  # future mode: not implemented yet
+
+
+def test_service_memo_keys_on_policy():
+    """Distinct ExecPolicies must occupy distinct service-time memo entries —
+    the serving regression the policy_key contract exists for."""
+    job = J.make_job("lola_mnist_plain")
+    fused_never = SP.job_service_sim(job, H.FLASH_FHE,
+                                     policy=ExecPolicy(backend="fused", hoisting="never"))
+    fused_always = SP.job_service_sim(job, H.FLASH_FHE,
+                                      policy=ExecPolicy(backend="fused", hoisting="always"))
+    staged_never = SP.job_service_sim(job, H.FLASH_FHE,
+                                      policy=ExecPolicy(backend="staged", hoisting="never"))
+    assert fused_never is not fused_always
+    assert fused_never is not staged_never
+    # staged pipeline pays working-set round-trips the fused one doesn't
+    assert staged_never.cycles > fused_never.cycles
+    # legacy bool spelling lands on the same entries (one source of truth)
+    assert SP.job_service_sim(job, H.FLASH_FHE, hoist=False) is fused_never
+    assert SP.job_service_sim(job, H.FLASH_FHE, hoist=True) is fused_always
+    assert SP.exec_policy_from_hoist(True).policy_key() == ("fused", "always", "standard")
+
+
+def test_workload_stream_policy_mirrors_legacy_flags():
+    """workload_stream(policy=) must reproduce the legacy hoist-bool streams
+    (fused pipeline) exactly, and a staged policy must add WS boundaries."""
+    p = P.workload_params("lola_mnist_plain")
+    for hoist in (False, True):
+        legacy = PL.workload_stream("lola_mnist_plain", p, mode="hw", hoist=hoist)
+        policy = PL.workload_stream(
+            "lola_mnist_plain", p, mode="hw",
+            policy=ExecPolicy(backend="fused",
+                              hoisting="always" if hoist else "never"))
+        assert [(i.op, i.n, i.limbs) for i in legacy] == [
+            (i.op, i.n, i.limbs) for i in policy]
+    staged = PL.workload_stream("lola_mnist_plain", p, mode="hw",
+                                policy=ExecPolicy(backend="staged"))
+    fused = PL.workload_stream("lola_mnist_plain", p, mode="hw",
+                               policy=ExecPolicy(backend="fused"))
+    n_ws = lambda s: sum(1 for i in s if i.op == "STORE_WS")
+    assert n_ws(staged) > n_ws(fused)
+
+
+# ---------------------------------------------------------------------------
+# context ergonomics: with_policy, hooks, keys
+# ---------------------------------------------------------------------------
+
+
+def test_with_policy_scoped_override(cset):
+    _, ks, ctx, _, _, _, _ = cset
+    fast = ctx.with_policy(backend="fused", hoisting="always")
+    assert fast.keys is ks and fast.params is ctx.params
+    assert fast.policy.backend == "fused" and ctx.policy.backend == "auto"
+    replaced = ctx.with_policy(policy=ExecPolicy(backend="ref"))
+    assert replaced.policy.backend == "ref"
+    with pytest.raises(TypeError):
+        ctx.with_policy(policy=ExecPolicy(), backend="ref")
+
+
+def test_dispatch_hook_observes_kernel_launches(cset):
+    _, _, ctx, ct_a, ct_b, _, _ = cset
+    seen: list[str] = []
+    hooked = ctx.with_policy(backend="ref", dispatch_hook=seen.append)
+    hooked.add(ct_a, ct_b)
+    assert seen == ["addmod", "addmod"]  # c0 and c1
+    # hooks compose with an enclosing counter instead of replacing it
+    seen.clear()
+    with dispatch.count_dispatches() as counts:
+        hooked.mul(ct_a, ct_b)
+    assert counts and sum(counts.values()) == len(seen)
+
+
+def test_keyless_context_rejects_key_ops(cset):
+    p, _, _, ct_a, _, _, _ = cset
+    bare = FheContext(params=p)
+    with pytest.raises(ValueError, match="KeySet"):
+        bare.rotate(ct_a, 1)
+    with pytest.raises(ValueError, match="KeySet"):
+        bare.mul(ct_a, ct_a)
+    # key-less ops still work
+    assert _ct_equal(bare.add(ct_a, ct_a), bare.add(ct_a, ct_a))
+
+
+# ---------------------------------------------------------------------------
+# hoisting-aware BSGS planning
+# ---------------------------------------------------------------------------
+
+
+def test_choose_n1_shifts_under_hoisting():
+    """The radix-32 CtS stage shape (63 diagonals) at the hoisting bench's
+    parameters: classic balance point n1 = 8 unhoisted, n1 = 16 hoisted —
+    the value the bench used to hand-pick."""
+    p = P.make_params(1 << 14, 3, 3, check_security=False)
+    assert linear.choose_n1(range(63), p, p.L, hoisted=False) == 8
+    assert linear.choose_n1(range(63), p, p.L, hoisted=True) == 16
+    # the hoisted optimum never costs more than the unhoisted plan's split
+    c_h = linear.bsgs_rotation_cost(range(63), 16, p, p.L, hoisted=True)
+    c_u = linear.bsgs_rotation_cost(range(63), 8, p, p.L, hoisted=False)
+    assert c_h < c_u
+
+
+def test_plan_matrix_uses_cost_model_with_params():
+    p = P.make_params(1 << 9, 5, 2, check_security=False)
+    rng = np.random.default_rng(0)
+    m = rng.normal(size=(p.slots, p.slots))
+    classic = linear.plan_matrix(m)
+    assert classic.n1 == 16  # √256, the historical default — unchanged
+    modeled = linear.plan_matrix(m, params=p, hoisting=False)
+    assert modeled.n1 == linear.choose_n1(range(p.slots), p, p.L, hoisted=False)
+    hoisted = linear.plan_matrix(m, params=p, hoisting=True)
+    assert hoisted.n1 >= modeled.n1  # babies get cheaper, never scarcer
+    forced = linear.plan_matrix(m, n1=4, params=p, hoisting=True)
+    assert forced.n1 == 4  # explicit n1 always wins
+
+
+def test_context_plan_matrix_follows_policy(cset):
+    p, _, ctx, ct_a, _, _, _ = cset
+    rng = np.random.default_rng(5)
+    m = np.zeros((p.slots, p.slots))
+    for d in range(6):
+        m[np.arange(p.slots), (np.arange(p.slots) + d) % p.slots] = rng.normal(size=p.slots)
+    plan_h = ctx.with_policy(hoisting="always").plan_matrix(m, tol=1e-12)
+    plan_n = ctx.with_policy(hoisting="never").plan_matrix(m, tol=1e-12)
+    assert plan_h.n1 >= plan_n.n1
+    # both plans compute the same transform
+    got_h = ctx.with_policy(hoisting="always").apply_bsgs(ct_a, plan_h)
+    got_n = ctx.with_policy(hoisting="never").apply_bsgs(ct_a, plan_n)
+    dec_h = ctx.decrypt_decode(got_h)
+    dec_n = ctx.decrypt_decode(got_n)
+    assert np.abs(np.asarray(dec_h) - np.asarray(dec_n)).max() < 1e-3
+
+
+def test_plan_diags_banded():
+    p = P.make_params(1 << 9, 5, 2, check_security=False)
+    diags = {d: np.ones(p.slots, np.complex128) for d in range(7)}
+    plan = linear.plan_diags(diags, p, hoisting=True)
+    assert set(plan.diags) == set(range(7))
+    assert plan.n1 == linear.choose_n1(range(7), p, p.L, hoisted=True)
+
+
+# ---------------------------------------------------------------------------
+# deprecation surface
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_free_functions_warn(cset):
+    p, ks, _, ct_a, ct_b, za, _ = cset
+    with pytest.warns(DeprecationWarning):
+        ops.add(p, ct_a, ct_b)
+    with pytest.warns(DeprecationWarning):
+        ops.encode(p, za)
+    with pytest.warns(DeprecationWarning):
+        ops.rotate(p, ct_a, 1, ks)
+    with pytest.warns(DeprecationWarning):
+        linear.real_part(p, ct_a, ks)
+    with pytest.warns(DeprecationWarning):
+        polyeval.add_any(p, ct_a, ct_b)

@@ -1,21 +1,42 @@
-"""Fleet-serving benchmark: throughput and p99 latency vs chip count (1→8)
-for all four router policies over shallow-only / deep-only / mixed / skewed
-arrival streams.
+"""Fleet-serving benchmark: homogeneous scale-out sweeps (1→8 chips, all
+router policies) plus heterogeneous-fleet and cross-chip-gang scenarios.
 
-Each scenario draws one seeded stream and serves it on FLASH-FHE fleets of
-growing size through ``repro.serve.cluster`` (one shared event loop, per-chip
-warm-sets with HBM-priced cold starts).  Every run re-validates the fleet
-invariants (each job on exactly one chip, per-chip timelines overlap-free,
-work conservation penalty-inclusive).
+Each scenario draws one seeded stream and serves it through
+``repro.serve.cluster`` (one shared event loop, per-chip warm-sets with
+HBM-priced cold starts).  Every run re-validates the fleet invariants (each
+job on exactly one chip — or, for a gang, one fragment per member chip in
+lockstep — per-chip timelines overlap-free, work conservation
+penalty-inclusive).
 
 The ``skewed`` scenario is the router stress test: a mixed background (15%
 deep jobs that gang-block a whole chip for 3–6 Mcycles) plus one bursty
 tenant dumping 16-job shallow bursts — blind round-robin keeps feeding
 blocked chips while join-shortest-queue routes around them.
 
+``hetero_mixed`` serves one shallow-flood-plus-deep stream on a mixed
+2×FLASH-FHE + CraterLake + F1+ fleet and on every 4-chip single-chip-type
+fleet.  Per the paper's framing, the comparison that matters is against the
+*homogeneous-architecture* accelerators (4×CraterLake, 4×F1+): a FLASH-FHE
+die strictly dominates those chips one-on-one (same deep service, 8-wide
+shallow), so an all-FLASH fleet is the upper reference, not the baseline —
+the mixed fleet shows that heterogeneity-aware dispatch recovers most of
+that headroom while only 2 of 4 dies are FLASH.
+
+``deep_gang`` is a lightly loaded mixed fleet receiving a deterministic
+batch of priority-1 deep jobs (one every 7 Mcycles — a bootstrapping batch
+trace): with ``gang_max_chips=2`` each deep job splits across both FLASH
+dies' bootstrappable clusters, paying the inter-chip link (2·syncs·ws·(M-1)/M
+bytes at ``link_bytes_per_cycle``) to finish strictly earlier than any
+single chip could.
+
 Gates (exit non-zero on violation):
   (a) shallow_only: 4-chip jsq fleet throughput ≥ 3× the single chip;
-  (b) skewed: jsq strictly beats round_robin on p99 latency at 4 chips.
+  (b) skewed: jsq strictly beats round_robin on p99 latency at 4 chips;
+  (c) hetero_mixed: the mixed fleet under the hetero router strictly beats
+      the best homogeneous-architecture fleet (4×CraterLake, 4×F1+; best
+      router each) on BOTH p99 latency and makespan;
+  (d) deep_gang: gang_max_chips=2 strictly reduces deep-job p99 vs the same
+      fleet/router with gangs disabled.
 
     PYTHONPATH=src python -m benchmarks.cluster_bench --smoke --out cluster_smoke.csv
     PYTHONPATH=src python -m benchmarks.cluster_bench            # full sweep (1→8 chips)
@@ -28,7 +49,7 @@ import sys
 import time
 
 from repro import serve
-from repro.core.hardware import FLASH_FHE
+from repro.core.hardware import CRATERLAKE, F1PLUS, FLASH_FHE
 from repro.serve.cluster import ROUTERS
 
 THROUGHPUT_GATE_X = 3.0  # 4-chip fleet must deliver ≥ this × single-chip throughput
@@ -67,23 +88,92 @@ def chip_counts(smoke: bool) -> tuple[int, ...]:
     return (1, 2, 4) if smoke else (1, 2, 4, 8)
 
 
+def hetero_fleets() -> dict[str, list]:
+    """4-chip fleets for the heterogeneity scenarios.  ``mixed`` pairs two
+    FLASH-FHE dies (swift-heavy, 8-wide shallow, gang-capable) with one
+    CraterLake and one F1+ (single-job homogeneous-architecture chips)."""
+    return {
+        "mixed": [FLASH_FHE, FLASH_FHE, CRATERLAKE, F1PLUS],
+        "flash": [FLASH_FHE] * 4,
+        "craterlake": [CRATERLAKE] * 4,
+        "f1plus": [F1PLUS] * 4,
+    }
+
+
+def hetero_stream(smoke: bool) -> list:
+    """Shallow flood (priority 0, ~60 jobs/Mcycle ≈ 1.2 FLASH dies' worth)
+    merged with a sparse priority-1 deep stream.  The flood saturates the
+    1-wide chips outright, so fleet p99/makespan hinge on how much of it the
+    router keeps on the multi-affiliation dies."""
+    scale = 1 if smoke else 2
+    shallow = serve.poisson_jobs(serve.PoissonConfig(
+        rate_per_mcycle=60.0, n_jobs=600 * scale, mix=serve.traffic.SHALLOW_MIX,
+        priority_mix={0: 1.0}, seed=21))
+    deep = serve.poisson_jobs(serve.PoissonConfig(
+        rate_per_mcycle=0.4, n_jobs=4 * scale, mix=serve.traffic.DEEP_MIX,
+        priority_mix={1: 1.0}, seed=22, start_id=100_000))
+    return sorted(shallow + deep, key=lambda j: j.arrival_cycle)
+
+
+def gang_stream() -> list:
+    """Light shallow background plus a deterministic bootstrapping batch:
+    six priority-1 deep jobs, one every 7 Mcycles (wider than any gang's
+    service time, so each job's gang-vs-single choice is isolated)."""
+    background = serve.poisson_jobs(serve.PoissonConfig(
+        rate_per_mcycle=8.0, n_jobs=120, mix=serve.traffic.SHALLOW_MIX,
+        priority_mix={0: 1.0}, seed=31))
+    workloads = ("lstm", "logreg")
+    batch = serve.trace_jobs([
+        {"workload": workloads[k % 2], "arrival_cycle": 2_000_000 + 7_000_000 * k,
+         "priority": 1, "job_id": 100_000 + k}
+        for k in range(6)])
+    return sorted(background + batch, key=lambda j: j.arrival_cycle)
+
+
 def run(smoke: bool = True) -> list[dict]:
     rows = []
     for scen, jobs in scenarios(smoke).items():
         for router in ROUTERS:
             for n in chip_counts(smoke):
-                t0 = time.perf_counter()
-                result = serve.serve_cluster(jobs, FLASH_FHE, n_chips=n,
-                                             router=router, validate=True)
-                m = serve.summarize(result)
-                rows.append({"scenario": scen, "router": router, "n_chips": n,
-                             "sim_wall_s": round(time.perf_counter() - t0, 3), **m})
+                rows.append(_fleet_row(scen, jobs, "flash", router, 1,
+                                       chip=FLASH_FHE, n_chips=n))
+    stream = hetero_stream(smoke)
+    fleets = hetero_fleets()
+    for fleet, chips in fleets.items():
+        for router in ("jsq", "hetero"):
+            rows.append(_fleet_row("hetero_mixed", stream, fleet, router, 1,
+                                   chips=chips))
+    gang_jobs = gang_stream()
+    for gang in (1, 2):
+        rows.append(_fleet_row("deep_gang", gang_jobs, "mixed", "hetero", gang,
+                               chips=fleets["mixed"]))
     return rows
+
+
+def _fleet_row(scen: str, jobs: list, fleet: str, router: str, gang: int,
+               chip=None, n_chips: int = 0, chips=None) -> dict:
+    t0 = time.perf_counter()
+    if chips is not None:
+        result = serve.serve_cluster(jobs, chips=chips, router=router,
+                                     gang_max_chips=gang, validate=True)
+    else:
+        result = serve.serve_cluster(jobs, chip, n_chips=n_chips, router=router,
+                                     validate=True)
+    m = serve.summarize(result)
+    return {"scenario": scen, "router": router, "fleet": fleet, "gang": gang,
+            "n_chips": n_chips if chips is None else len(chips),
+            "sim_wall_s": round(time.perf_counter() - t0, 3), **m}
 
 
 def _row(rows: list[dict], scen: str, router: str, n: int) -> dict:
     return next(r for r in rows
                 if r["scenario"] == scen and r["router"] == router and r["n_chips"] == n)
+
+
+def _hrow(rows: list[dict], scen: str, fleet: str, router: str, gang: int = 1) -> dict:
+    return next(r for r in rows
+                if r["scenario"] == scen and r["fleet"] == fleet
+                and r["router"] == router and r["gang"] == gang)
 
 
 def check_gates(rows: list[dict]) -> list[str]:
@@ -103,6 +193,40 @@ def check_gates(rows: list[dict]) -> list[str]:
         failures.append(
             f"skewed: jsq p99 {jsq['latency_p99_cycles']:.4g} not < "
             f"round_robin p99 {rr['latency_p99_cycles']:.4g} at 4 chips")
+    failures += check_hetero_gates(rows)
+    return failures
+
+
+def check_hetero_gates(rows: list[dict]) -> list[str]:
+    """Gates (c) and (d): heterogeneous fleet and cross-chip gang wins.
+
+    Gate (c) compares the mixed fleet against the *homogeneous-architecture*
+    fleets (4×CraterLake, 4×F1+), each at its best router — NOT against
+    4×FLASH-FHE, which dominates every chip one-on-one and is reported as the
+    upper reference instead (see the module docstring)."""
+    failures = []
+    mixed = _hrow(rows, "hetero_mixed", "mixed", "hetero")
+    for fleet in ("craterlake", "f1plus"):
+        cand = [r for r in rows
+                if r["scenario"] == "hetero_mixed" and r["fleet"] == fleet]
+        best_p99 = min(r["latency_p99_cycles"] for r in cand)
+        best_mk = min(r["makespan_mcycles"] for r in cand)
+        if not mixed["latency_p99_cycles"] < best_p99:
+            failures.append(
+                f"hetero_mixed: mixed/hetero p99 {mixed['latency_p99_cycles']:.4g} "
+                f"not < 4×{fleet} best p99 {best_p99:.4g}")
+        if not mixed["makespan_mcycles"] < best_mk:
+            failures.append(
+                f"hetero_mixed: mixed/hetero makespan {mixed['makespan_mcycles']:.4g}M "
+                f"not < 4×{fleet} best makespan {best_mk:.4g}M")
+    solo = _hrow(rows, "deep_gang", "mixed", "hetero", gang=1)
+    ganged = _hrow(rows, "deep_gang", "mixed", "hetero", gang=2)
+    if not ganged["latency_p99_deep_cycles"] < solo["latency_p99_deep_cycles"]:
+        failures.append(
+            f"deep_gang: gang=2 deep p99 {ganged['latency_p99_deep_cycles']:.4g} "
+            f"not < gang=1 deep p99 {solo['latency_p99_deep_cycles']:.4g}")
+    if not ganged["n_gang_jobs"] > 0:
+        failures.append("deep_gang: gang=2 run committed zero gangs")
     return failures
 
 
@@ -122,12 +246,14 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     rows = run(smoke=args.smoke)
-    print(f"{'scenario':13s} {'router':12s} {'chips':>5s} {'thr/Mcyc':>9s} {'p99':>10s} "
-          f"{'queue p99':>11s} {'makespan':>10s} {'imbal':>6s} {'cold':>5s}")
+    print(f"{'scenario':13s} {'fleet':11s} {'router':12s} {'chips':>5s} {'gang':>4s} "
+          f"{'thr/Mcyc':>9s} {'p99':>10s} {'deep p99':>10s} {'makespan':>10s} "
+          f"{'imbal':>6s} {'cold':>5s}")
     for r in rows:
-        print(f"{r['scenario']:13s} {r['router']:12s} {int(r['n_chips']):5d} "
+        print(f"{r['scenario']:13s} {r['fleet']:11s} {r['router']:12s} "
+              f"{int(r['n_chips']):5d} {int(r['gang']):4d} "
               f"{r['throughput_jobs_per_mcycle']:9.1f} {r['latency_p99_cycles']/1e6:9.2f}M "
-              f"{r['queue_p99_cycles']/1e6:10.2f}M {r['makespan_mcycles']:9.2f}M "
+              f"{r['latency_p99_deep_cycles']/1e6:9.2f}M {r['makespan_mcycles']:9.2f}M "
               f"{r['chip_util_imbalance']:6.3f} {int(r['n_cold_starts']):5d}")
 
     one = _row(rows, "shallow_only", "jsq", 1)
@@ -139,14 +265,29 @@ def main(argv=None) -> int:
     print(f"[cluster] skewed @4 chips: p99 jsq {jsq['latency_p99_cycles']/1e6:.2f}M vs "
           f"round_robin {rr['latency_p99_cycles']/1e6:.2f}M "
           f"({rr['latency_p99_cycles']/jsq['latency_p99_cycles']:.2f}× better)")
+    mixed = _hrow(rows, "hetero_mixed", "mixed", "hetero")
+    cl = _hrow(rows, "hetero_mixed", "craterlake", "jsq")
+    flash = _hrow(rows, "hetero_mixed", "flash", "jsq")
+    print(f"[cluster] hetero_mixed @4 chips: mixed/hetero p99 "
+          f"{mixed['latency_p99_cycles']/1e6:.2f}M mk {mixed['makespan_mcycles']:.2f}M "
+          f"vs 4×craterlake/jsq p99 {cl['latency_p99_cycles']/1e6:.2f}M mk "
+          f"{cl['makespan_mcycles']:.2f}M (all-FLASH reference: p99 "
+          f"{flash['latency_p99_cycles']/1e6:.2f}M mk {flash['makespan_mcycles']:.2f}M)")
+    solo = _hrow(rows, "deep_gang", "mixed", "hetero", gang=1)
+    ganged = _hrow(rows, "deep_gang", "mixed", "hetero", gang=2)
+    print(f"[cluster] deep_gang: gang=2 deep p99 "
+          f"{ganged['latency_p99_deep_cycles']/1e6:.2f}M vs gang=1 "
+          f"{solo['latency_p99_deep_cycles']/1e6:.2f}M "
+          f"({int(ganged['n_gang_jobs'])} gangs, "
+          f"{ganged['gang_link_bytes']/1e6:.0f} MB over the inter-chip link)")
 
     failures = check_gates(rows)
     if failures:
         for f in failures:
             print(f"[cluster] GATE VIOLATED — {f}", file=sys.stderr)
     else:
-        print("[cluster] scale-out gates passed; fleet timelines validated "
-              "(unique placement, no overlap, work conservation)")
+        print("[cluster] scale-out + hetero + gang gates passed; fleet timelines "
+              "validated (unique placement, no overlap, work conservation)")
     if args.out:
         write_csv(rows, args.out)
         print(f"[cluster] wrote {len(rows)} rows to {args.out}")

@@ -3,8 +3,9 @@
 Emits ``name,value,derived`` CSV rows (derived=1 marks numbers reconstructed
 from the paper's reported ratios rather than simulated from architecture).
 
-  python -m benchmarks.run                 # full paper-figure suite + fused-KS bench
-  python -m benchmarks.run --smoke         # fast fused-vs-staged key-switch smoke
+  python -m benchmarks.run                 # full paper-figure suite + all benches
+  python -m benchmarks.run --smoke         # fast CI pass: fused-KS + hoisting row
+                                           #   + fleet scale-out/hetero/gang smoke
   python -m benchmarks.run --out FILE.csv  # also write the rows to FILE.csv
 """
 
@@ -84,18 +85,21 @@ def emit_serving(emit, smoke: bool) -> None:
 
 
 def emit_cluster(emit, smoke: bool) -> None:
-    """Fleet scale-out: throughput/p99 per (scenario, router, chips) + gates."""
+    """Fleet scale-out + heterogeneous/gang scenarios: throughput/p99 per
+    (scenario, fleet, router, chips, gang) row, plus the four gates."""
     from . import cluster_bench
 
     rows = cluster_bench.run(smoke=smoke)
     for r in rows:
-        prefix = f"cluster.{r['scenario']}.{r['router']}.chips{int(r['n_chips'])}"
-        for key in ("latency_p99_cycles", "queue_p99_cycles", "makespan_mcycles",
+        prefix = (f"cluster.{r['scenario']}.{r['fleet']}.{r['router']}"
+                  f".chips{int(r['n_chips'])}.gang{int(r['gang'])}")
+        for key in ("latency_p99_cycles", "latency_p99_deep_cycles",
+                    "queue_p99_cycles", "makespan_mcycles",
                     "throughput_jobs_per_mcycle", "chip_util_imbalance",
-                    "fairness_jain_chips", "n_cold_starts"):
+                    "fairness_jain_chips", "n_cold_starts", "n_gang_jobs"):
             emit(f"{prefix}.{key}", r[key])
     failures = cluster_bench.check_gates(rows)
-    emit("cluster.gates_scaleout_and_jsq", int(not failures))
+    emit("cluster.gates_scaleout_hetero_gang", int(not failures))
 
 
 def emit_paper_figs(emit) -> None:
@@ -163,7 +167,8 @@ def main(argv=None) -> None:
                     help="fast CI pass: fused-vs-staged key-switch (small ring) "
                          "+ a small hoisted-rotation group row (the N=2^14 "
                          "CtS-stage GATES run only in benchmarks.hoisting_bench) "
-                         "+ fleet scale-out smoke")
+                         "+ fleet scale-out/hetero/gang smoke (all four cluster "
+                         "gates enforced)")
     ap.add_argument("--out", default=None, help="also write CSV rows to this file")
     ap.add_argument("--iters", type=int, default=3, help="timing iterations per config")
     args = ap.parse_args(argv)

@@ -45,27 +45,33 @@ class ScheduledJob:
         return self.end_cycle - self.job.arrival_cycle
 
 
-def schedule(jobs: list[FheJob], chip: ChipConfig, n_chips: int = 1,
-             router: str = "jsq", exec_policy=None) -> list[ScheduledJob]:
+def schedule(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: int = 1,
+             router: str = "jsq", exec_policy=None, chips=None,
+             gang_max_chips: int = 1) -> list[ScheduledJob]:
     """Run ``jobs`` through the event-driven serving engine; returns per-job
     placement and completion in submission order.  Timeline consistency
     (no overlapping placements, work conservation) is asserted on every call.
 
     ``n_chips > 1`` shards the stream across a fleet of identical chips via
-    ``repro.serve.cluster`` (dispatch policy = ``router``); each returned
-    ``ScheduledJob.chip_index`` names the chip that ran it.  ``exec_policy``
-    (an ``repro.fhe.ExecPolicy``) selects the service-time kernel mode.
+    ``repro.serve.cluster`` (dispatch policy = ``router``); ``chips=`` a
+    per-chip list of ``ChipConfig`` / ``(ChipConfig, ExecPolicy)`` entries
+    builds a heterogeneous fleet instead, and ``gang_max_chips > 1`` lets
+    deep jobs gang-split across identical chips.  Each returned
+    ``ScheduledJob.chip_index`` names the (primary) chip that ran it.
+    ``exec_policy`` (an ``repro.fhe.ExecPolicy``) selects the service-time
+    kernel mode.
     """
     # deferred import: repro.core.__init__ imports this module, and the serve
     # package imports repro.core submodules — a top-level import would cycle
     from repro.serve.cluster import serve_cluster
     from repro.serve.policy import serve
 
-    if n_chips <= 1:
+    if chips is None and n_chips <= 1:
         jes = serve(jobs, chip, validate=True, exec_policy=exec_policy).jobs
     else:
         jes = serve_cluster(jobs, chip, n_chips=n_chips, router=router, validate=True,
-                            exec_policy=exec_policy).jobs
+                            exec_policy=exec_policy, chips=chips,
+                            gang_max_chips=gang_max_chips).jobs
     return [
         ScheduledJob(
             job=je.job,

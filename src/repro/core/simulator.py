@@ -154,6 +154,13 @@ def simulate_stream(
         # clusters beyond one affiliation doesn't help a shallow job, and why
         # FLASH-FHE schedules one shallow job per affiliation instead.
         eff = max(256, n // 16)
+        if lanes.coop_transpose:
+            # The four-step distribution limit assumes clusters exchange NTT
+            # tiles point-to-point; coop mode routes every (i)NTT through the
+            # L3 transpose module instead, which re-distributes tiles to any
+            # lane — so the grant is not eff-capped, and the cost shows up as
+            # the explicit ``transpose`` unit charge below.
+            eff = n
         ntt_l = min(lanes.ntt_lanes, eff)
         mm_l = min(lanes.modmul_lanes, eff)
         if ins.op in ("NTT", "INTT"):

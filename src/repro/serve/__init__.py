@@ -4,28 +4,34 @@ The online realisation of the paper's §4.2 scheduling policy:
 
   events   — generic event heap / clock / run loop (the DES kernel)
   policy   — FlashPolicy (shallow-per-affiliation + deep gang + priority
-             preemption with spill/restore) and the sequential baseline,
-             plus the ServingEngine and timeline-validated ServeResult
+             preemption with spill/restore, optional ``deep_coop`` swift-lane
+             sharing) and the sequential baseline, plus the ServingEngine,
+             the timeline-validated ServeResult, and the cross-chip
+             GangReservation barrier
   cluster  — multi-chip scale-out: a DES front-end router sharding one
-             arrival stream over N engines in one shared loop (round-robin /
-             join-shortest-queue / power-of-two / workload-affinity, with a
-             per-chip warm-set cold-start model)
+             arrival stream over a homogeneous OR heterogeneous fleet in one
+             shared loop (round-robin / join-shortest-queue / power-of-two /
+             workload-affinity / hetero routing, a per-chip warm-set
+             cold-start model, and cross-chip deep gangs with an explicit
+             inter-chip link cost)
   traffic  — seeded Poisson / sharded / bursty / trace-replay / closed-loop
              tenant sources (multi-source RNGs via SeedSequence.spawn)
-  metrics  — SLO summary: latency & queueing percentiles, throughput,
-             utilization (+ per-chip imbalance), fairness, starvation
+  metrics  — SLO summary: latency & queueing percentiles (overall and
+             per-kind), throughput, utilization (+ per-chip and per-chip-type
+             views), fairness, starvation, gang/link totals
 
 Quick use::
 
-    from repro.core.hardware import FLASH_FHE
+    from repro.core.hardware import CRATERLAKE, F1PLUS, FLASH_FHE
     from repro import serve
 
     cfg = serve.traffic.PoissonConfig(rate_per_mcycle=4.0, n_jobs=64, seed=7)
     result = serve.serve(serve.traffic.poisson_jobs(cfg), FLASH_FHE)
     print(serve.metrics.summarize(result))
 
-    fleet = serve.serve_cluster(serve.traffic.poisson_jobs(cfg), FLASH_FHE,
-                                n_chips=4, router="jsq")
+    fleet = serve.serve_cluster(serve.traffic.poisson_jobs(cfg),
+                                chips=[FLASH_FHE, FLASH_FHE, CRATERLAKE, F1PLUS],
+                                router="hetero", gang_max_chips=2)
     print(serve.summarize(fleet))
 
 Service-time execution modes (kernel pipeline, rotation hoisting, numerics)
@@ -43,9 +49,15 @@ from repro.fhe.context import ExecPolicy
 from . import cluster, events, metrics, policy, traffic
 from .cluster import ClusterConfig, ClusterResult, ClusterRouter, serve_cluster
 from .events import Event, EventLoop
-from .metrics import max_queueing_by_kind, summarize, summarize_cluster
+from .metrics import (
+    max_queueing_by_kind,
+    per_chip_type_utilization,
+    summarize,
+    summarize_cluster,
+)
 from .policy import (
     FlashPolicy,
+    GangReservation,
     JobExec,
     JobState,
     Segment,
@@ -53,6 +65,8 @@ from .policy import (
     ServeResult,
     ServingEngine,
     exec_policy_from_hoist,
+    gang_link_bytes,
+    gang_service_cycles,
     job_service_sim,
     serve,
     serve_source,

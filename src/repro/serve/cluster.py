@@ -1,13 +1,20 @@
-"""Multi-chip serving scale-out: a DES front-end router over N FLASH-FHE chips.
+"""Multi-chip serving scale-out: a DES front-end router over a (possibly
+heterogeneous) fleet of FHE accelerator chips.
 
 One FLASH-FHE die saturates quickly under shallow-heavy Poisson streams (8
 affiliations × ~0.15 Mcycle shallow services ≈ 50 jobs/Mcycle); the ROADMAP's
 "millions of users" north star is a fleet problem.  This module shards a
-single arrival stream across ``n_chips`` per-chip ``ServingEngine``s that all
-tick inside ONE shared ``EventLoop`` — the router is itself a discrete-event
-component: each arrival fires a routing event, the chosen engine schedules the
-job, and completions flow back through the engine's ``on_job_complete`` hook
-to keep the router's backlog estimates exact.
+single arrival stream across per-chip ``ServingEngine``s that all tick inside
+ONE shared ``EventLoop`` — the router is itself a discrete-event component:
+each arrival fires a routing event, the chosen engine schedules the job, and
+completions flow back through the engine's ``on_job_complete`` hook to keep
+the router's backlog estimates exact.
+
+Fleet shape: homogeneous (``n_chips`` copies of one ``ChipConfig``) or
+heterogeneous — ``ClusterConfig.chips`` takes a per-chip list of
+``(ChipConfig, ExecPolicy)`` pairs, so a fleet can mix FLASH-FHE, CraterLake
+and F1+ dies with different kernel/hoisting modes per chip (service-time
+memoisation keys on ``ExecPolicy.policy_key()``, so mixed modes never alias).
 
 Dispatch policies (``ClusterConfig.router``):
 
@@ -25,24 +32,44 @@ Dispatch policies (``ClusterConfig.router``):
                  (``working_set_bytes / hbm_bytes_per_cycle × cold_factor``)
                  into a chip whose warm-set doesn't hold it.  With penalties
                  zeroed this degrades to jsq exactly.
+  hetero       — heterogeneity-aware: minimise ``backlog + THIS chip's
+                 service time for THIS job + cold penalty``.  On a mixed
+                 fleet this is what routes deep jobs toward big-cache
+                 bootstrappable-heavy chips and shallow floods toward
+                 multi-affiliation chips; on a homogeneous fleet it degrades
+                 to ``affinity``.
 
-Warm-set model: every chip keeps an LRU of workload working sets capped at its
-shared-L2 capacity (configurable).  ALL policies pay the cold-start penalty on
-a warm-set miss — residency is a property of the chip, not of the router —
-but only ``affinity`` *steers around* it.  The penalty is charged into the
-job's service demand (``ServingEngine.submit(extra_cycles=...)``) so the
+Cross-chip deep gangs (``ClusterConfig.gang_max_chips > 1``): a deep job may
+split across up to M identical FlashPolicy chips' bootstrappable clusters.
+Per-chip compute shards M ways, and each fragment additionally stalls through
+the serialized inter-chip link exchanges (``policy.gang_service_cycles``;
+bandwidth ``ClusterConfig.link_bytes_per_cycle``, priced ≫ the on-chip L3
+transpose).  The planner compares the best gang's estimated completion
+(barrier wait = the most-backlogged member, plus the per-chip gang demand)
+against the best single-chip placement and only commits a multi-chip
+``GangReservation`` when the gang strictly wins — queueing delay is weighed
+against split speedup at routing time.  Gang fragments skip the warm-set
+model (the gang streams its state through the link, not the per-chip LRU).
+
+Warm-set model: every chip keeps an LRU of workload working sets capped at
+its shared-L2 capacity (configurable).  ALL policies pay the cold-start
+penalty on a warm-set miss — residency is a property of the chip, not of the
+router — but only ``affinity``/``hetero`` *steer around* it.  The penalty is
+charged into the job's service demand (``ServingEngine.submit``) so the
 per-chip timeline invariants (work conservation, no overlap) hold
 penalty-inclusive and ``ClusterResult.validate`` can re-assert them.
 
 Quick use::
 
-    from repro.core.hardware import FLASH_FHE
+    from repro.core.hardware import CRATERLAKE, F1PLUS, FLASH_FHE
     from repro import serve
 
     jobs = serve.poisson_jobs(serve.PoissonConfig(rate_per_mcycle=200.0,
                                                   n_jobs=320, seed=7))
-    result = serve.serve_cluster(jobs, FLASH_FHE, n_chips=4, router="jsq")
-    print(serve.summarize(result))          # fleet-level SLOs
+    mixed = serve.serve_cluster(
+        jobs, chips=[FLASH_FHE, FLASH_FHE, CRATERLAKE, F1PLUS],
+        router="hetero", gang_max_chips=2)
+    print(serve.summarize(mixed))           # fleet-level SLOs
 """
 
 from __future__ import annotations
@@ -59,16 +86,26 @@ from repro.core.jobs import FheJob
 from repro.fhe.context import ExecPolicy
 
 from .events import EventLoop
-from .policy import JobExec, ServeResult, ServingEngine, working_set_bytes
+from .policy import (
+    GANG_SYNCS,
+    FlashPolicy,
+    GangReservation,
+    JobExec,
+    ServeResult,
+    ServingEngine,
+    gang_link_bytes,
+    gang_service_cycles,
+    working_set_bytes,
+)
 
-ROUTERS = ("round_robin", "jsq", "po2", "affinity")
+ROUTERS = ("round_robin", "jsq", "po2", "affinity", "hetero")
 
 
 @dataclasses.dataclass(frozen=True)
 class ClusterConfig:
-    """Fleet shape + router policy + warm-set/cold-start model."""
+    """Fleet shape + router policy + warm-set/cold-start + gang model."""
 
-    n_chips: int
+    n_chips: int = 0  # 0 = derive from ``chips`` (one of the two is required)
     router: str = "jsq"
     seed: int = 0  # router-local RNG (po2 sampling) — split off via SeedSequence
     cold_start: bool = True  # model warm-set misses at all?
@@ -78,27 +115,80 @@ class ClusterConfig:
     # service-time execution policy per engine; wins over ``hoist`` when set —
     # its ``policy_key()`` is what keys the per-(chip, workload, kind) memo
     exec_policy: ExecPolicy | None = None
+    # heterogeneous fleet: one (ChipConfig, ExecPolicy | None) pair per chip
+    # (bare ChipConfig entries are accepted; ``exec_policy`` fills the gaps).
+    # ``None`` = homogeneous fleet of ``n_chips`` × the serve_cluster chip.
+    chips: tuple | None = None
+    # cross-chip deep gangs: a deep job may split across up to this many
+    # identical FlashPolicy chips (1 = gangs off)
+    gang_max_chips: int = 1
+    # inter-chip link bandwidth the gang exchanges are serialized through.
+    # 256 B/cycle = 4× slower than one chip's HBM (1024 B/cycle) and 32×
+    # slower than the 2048-port on-chip L3 transpose — crossing the package
+    # boundary is deliberately expensive
+    link_bytes_per_cycle: float = 256.0
+    gang_syncs: int = GANG_SYNCS  # global barriers per ganged deep job
 
     def __post_init__(self):
+        if self.chips is not None:
+            norm = []
+            for entry in self.chips:
+                if isinstance(entry, ChipConfig):
+                    norm.append((entry, self.exec_policy))
+                else:
+                    c, p = entry
+                    norm.append((c, p if p is not None else self.exec_policy))
+            object.__setattr__(self, "chips", tuple(norm))
+            if self.n_chips == 0:
+                object.__setattr__(self, "n_chips", len(norm))
+            elif self.n_chips != len(norm):
+                raise ValueError(
+                    f"n_chips={self.n_chips} disagrees with len(chips)={len(norm)}")
         if self.n_chips < 1:
             raise ValueError(f"n_chips must be >= 1, got {self.n_chips}")
         if self.router not in ROUTERS:
             raise ValueError(f"unknown router {self.router!r}; choose from {ROUTERS}")
+        if self.gang_max_chips < 1:
+            raise ValueError(f"gang_max_chips must be >= 1, got {self.gang_max_chips}")
+        if self.link_bytes_per_cycle <= 0:
+            raise ValueError("link_bytes_per_cycle must be positive")
+        if self.gang_syncs < 0:
+            raise ValueError("gang_syncs must be >= 0")
+
+    def chip_pairs(self, default_chip: ChipConfig | None = None) -> tuple:
+        """The fleet as (ChipConfig, ExecPolicy | None) pairs, one per chip."""
+        if self.chips is not None:
+            return self.chips
+        if default_chip is None:
+            raise ValueError("homogeneous ClusterConfig needs a default chip")
+        return tuple((default_chip, self.exec_policy) for _ in range(self.n_chips))
 
 
 @dataclasses.dataclass
 class ClusterResult:
-    """Per-chip timelines + the merged fleet view."""
+    """Per-chip timelines + the merged fleet view.
 
-    chip: ChipConfig
+    ``jobs`` holds one ``JobExec`` per routed job in submission order; for a
+    ganged deep job that is its rank-0 (primary) fragment — the other
+    fragments live only in their chips' ``chip_results`` timelines, and
+    ``gangs`` maps the job id to the full member-chip tuple.
+    """
+
+    chip: ChipConfig  # primary/default chip (chips[0] on heterogeneous fleets)
     config: ClusterConfig
     chip_results: list[ServeResult]  # NB: each carries the SHARED loop's event
     # total in events_processed (per-chip attribution is not meaningful when
     # one clock drives every engine); the fleet-wide count lives below
     jobs: list[JobExec]  # submission order (matching ``serve.serve`` semantics)
-    placements: dict[int, int]  # job_id -> chip index
+    placements: dict[int, int]  # job_id -> chip index (primary member for gangs)
     makespan: float
     events_processed: int
+    chips: list[ChipConfig] = dataclasses.field(default_factory=list)  # per-chip
+    gangs: dict[int, tuple[int, ...]] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.chips:
+            self.chips = [self.chip] * self.config.n_chips
 
     @property
     def n_chips(self) -> int:
@@ -106,24 +196,52 @@ class ClusterResult:
 
     def validate(self) -> "ClusterResult":
         """Fleet invariants on top of each chip's own ``ServeResult.validate``:
-        every submitted job completed on EXACTLY one chip, the recorded
-        placements match the per-chip timelines, and the fleet makespan is the
-        max over chips."""
+        every non-gang job completed on EXACTLY one chip; every gang job ran
+        EXACTLY once on each reserved member chip (never double-booked, never
+        anywhere else) with its fragments finishing in lockstep; the recorded
+        placements match the per-chip timelines; and the fleet makespan is
+        the max over chips."""
         for r in self.chip_results:
             r.validate()
-        seen: dict[int, int] = {}
+        on_chips: dict[int, list[int]] = {}
+        frags: dict[int, list[JobExec]] = {}
         for i, r in enumerate(self.chip_results):
             for je in r.jobs:
-                assert je.job.job_id not in seen, (
-                    f"job {je.job.job_id} appears on chips {seen[je.job.job_id]} and {i}"
+                jid = je.job.job_id
+                assert i not in on_chips.get(jid, ()), (
+                    f"job {jid} double-booked on chip {i}"
                 )
                 assert je.chip_index == i, (
-                    f"job {je.job.job_id} tagged chip {je.chip_index}, found on chip {i}"
+                    f"job {jid} tagged chip {je.chip_index}, found on chip {i}"
                 )
-                seen[je.job.job_id] = i
-        assert seen == self.placements, "router placements disagree with chip timelines"
-        assert len(self.jobs) == len(seen), (
-            f"{len(self.jobs)} jobs routed, {len(seen)} found on chips"
+                on_chips.setdefault(jid, []).append(i)
+                frags.setdefault(jid, []).append(je)
+        for jid, used in on_chips.items():
+            members = self.gangs.get(jid)
+            if members is None:
+                assert len(used) == 1, f"non-gang job {jid} ran on chips {used}"
+                assert self.placements[jid] == used[0], (
+                    f"job {jid} placed on chip {self.placements[jid]}, ran on {used[0]}"
+                )
+                continue
+            assert len(set(members)) == len(members), (
+                f"gang {jid} reserves chip(s) twice: {members}"
+            )
+            assert sorted(used) == sorted(members), (
+                f"gang job {jid} ran on chips {used}, reserved {members}"
+            )
+            assert self.placements[jid] == members[0]
+            fs = frags[jid]
+            assert all(f.gang_size == len(members) for f in fs)
+            comps = [f.completion for f in fs]
+            assert max(comps) - min(comps) <= 1e-6 * max(1.0, max(comps)), (
+                f"gang job {jid} fragments finished out of lockstep: {comps}"
+            )
+        assert set(on_chips) == set(self.placements), (
+            "router placements disagree with chip timelines"
+        )
+        assert len(self.jobs) == len(on_chips), (
+            f"{len(self.jobs)} jobs routed, {len(on_chips)} found on chips"
         )
         per_chip_mk = max((r.makespan for r in self.chip_results), default=0.0)
         assert abs(self.makespan - per_chip_mk) <= 1e-6 * max(1.0, per_chip_mk)
@@ -133,13 +251,16 @@ class ClusterResult:
 class ClusterRouter:
     """Front-end DES router: shards one arrival stream over N engines."""
 
-    def __init__(self, chip: ChipConfig, config: ClusterConfig, loop: EventLoop | None = None):
-        self.chip = chip
+    def __init__(self, chip: ChipConfig | None, config: ClusterConfig,
+                 loop: EventLoop | None = None):
+        pairs = config.chip_pairs(chip)
+        self.chip = chip if chip is not None else pairs[0][0]
         self.config = config
         self.loop = loop if loop is not None else EventLoop()
-        self.engines = [ServingEngine(chip, loop=self.loop, hoist=config.hoist,
-                                      exec_policy=config.exec_policy)
-                        for _ in range(config.n_chips)]
+        self.chips = [c for c, _ in pairs]
+        self.engines = [ServingEngine(c, loop=self.loop, hoist=config.hoist,
+                                      exec_policy=p)
+                        for c, p in pairs]
         for i, eng in enumerate(self.engines):
             eng.on_job_complete = functools.partial(self._completed, i)
         # estimated outstanding service cycles per chip: the simulator prices
@@ -147,15 +268,31 @@ class ClusterRouter:
         # not an oracle — spill/restore added to a preempted deep job after
         # placement is not re-echoed into the backlog
         self.backlog = [0.0] * config.n_chips
+        # the deep-job component of each backlog: deep service occupies a
+        # whole chip (all affiliations), so it drains serially even on a
+        # multi-affiliation chip — the wait estimator prices it at full width
+        self.backlog_serial = [0.0] * config.n_chips
         self.placements: dict[int, int] = {}
+        self.gangs: dict[int, tuple[int, ...]] = {}  # job_id -> member chips
         self._submit_order: list[int] = []  # job_ids in submission order
         self._seen_ids: set[int] = set()
         self._by_id: dict[int, JobExec] = {}
         self._rr_next = 0
         self._rng = np.random.default_rng(np.random.SeedSequence(config.seed))
-        cap_mb = config.warm_capacity_mb if config.warm_capacity_mb is not None else chip.l2_mb
-        self._warm_cap = cap_mb * MB
+        self._warm_cap = [
+            (config.warm_capacity_mb if config.warm_capacity_mb is not None
+             else c.l2_mb) * MB
+            for c in self.chips]
         self._warm: list[OrderedDict[str, float]] = [OrderedDict() for _ in range(config.n_chips)]
+        # gang-capable chips, grouped by identical pricing — fragments must
+        # progress in lockstep, so members share (chip, policy_key, coop)
+        groups: dict[tuple, list[int]] = {}
+        for i, eng in enumerate(self.engines):
+            if isinstance(eng.policy, FlashPolicy):
+                key = (eng.chip, eng.exec_policy.policy_key(),
+                       eng.policy.deep_coop)
+                groups.setdefault(key, []).append(i)
+        self._gang_groups = [idxs for idxs in groups.values() if len(idxs) >= 2]
 
     # -- submission ---------------------------------------------------------
 
@@ -185,15 +322,75 @@ class ClusterRouter:
         if r == "po2":
             a, b = (int(x) for x in self._rng.choice(n, size=2, replace=False))
             return a if (self.backlog[a], a) <= (self.backlog[b], b) else b
-        # affinity: total marginal cost = backlog + the cold-start you'd pay
-        return min(range(n), key=lambda i: (self.backlog[i] + self._cold_penalty(job, i), i))
+        if r == "affinity":
+            # total marginal cost = backlog + the cold-start you'd pay
+            return min(range(n), key=lambda i: (self.backlog[i] + self._cold_penalty(job, i), i))
+        # hetero: like affinity, but also price THIS chip's service time for
+        # THIS job — on a mixed fleet the estimate is what steers deep jobs to
+        # bootstrappable-heavy chips and shallow floods to swift-heavy ones
+        return min(range(n), key=lambda i: (self._est(job, i), i))
+
+    def _drain_width(self, i: int) -> int:
+        """How many jobs chip i retires concurrently: a FlashPolicy chip
+        drains a (shallow-dominated) backlog one job per affiliation, a
+        sequential chip one at a time.  Raw backlog cycles would overstate a
+        multi-affiliation chip's congestion by exactly this factor."""
+        eng = self.engines[i]
+        return eng.chip.n_affiliations if isinstance(eng.policy, FlashPolicy) else 1
+
+    def _wait(self, i: int) -> float:
+        """Estimated wall-clock cycles until chip i drains its backlog: the
+        shallow component retires ``_drain_width`` jobs at a time, the deep
+        component (whole-chip gangs) serially."""
+        serial = self.backlog_serial[i]
+        parallel = max(0.0, self.backlog[i] - serial)
+        return parallel / self._drain_width(i) + serial
+
+    def _est(self, job: FheJob, i: int) -> float:
+        """Estimated completion of ``job`` on chip i: the backlog's wall-clock
+        drain time plus this chip's service time for this job (+ cold start)."""
+        return (self._wait(i)
+                + self.engines[i].service_sim(job).cycles
+                + self._cold_penalty(job, i))
+
+    # -- cross-chip gang planner --------------------------------------------
+
+    def _plan_gang(self, job: FheJob) -> list[int] | None:
+        """Pick gang members for a deep job, or ``None`` to stay single-chip.
+
+        For every group of identically-priced gang-capable chips, try widths
+        M = 2..gang_max_chips over the M least-loaded members: estimated
+        completion = the most-loaded member's drain time (the lockstep
+        barrier waits for it) + the per-chip gang demand (compute/M + link
+        stalls).  Commit only if the best gang strictly beats the best
+        single-chip estimate — split speedup is weighed against the queueing
+        delay of aligning M chips."""
+        if not self._gang_groups:
+            return None
+        best_single = min(self._est(job, i) for i in range(self.config.n_chips))
+        best: tuple[float, int, list[int]] | None = None
+        for idxs in self._gang_groups:
+            single = self.engines[idxs[0]].service_sim(job).cycles
+            order = sorted(idxs, key=lambda i: (self._wait(i), i))
+            for m in range(2, min(self.config.gang_max_chips, len(order)) + 1):
+                members = order[:m]
+                per_chip, _ = gang_service_cycles(
+                    single, job, m, self.config.link_bytes_per_cycle,
+                    self.config.gang_syncs)
+                est = max(self._wait(i) for i in members) + per_chip
+                if best is None or (est, m) < (best[0], best[1]):
+                    best = (est, m, members)
+        if best is not None and best[0] < best_single:
+            return best[2]
+        return None
 
     # -- warm-set / cold-start model ----------------------------------------
 
     def _cold_penalty(self, job: FheJob, i: int) -> float:
         if not self.config.cold_start or job.workload in self._warm[i]:
             return 0.0
-        return self.config.cold_factor * working_set_bytes(job) / self.chip.hbm_bytes_per_cycle
+        return (self.config.cold_factor * working_set_bytes(job)
+                / self.chips[i].hbm_bytes_per_cycle)
 
     def _touch_warm(self, job: FheJob, i: int) -> None:
         w = self._warm[i]
@@ -201,12 +398,17 @@ class ClusterRouter:
             w.move_to_end(job.workload)
         else:
             w[job.workload] = working_set_bytes(job)
-        while len(w) > 1 and sum(w.values()) > self._warm_cap:
+        while len(w) > 1 and sum(w.values()) > self._warm_cap[i]:
             w.popitem(last=False)  # evict least-recently-used working set
 
     # -- event handlers ------------------------------------------------------
 
     def _route(self, job: FheJob) -> None:
+        if job.kind == "deep" and self.config.gang_max_chips > 1:
+            members = self._plan_gang(job)
+            if members is not None:
+                self._route_gang(job, members)
+                return
         i = self._pick(job)
         pay = self._cold_penalty(job, i)  # counted in metrics via cold_start_cycles
         self._touch_warm(job, i)
@@ -215,9 +417,43 @@ class ClusterRouter:
         self.placements[job.job_id] = i
         self._by_id[job.job_id] = je
         self.backlog[i] += je.service_cycles
+        if job.kind == "deep":
+            self.backlog_serial[i] += je.service_cycles
+
+    def _route_gang(self, job: FheJob, members: list[int]) -> None:
+        """Commit a multi-chip reservation: one lockstep fragment per member.
+
+        Every fragment carries the full per-chip gang demand (compute/M +
+        link stalls) so each member chip's work conservation validates; the
+        rank-0 fragment is the job's primary record (``ClusterResult.jobs``)
+        and additionally logs the gang-total link bytes."""
+        eng = self.engines[members[0]]
+        sim = eng.service_sim(job)
+        per_chip, link = gang_service_cycles(
+            sim.cycles, job, len(members), self.config.link_bytes_per_cycle,
+            self.config.gang_syncs)
+        gang = GangReservation(job, self.loop)
+        for rank, i in enumerate(members):
+            je = self.engines[i].submit(job, sim=sim, service_cycles=per_chip,
+                                        gang=gang)
+            je.chip_index = i
+            je.gang_rank = rank
+            je.gang_size = len(members)
+            je.link_cycles = link
+            if rank == 0:
+                je.link_bytes = gang_link_bytes(job, len(members),
+                                                self.config.gang_syncs)
+                self._by_id[job.job_id] = je
+            self.backlog[i] += je.service_cycles
+            self.backlog_serial[i] += je.service_cycles
+        self.placements[job.job_id] = members[0]
+        self.gangs[job.job_id] = tuple(members)
 
     def _completed(self, i: int, je: JobExec) -> None:
         self.backlog[i] = max(0.0, self.backlog[i] - je.service_cycles)
+        if je.kind == "deep":
+            self.backlog_serial[i] = max(
+                0.0, self.backlog_serial[i] - je.service_cycles)
 
     # -- run -----------------------------------------------------------------
 
@@ -229,25 +465,37 @@ class ClusterRouter:
         return ClusterResult(chip=self.chip, config=self.config,
                              chip_results=chip_results, jobs=jobs,
                              placements=dict(self.placements), makespan=makespan,
-                             events_processed=self.loop.processed)
+                             events_processed=self.loop.processed,
+                             chips=list(self.chips), gangs=dict(self.gangs))
 
 
-def serve_cluster(jobs: list[FheJob], chip: ChipConfig, n_chips: int = 2,
+def serve_cluster(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: int = 2,
                   router: str = "jsq", seed: int = 0, cold_start: bool = True,
                   cold_factor: float = 2.0, warm_capacity_mb: float | None = None,
                   config: ClusterConfig | None = None,
                   validate: bool = True, hoist: bool = False,
-                  exec_policy: ExecPolicy | None = None) -> ClusterResult:
-    """Serve an open-loop job list on an ``n_chips`` fleet; the one-call API.
+                  exec_policy: ExecPolicy | None = None,
+                  chips=None, gang_max_chips: int = 1,
+                  link_bytes_per_cycle: float = 256.0,
+                  gang_syncs: int = GANG_SYNCS) -> ClusterResult:
+    """Serve an open-loop job list on a chip fleet; the one-call API.
 
-    Pass ``config=`` to reuse a prepared ``ClusterConfig`` (the keyword
+    Homogeneous fleet: pass ``chip`` + ``n_chips``.  Heterogeneous fleet:
+    pass ``chips=`` a per-chip list of ``ChipConfig`` or ``(ChipConfig,
+    ExecPolicy)`` entries (``chip``/``n_chips`` are then ignored).
+    ``gang_max_chips > 1`` lets deep jobs gang across identical FlashPolicy
+    chips with link exchanges priced at ``link_bytes_per_cycle``.  Pass
+    ``config=`` to reuse a prepared ``ClusterConfig`` (the other keyword
     arguments are ignored in that case); ``exec_policy`` sets the per-engine
     service-time execution policy (wins over the legacy ``hoist=`` bool).
     """
     cfg = config if config is not None else ClusterConfig(
-        n_chips=n_chips, router=router, seed=seed, cold_start=cold_start,
-        cold_factor=cold_factor, warm_capacity_mb=warm_capacity_mb, hoist=hoist,
-        exec_policy=exec_policy)
+        n_chips=0 if chips is not None else n_chips, router=router, seed=seed,
+        cold_start=cold_start, cold_factor=cold_factor,
+        warm_capacity_mb=warm_capacity_mb, hoist=hoist, exec_policy=exec_policy,
+        chips=tuple(chips) if chips is not None else None,
+        gang_max_chips=gang_max_chips, link_bytes_per_cycle=link_bytes_per_cycle,
+        gang_syncs=gang_syncs)
     rt = ClusterRouter(chip, cfg)
     for job in jobs:
         rt.submit(job)

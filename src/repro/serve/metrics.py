@@ -79,6 +79,8 @@ def summarize(result: ServeResult | ClusterResult) -> dict[str, float]:
     """Flat metric dict (CSV-friendly).  Keys:
 
     latency_p50/p95/p99_cycles, latency_p99_ms — end-to-end turnaround;
+    latency_p99_shallow/deep_cycles            — per-kind tail latency (what
+                                                 the hetero/gang gates check);
     queue_p50/p95/p99_cycles                   — arrival → first dispatch;
     queue_max_shallow/deep_cycles              — worst queueing per kind
                                                  (deep = starvation indicator);
@@ -121,6 +123,9 @@ def summarize(result: ServeResult | ClusterResult) -> dict[str, float]:
     for k, v in lat.items():
         out[f"latency_{k}_cycles"] = v
     out["latency_p99_ms"] = lat["p99"] / freq_hz * 1e3
+    for kind in ("shallow", "deep"):
+        out[f"latency_p99_{kind}_cycles"] = _pct(
+            [je.turnaround for je in done if je.kind == kind])["p99"]
     for k, v in queue.items():
         out[f"queue_{k}_cycles"] = v
     for kind, v in max_queueing_by_kind(result).items():
@@ -139,6 +144,18 @@ def per_chip_utilization(result: ClusterResult) -> list[float]:
     return utils
 
 
+def per_chip_type_utilization(result: ClusterResult) -> dict[str, float]:
+    """Mean busy fraction per chip *type* (e.g. on a mixed fleet: how loaded
+    are the FLASH-FHE dies vs the CraterLake die?).  Keyed by chip name;
+    kept out of the flat ``summarize_cluster`` dict so CSV columns stay
+    uniform across fleets of different composition."""
+    utils = per_chip_utilization(result)
+    acc: dict[str, list[float]] = {}
+    for chip, u in zip(result.chips, utils):
+        acc.setdefault(chip.name, []).append(u)
+    return {name: float(np.mean(v)) for name, v in acc.items()}
+
+
 def summarize_cluster(result: ClusterResult) -> dict[str, float]:
     """Fleet-level SLOs: the merged-job latency/queueing view plus per-chip
     balance.  Keys beyond ``summarize``'s:
@@ -148,7 +165,17 @@ def summarize_cluster(result: ClusterResult) -> dict[str, float]:
     chip_util_imbalance                        — max − min (0 = perfectly even);
     fairness_jain_chips                        — Jain over per-chip busy cycles;
     n_cold_starts, cold_start_mcycles          — warm-set misses the router
-                                                 charged into service demand.
+                                                 charged into service demand;
+    n_gang_jobs, gang_chips_mean               — deep jobs that gang-split, and
+                                                 their mean width in chips;
+    gang_link_bytes, gang_link_mcycles         — inter-chip exchange totals
+                                                 (mcycles = per-chip link
+                                                 stalls summed over members).
+
+    Per-job numbers (latency, queueing, preemptions, spill) count each ganged
+    job ONCE through its primary fragment — fragments share completion times
+    by the lockstep invariant, so nothing is lost.  Per-chip numbers (busy
+    cycles, utilization) naturally include every fragment's segments.
 
     Every latency/queueing/fairness number is computed from the union of the
     per-chip ``ServeResult`` timelines — the property suite asserts this merge
@@ -186,9 +213,18 @@ def summarize_cluster(result: ClusterResult) -> dict[str, float]:
         "n_cold_starts": float(sum(1 for je in done if je.cold_start_cycles > 0)),
         "cold_start_mcycles": sum(je.cold_start_cycles for je in done) / 1e6,
     }
+    ganged = [je for je in done if je.gang_size > 1]
+    out["n_gang_jobs"] = float(len(ganged))
+    out["gang_chips_mean"] = (float(np.mean([je.gang_size for je in ganged]))
+                              if ganged else 0.0)
+    out["gang_link_bytes"] = sum(je.link_bytes for je in ganged)
+    out["gang_link_mcycles"] = sum(je.link_cycles * je.gang_size for je in ganged) / 1e6
     for k, v in lat.items():
         out[f"latency_{k}_cycles"] = v
     out["latency_p99_ms"] = lat["p99"] / freq_hz * 1e3
+    for kind in ("shallow", "deep"):
+        out[f"latency_p99_{kind}_cycles"] = _pct(
+            [je.turnaround for je in done if je.kind == kind])["p99"]
     for k, v in queue.items():
         out[f"queue_{k}_cycles"] = v
     for kind, v in max_queueing_by_kind(result).items():

@@ -23,6 +23,21 @@ arrival/completion events (replacing the old one-pass offline heuristic in
   instead of letting that shallow job jump ahead, so priorities mean the same
   thing in both directions.
 
+Two extensions beyond the single-chip policy live here too:
+
+  * ``FlashPolicy(deep_coop=True)`` grants deep jobs the swift clusters as
+    well (``core.simulator.lanes_deep_coop``): large-point NTTs decompose
+    across boot+swift pipelines with every (i)NTT routed through the L3
+    transpose module — deep service time drops, bounded by the transpose
+    bandwidth (the paper's §7 future-work direction).
+  * ``GangReservation`` is the cross-chip deep-gang barrier used by
+    ``repro.serve.cluster``: one deep job splits across M identical chips'
+    bootstrappable clusters, with serialized inter-chip link exchanges
+    (``gang_service_cycles``) charged into every fragment's service demand so
+    per-chip work conservation still validates.  Fragments start, suspend
+    (a preemption on ANY member suspends the whole gang), resume, and finish
+    in lockstep.
+
 ``SequentialPolicy`` is the CraterLake / F1+ baseline: whole chip per job,
 non-preemptive, highest-priority-then-arrival at each dispatch point.
 
@@ -49,6 +64,7 @@ from repro.core.planner import workload_stream
 from repro.core.simulator import (
     SimResult,
     lanes_deep,
+    lanes_deep_coop,
     lanes_shallow,
     lanes_whole_chip,
     simulate_stream,
@@ -101,6 +117,13 @@ class JobExec:
     n_preemptions: int = 0
     chip_index: int = 0  # which fleet chip served the job (0 when single-chip)
     cold_start_cycles: float = 0.0  # router-charged warm-set miss, part of service_cycles
+    # cross-chip gang fields: a ganged deep job has one JobExec *fragment* per
+    # member chip, all pointing at the same reservation and moving in lockstep
+    gang: "GangReservation | None" = dataclasses.field(default=None, repr=False)
+    gang_rank: int = 0  # this fragment's position in the gang (0 = primary)
+    gang_size: int = 1  # chips in the gang (1 = not ganged)
+    link_cycles: float = 0.0  # per-chip inter-chip exchange stalls, inside service_cycles
+    link_bytes: float = 0.0  # gang-total link traffic, recorded on the rank-0 fragment
     _run_start: float | None = None
     _suspended_at: float | None = None  # last preemption time (aging reference)
     _complete_ev: Event | None = None
@@ -155,21 +178,25 @@ def exec_policy_from_hoist(hoist: bool) -> ExecPolicy:
 
 
 def job_service_sim(job: FheJob, chip: ChipConfig, hoist: bool = False,
-                    policy: ExecPolicy | None = None) -> SimResult:
+                    policy: ExecPolicy | None = None,
+                    deep_coop: bool = False) -> SimResult:
     """Cycle-accurate service time for one job under its granted lanes.
 
-    Identical (chip, workload, kind, policy_key) tuples share one SimResult —
-    the planner stream and lane grant are functions of those alone, so the
-    simulation is too.  ``ExecPolicy.policy_key()`` is the single source of
-    truth for the execution-mode part of the key: it covers the kernel
-    pipeline, the hoisting mode, and the numerics mode, and distinct policies
-    never alias — a memo keyed only on (chip, workload, kind) would silently
-    hand post-hoisting callers the pre-hoisting cycle counts.  The legacy
-    ``hoist=`` bool maps through ``exec_policy_from_hoist`` when no policy is
-    given.  Callers must treat the result as read-only.
+    Identical (chip, workload, kind, policy_key, coop) tuples share one
+    SimResult — the planner stream and lane grant are functions of those
+    alone, so the simulation is too.  ``ExecPolicy.policy_key()`` is the
+    single source of truth for the execution-mode part of the key: it covers
+    the kernel pipeline, the hoisting mode, and the numerics mode, and
+    distinct policies never alias — a memo keyed only on (chip, workload,
+    kind) would silently hand post-hoisting callers the pre-hoisting cycle
+    counts.  ``deep_coop`` grants a deep job the swift clusters too
+    (``lanes_deep_coop``; ignored for shallow jobs and whole-chip baselines).
+    The legacy ``hoist=`` bool maps through ``exec_policy_from_hoist`` when
+    no policy is given.  Callers must treat the result as read-only.
     """
     policy = policy if policy is not None else exec_policy_from_hoist(hoist)
-    key = (chip, job.workload, job.kind, policy.policy_key())
+    coop = bool(deep_coop) and job.kind == "deep" and chip.multi_job
+    key = (chip, job.workload, job.kind, policy.policy_key(), coop)
     hit = _SERVICE_MEMO.get(key)
     if hit is not None:
         return hit
@@ -180,11 +207,119 @@ def job_service_sim(job: FheJob, chip: ChipConfig, hoist: bool = False,
         lanes = lanes_shallow(chip)
         cache_mb = chip.l1_mb_per_aff + chip.l2_mb / chip.n_affiliations
     else:
-        lanes, cache_mb = lanes_deep(chip), chip.total_cache_mb
+        lanes = lanes_deep_coop(chip) if coop else lanes_deep(chip)
+        cache_mb = chip.total_cache_mb
     stream = workload_stream(job.workload, job.params, mode="hw", policy=policy)
     sim = simulate_stream(stream, chip, lanes, cache_bytes=cache_mb * MB)
     _SERVICE_MEMO[key] = sim
     return sim
+
+
+# ---------------------------------------------------------------------------
+# cross-chip deep gangs (service model + lockstep barrier)
+# ---------------------------------------------------------------------------
+
+GANG_SYNCS = 8  # global barriers per ganged deep job (bootstrap stage boundaries)
+
+
+def gang_link_bytes(job: FheJob, n_chips: int, syncs: int = GANG_SYNCS) -> float:
+    """Total inter-chip link traffic for one ``n_chips``-wide deep gang.
+
+    The gang shards a deep job's independent baby-step/batch work across M
+    chips' bootstrappable clusters and synchronises at ``syncs`` global
+    barriers (the bootstrapping stage boundaries: CtS radix stages, EvalMod,
+    StC).  Each barrier all-gathers the sharded ciphertext working set — of
+    which a ``(M-1)/M`` fraction is remote to any member — in both
+    directions (scatter updated shards, gather the merged state), hence the
+    factor 2.  Monotone in M: wider gangs exchange strictly more bytes.
+    """
+    if n_chips <= 1:
+        return 0.0
+    return 2.0 * syncs * working_set_bytes(job) * (n_chips - 1) / n_chips
+
+
+def gang_service_cycles(single_chip_cycles: float, job: FheJob, n_chips: int,
+                        link_bytes_per_cycle: float,
+                        syncs: int = GANG_SYNCS) -> tuple[float, float]:
+    """Per-chip busy time ``(cycles, link_cycles)`` of an M-chip deep gang.
+
+    Compute shards M ways; every member then stalls through the serialized
+    link exchanges (the link is the bottleneck during a barrier, so its cost
+    is charged into each fragment's service demand — work conservation stays
+    penalty-inclusive, exactly like the router's cold-start charge).  The
+    link is priced ≫ the on-chip L3 transpose: at the default 256 B/cycle it
+    moves bytes 32× slower than the 2048-port transpose module and 4× slower
+    than one chip's HBM.
+    """
+    if n_chips <= 1:
+        return float(single_chip_cycles), 0.0
+    link = gang_link_bytes(job, n_chips, syncs) / float(link_bytes_per_cycle)
+    return float(single_chip_cycles) / n_chips + link, link
+
+
+class GangReservation:
+    """Lockstep barrier for ONE deep job split across M chips.
+
+    The cluster router creates one reservation per multi-chip deep placement
+    and submits a fragment ``JobExec`` to each member engine; every fragment
+    carries the full per-chip gang demand (``gang_service_cycles``).  The
+    fragments move through the state machine in lockstep:
+
+      * start / resume — each member signals ``member_ready`` once its chip
+        has drained; its ``FlashPolicy`` then *holds* the chip idle
+        (``_gang_hold``, no shallow admission) so the reservation cannot be
+        stolen.  When the LAST member arrives the barrier fires a zero-delay
+        launch event and every fragment enters RUNNING at the same instant —
+        holding is the visible queueing price of aligning M chips.
+      * preempt — a strictly-higher-priority shallow arrival on ANY member
+        chip suspends EVERY fragment at that instant (each spills its 1/M
+        shard of the working set), after which members independently drain
+        and re-enter the barrier.
+
+    Members must be identical (chip, exec-policy) pairs so fragments price
+    and progress identically — the router's gang planner groups chips by
+    exactly that key.
+    """
+
+    def __init__(self, job: FheJob, loop: EventLoop):
+        self.job = job
+        self.loop = loop
+        self.members: list[tuple["FlashPolicy", JobExec]] = []
+        self._ready: set[int] = set()
+        self._launch_pending = False
+        self.running = False
+
+    @property
+    def size(self) -> int:
+        return len(self.members)
+
+    def attach(self, policy: "FlashPolicy", je: JobExec) -> None:
+        assert isinstance(policy, FlashPolicy), (
+            "gang fragments need a FlashPolicy chip (multi_job=True)"
+        )
+        self.members.append((policy, je))
+
+    def member_ready(self, policy: "FlashPolicy") -> None:
+        """Barrier arrival (idempotent); launches once every member holds."""
+        self._ready.add(id(policy))
+        if len(self._ready) == self.size and not self._launch_pending:
+            self._launch_pending = True
+            self.loop.call_after(0.0, self._launch)
+
+    def _launch(self) -> None:
+        self._launch_pending = False
+        self._ready.clear()
+        self.running = True
+        for policy, je in self.members:
+            policy._gang_launch(je)
+
+    def suspend(self) -> None:
+        """Gang-wide preemption: suspend every fragment at this instant."""
+        if not self.running:
+            return
+        self.running = False
+        for policy, je in self.members:
+            policy._gang_suspend(je)
 
 
 # ---------------------------------------------------------------------------
@@ -247,13 +382,22 @@ class FlashPolicy(_DeferredDispatchMixin):
     in per deployment (``tests/test_serving.py`` pins both behaviours).
     Strictly-higher-priority shallow traffic still overtakes an aged deep
     job, so priorities keep their meaning.
+
+    ``deep_coop`` grants deep jobs the swift clusters too
+    (``lanes_deep_coop``): the serving engine prices deep services with the
+    boot+swift lane grant, trading L3-transpose traffic for lane width —
+    shallow services are untouched.  Off by default because it is a
+    beyond-paper mode (§7 future work); ``tests/test_serving.py`` pins that
+    it strictly reduces deep p99 on a deep-only stream.
     """
 
-    def __init__(self, chip: ChipConfig, aging_quanta: float | None = None):
+    def __init__(self, chip: ChipConfig, aging_quanta: float | None = None,
+                 deep_coop: bool = False):
         assert chip.multi_job, f"{chip.name} cannot co-schedule jobs (multi_job=False)"
         assert aging_quanta is None or aging_quanta > 0
         self.chip = chip
         self.aging_quanta = aging_quanta
+        self.deep_coop = bool(deep_coop)
         self.loop: EventLoop | None = None
         self.on_complete: Callable[[JobExec], None] = lambda je: None
         self._dispatch_pending = False
@@ -261,6 +405,11 @@ class FlashPolicy(_DeferredDispatchMixin):
         self.shallow_q = _PriorityQueue()
         self.deep_q = _PriorityQueue()
         self.deep_active: JobExec | None = None
+        # holding for a cross-chip gang barrier: the chip stays drained (no
+        # shallow admission) until every member chip is ready
+        self._gang_hold = False
+        self._deep_label = (lanes_deep_coop(chip) if self.deep_coop
+                            else lanes_deep(chip)).label
         self._shallow_svc_sum = 0.0
         self._shallow_svc_n = 0
 
@@ -304,13 +453,21 @@ class FlashPolicy(_DeferredDispatchMixin):
             return
         if top.job.priority <= d.job.priority:
             return
+        if d.gang is not None:
+            d.gang.suspend()  # lockstep: every member fragment suspends now
+        else:
+            self._suspend_deep(d, now)
+
+    def _suspend_deep(self, d: JobExec, now: float) -> None:
         # suspend: close the deep segment, revoke its completion, charge the
-        # SRAM→HBM spill + later restore to its remaining work
+        # SRAM→HBM spill + later restore to its remaining work (a gang
+        # fragment spills only its 1/M shard of the working set)
         worked = now - d._run_start
         d._complete_ev.cancel()
         if worked > 0:
             d.segments.append(Segment(d._run_start, now, "deep"))
-            pay = 2.0 * working_set_bytes(d.job) / self.chip.hbm_bytes_per_cycle
+            pay = (2.0 * working_set_bytes(d.job) / d.gang_size
+                   / self.chip.hbm_bytes_per_cycle)
             d.remaining = max(0.0, d.remaining - worked) + pay
             d.spill_restore_cycles += pay
         d.n_preemptions += 1
@@ -318,6 +475,18 @@ class FlashPolicy(_DeferredDispatchMixin):
         d._run_start = None
         d._suspended_at = now  # aging clock restarts: only waiting counts
         d._complete_ev = None
+
+    # -- gang callbacks (invoked by GangReservation, possibly cross-chip) ----
+
+    def _gang_launch(self, d: JobExec) -> None:
+        self._gang_hold = False
+        self._run_deep(d, self.loop.now)
+
+    def _gang_suspend(self, d: JobExec) -> None:
+        if d.state is not JobState.RUNNING:
+            return
+        self._suspend_deep(d, self.loop.now)
+        self._schedule_dispatch()  # this chip's affiliations just freed
 
     def _deep_fence(self, now: float) -> tuple[float, bool] | None:
         """(priority, strict) below which shallow jobs yield to a deep job.
@@ -337,6 +506,8 @@ class FlashPolicy(_DeferredDispatchMixin):
         return head.job.priority, self._aged(head, now)
 
     def _place_shallow(self, now: float) -> None:
+        if self._gang_hold:
+            return  # chip is reserved for a cross-chip gang barrier
         if self.deep_active is not None and self.deep_active.state is JobState.RUNNING:
             return  # deep gang owns every affiliation
         fence = self._deep_fence(now)
@@ -382,7 +553,7 @@ class FlashPolicy(_DeferredDispatchMixin):
             if d.state is JobState.SUSPENDED and (
                 top is None or (self._aged(d, now) and top.job.priority <= d.job.priority)
             ):
-                self._run_deep(d, now)
+                self._start_or_hold(d, now)
             return
         head = self.deep_q.peek()
         if head is None:
@@ -396,11 +567,22 @@ class FlashPolicy(_DeferredDispatchMixin):
         ):
             return
         self.deep_active = self.deep_q.pop()
-        self._run_deep(self.deep_active, now)
+        self._start_or_hold(self.deep_active, now)
+
+    def _start_or_hold(self, d: JobExec, now: float) -> None:
+        """Run a single-chip deep job now; for a gang fragment, hold the chip
+        and enter the cross-chip barrier instead (the reservation launches
+        every fragment once the last member chip drains)."""
+        if d.gang is not None:
+            self._gang_hold = True
+            d.gang.member_ready(self)
+        else:
+            self._run_deep(d, now)
 
     def _run_deep(self, d: JobExec, now: float) -> None:
         d.state = JobState.RUNNING
-        d.lanes = lanes_deep(self.chip).label
+        d.lanes = (f"{self._deep_label}+gang[{d.gang_rank}/{d.gang_size}]"
+                   if d.gang is not None else self._deep_label)
         if d.first_start is None:
             d.first_start = now
         d._run_start = now
@@ -413,6 +595,8 @@ class FlashPolicy(_DeferredDispatchMixin):
         d.state = JobState.DONE
         d.completion = now
         self.deep_active = None
+        if d.gang is not None:
+            d.gang.running = False  # all fragments finish at this instant
         self.on_complete(d)
         self._schedule_dispatch()
 
@@ -541,13 +725,30 @@ class ServingEngine:
         self.on_job_complete: Callable[[JobExec], None] | None = None
         self.policy.bind(self.loop, self._job_completed)
 
-    def submit(self, job: FheJob, extra_cycles: float = 0.0) -> JobExec:
+    def service_sim(self, job: FheJob) -> SimResult:
+        """The memoised cycle sim this engine prices ``job`` at — the cluster
+        router estimates through the same entry, so routing estimates match
+        the engine's charges exactly.  Honours the policy's ``deep_coop``."""
+        coop = job.kind == "deep" and bool(getattr(self.policy, "deep_coop", False))
+        return job_service_sim(job, self.chip, policy=self.exec_policy, deep_coop=coop)
+
+    def submit(self, job: FheJob, extra_cycles: float = 0.0, sim: SimResult | None = None,
+               service_cycles: float | None = None,
+               gang: "GangReservation | None" = None) -> JobExec:
         """Queue one job.  ``extra_cycles`` is added to the service demand —
         the cluster router charges warm-set cold starts (KSK/plaintext fetch)
-        this way, so work conservation holds penalty-inclusive."""
-        sim = job_service_sim(job, self.chip, policy=self.exec_policy)
-        je = JobExec(job=job, service_cycles=sim.cycles + float(extra_cycles), sim=sim,
-                     lanes="", cold_start_cycles=float(extra_cycles))
+        this way, so work conservation holds penalty-inclusive.  The router's
+        gang path overrides the priced demand (``service_cycles`` = per-chip
+        gang duration incl. link stalls, with ``sim`` the single-chip sim for
+        reference) and attaches the fragment to its cross-chip reservation.
+        """
+        if sim is None:
+            sim = self.service_sim(job)
+        base = float(service_cycles) if service_cycles is not None else sim.cycles
+        je = JobExec(job=job, service_cycles=base + float(extra_cycles), sim=sim,
+                     lanes="", cold_start_cycles=float(extra_cycles), gang=gang)
+        if gang is not None:
+            gang.attach(self.policy, je)
         self.jobs.append(je)
         # clamp: integer-rounded arrivals from a closed-loop source can land a
         # fraction of a cycle before a fractional clock (non-integral spill pay)

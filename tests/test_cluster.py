@@ -1,8 +1,10 @@
 """Fleet-serving tests (`repro.serve.cluster`): a hypothesis property suite
 over random job mixes × chip counts × router policies (work conservation,
 exactly-one-chip placement, full completion, fleet-metrics merge identity),
-router-policy unit behavior, the warm-set cold-start model, sharded traffic
-seed-splitting, bursty streams, and the `core.scheduler` fleet passthrough."""
+router-policy unit behavior, heterogeneous fleets and cross-chip deep gangs
+(lockstep fragments, link-cost monotonicity, gang-vs-single planning), the
+warm-set cold-start model, sharded traffic seed-splitting, bursty streams,
+and the `core.scheduler` fleet passthrough."""
 
 import dataclasses
 import random
@@ -16,7 +18,13 @@ from repro.core import hardware as H
 from repro.core import jobs as J
 from repro.core import scheduler as S
 from repro.serve.cluster import ROUTERS, ClusterConfig
-from repro.serve.policy import JobState, working_set_bytes
+from repro.serve.metrics import per_chip_type_utilization
+from repro.serve.policy import (
+    JobState,
+    gang_link_bytes,
+    gang_service_cycles,
+    working_set_bytes,
+)
 
 # cheap presets only (service sims are memoised per (chip, workload, kind))
 SHALLOW = ("matmul", "lola_mnist_plain", "dblookup")
@@ -193,6 +201,167 @@ def test_cluster_validate_catches_corrupted_placement():
 
 
 # ---------------------------------------------------------------------------
+# heterogeneous fleets + cross-chip deep gangs
+# ---------------------------------------------------------------------------
+
+MIXED_FLEET = [H.FLASH_FHE, H.FLASH_FHE, H.CRATERLAKE, H.F1PLUS]
+
+
+def test_cluster_config_heterogeneous_normalization():
+    """Bare ChipConfig entries normalize to (chip, exec_policy) pairs and
+    n_chips derives from the fleet length; explicit mismatches are errors."""
+    cfg = ClusterConfig(chips=tuple(MIXED_FLEET))
+    assert cfg.n_chips == 4
+    assert all(isinstance(c, H.ChipConfig) and p is None for c, p in cfg.chips)
+    assert [c.name for c, _ in cfg.chip_pairs()] == [c.name for c in MIXED_FLEET]
+    # a (chip, policy) pair passes through; None policy falls back to config's
+    pol = serve.ExecPolicy(hoisting="always")
+    cfg2 = ClusterConfig(chips=((H.FLASH_FHE, pol), H.CRATERLAKE))
+    assert cfg2.chips[0][1] is pol and cfg2.chips[1][1] is None
+    with pytest.raises(ValueError, match="disagrees"):
+        ClusterConfig(n_chips=3, chips=tuple(MIXED_FLEET))
+    with pytest.raises(ValueError, match="default chip"):
+        ClusterConfig(n_chips=2).chip_pairs()
+    with pytest.raises(ValueError):
+        ClusterConfig(n_chips=2, gang_max_chips=0)
+    with pytest.raises(ValueError):
+        ClusterConfig(n_chips=2, link_bytes_per_cycle=0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n=st.integers(min_value=1, max_value=12),
+       router=st.sampled_from(ROUTERS),
+       gang_max=st.integers(min_value=1, max_value=3))
+def test_hetero_fleet_invariants(seed, n, router, gang_max):
+    """The full invariant suite holds on a mixed fleet with gangs enabled:
+    every job completes, non-gang jobs land on exactly one chip, gang
+    fragments land on exactly their member set in lockstep, per-chip work
+    conservation validates, and the fleet metrics merge cleanly."""
+    jobs = _random_jobs(seed, n, deep_frac=0.35)
+    result = serve.serve_cluster(jobs, chips=MIXED_FLEET, router=router,
+                                 gang_max_chips=gang_max, seed=seed,
+                                 validate=True)
+    assert len(result.jobs) == n
+    assert all(je.state is JobState.DONE for je in result.jobs)
+    assert [c.name for c in result.chips] == [c.name for c in MIXED_FLEET]
+    for jid, members in result.gangs.items():
+        assert len(set(members)) == len(members) >= 2  # never double-book a chip
+        frags = [je for r in result.chip_results for je in r.jobs
+                 if je.job.job_id == jid]
+        assert sorted(je.chip_index for je in frags) == sorted(members)
+        comps = [je.completion for je in frags]
+        assert max(comps) == pytest.approx(min(comps))  # lockstep finish
+    m = serve.summarize(result)
+    assert m["n_jobs"] == n
+    assert m["n_gang_jobs"] == len(result.gangs)
+
+
+def test_gang_link_cost_monotone_in_chips():
+    """More gang members = more inter-chip traffic (bytes strictly increase
+    in M) while the per-chip compute share shrinks — so per-chip service is
+    compute/M plus a link term that grows toward 2·syncs·ws."""
+    job = J.make_job("lstm")
+    single = 3_410_688.0
+    bytes_by_m = [gang_link_bytes(job, m) for m in range(1, 6)]
+    assert bytes_by_m[0] == 0.0
+    assert all(b2 > b1 for b1, b2 in zip(bytes_by_m, bytes_by_m[1:]))
+    link_rate = 256.0
+    per_chip = {m: gang_service_cycles(single, job, m, link_rate)[0]
+                for m in range(1, 6)}
+    assert per_chip[1] == single
+    for m in range(2, 6):
+        compute, link = single / m, gang_link_bytes(job, m) / link_rate
+        assert per_chip[m] == pytest.approx(compute + link)
+        # total fleet chip-time strictly grows with M: the split is a latency
+        # trade, never free capacity
+        assert m * per_chip[m] > single
+
+
+def test_gang_strictly_faster_for_lone_deep_job():
+    """On an idle 2×FLASH fleet the planner gangs a lone lstm across both
+    chips and finishes strictly earlier than any single chip could; the
+    reservation is recorded and both fragments carry the per-chip demand."""
+    jobs = [J.make_job("lstm", job_id=0)]
+    solo = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=2, router="hetero",
+                               cold_start=False)
+    ganged = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=2, router="hetero",
+                                 gang_max_chips=2, cold_start=False)
+    assert ganged.gangs == {0: (0, 1)}
+    assert ganged.jobs[0].gang_size == 2
+    assert ganged.jobs[0].completion < solo.jobs[0].completion
+    expect_link = gang_link_bytes(jobs[0], 2) / 256.0
+    assert ganged.jobs[0].link_cycles == pytest.approx(expect_link)
+    assert ganged.jobs[0].completion == pytest.approx(
+        solo.jobs[0].completion / 2 + expect_link)
+    frags = [je for r in ganged.chip_results for je in r.jobs]
+    assert len(frags) == 2
+    assert "gang[" in frags[0].lanes
+
+
+def test_gang_lockstep_preemption_across_chips():
+    """A higher-priority shallow arrival on ONE member chip suspends the
+    whole gang; both fragments record the preemption and still finish at the
+    same instant (spill/restore paid per chip on its ws/M share)."""
+    jobs = [J.make_job("lstm", priority=0, arrival_cycle=0, job_id=0),
+            J.make_job("matmul", priority=5, arrival_cycle=500_000, job_id=1)]
+    result = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=2, router="hetero",
+                                 gang_max_chips=2, cold_start=False,
+                                 validate=True)
+    frags = [je for r in result.chip_results for je in r.jobs
+             if je.job.job_id == 0]
+    assert len(frags) == 2
+    assert all(je.n_preemptions == 1 for je in frags)
+    assert frags[0].completion == pytest.approx(frags[1].completion)
+    half_ws = working_set_bytes(jobs[0]) / 2
+    expect_spill = 2.0 * half_ws / H.FLASH_FHE.hbm_bytes_per_cycle
+    assert all(je.spill_restore_cycles == pytest.approx(expect_spill)
+               for je in frags)
+
+
+def test_gang_declined_when_members_busy():
+    """Two back-to-back deep jobs on a 2×FLASH fleet: the first gangs, the
+    second sees the gang's serial backlog on both members and the planner
+    keeps it single-chip rather than queue behind the barrier."""
+    jobs = [J.make_job("lstm", arrival_cycle=0, job_id=0),
+            J.make_job("lstm", arrival_cycle=100_000, job_id=1)]
+    result = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=3, router="hetero",
+                                 gang_max_chips=2, cold_start=False)
+    assert 0 in result.gangs
+    assert 1 not in result.gangs  # planner weighed queueing delay and declined
+    assert result.placements[1] not in result.gangs[0]
+
+
+def test_hetero_router_steers_by_chip_strength():
+    """On the mixed fleet the hetero router keeps a shallow burst on the
+    multi-affiliation FLASH dies and never wastes a deep job on the F1+
+    (whose deep service is several× slower)."""
+    shallow = [J.make_job("matmul", arrival_cycle=i * 1_000, job_id=i)
+               for i in range(12)]
+    deep = [J.make_job("lstm", arrival_cycle=0, job_id=100)]
+    result = serve.serve_cluster(sorted(shallow + deep,
+                                        key=lambda j: j.arrival_cycle),
+                                 chips=MIXED_FLEET, router="hetero",
+                                 cold_start=False)
+    assert result.placements[100] != 3  # F1+ never picked for deep
+    on_flash = sum(1 for j in shallow if result.placements[j.job_id] in (0, 1))
+    assert on_flash >= 10  # the flood stays on the 8-wide dies
+
+
+def test_scheduler_chips_and_gang_passthrough():
+    jobs = _random_jobs(seed=11, n=8, deep_frac=0.4)
+    sched = S.schedule(jobs, chips=MIXED_FLEET, router="hetero",
+                       gang_max_chips=2)
+    result = serve.serve_cluster(jobs, chips=MIXED_FLEET, router="hetero",
+                                 gang_max_chips=2)
+    assert len(sched) == len(result.jobs)
+    for sj, je in zip(sched, result.jobs):
+        assert sj.job is je.job
+        assert sj.end_cycle == je.completion
+        assert sj.chip_index == je.chip_index
+
+
+# ---------------------------------------------------------------------------
 # fleet metrics
 # ---------------------------------------------------------------------------
 
@@ -212,6 +381,71 @@ def test_cluster_metrics_balance_and_tenants():
     assert m["throughput_jobs_per_mcycle"] > 0
     # summarize dispatches on result type: explicit call agrees
     assert m == serve.summarize_cluster(result)
+
+
+def test_summarize_cluster_idle_chip():
+    """A chip that completes zero jobs must not poison the fleet summary:
+    its utilization is 0 and every aggregate stays finite."""
+    jobs = [J.make_job("matmul", job_id=0)]
+    result = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=3, router="jsq",
+                                 cold_start=False)
+    assert sum(len(r.jobs) for r in result.chip_results) == 1
+    m = serve.summarize_cluster(result)
+    assert m["n_jobs"] == 1 and m["n_chips"] == 3
+    assert m["chip_util_min"] == 0.0
+    assert m["chip_util_max"] > 0.0
+    assert m["latency_p99_deep_cycles"] == 0.0  # no deep jobs: percentile of []
+    assert all(np.isfinite(v) for v in m.values())
+
+
+def test_summarize_cluster_single_chip_fleet():
+    """With one chip the cross-chip balance metrics are degenerate by
+    definition: Jain fairness 1.0 and zero imbalance."""
+    jobs = [J.make_job("matmul", arrival_cycle=i * 50_000, job_id=i)
+            for i in range(5)]
+    m = serve.summarize_cluster(serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=1))
+    assert m["n_chips"] == 1
+    assert m["fairness_jain_chips"] == pytest.approx(1.0)
+    assert m["chip_util_imbalance"] == 0.0
+
+
+def test_summarize_cluster_all_cold_start():
+    """Every arrival cold (alternating workloads under a near-zero warm cap):
+    the cold counters cover the whole stream and the charge shows up in both
+    the per-job and fleet-total views."""
+    jobs = [J.make_job(("matmul", "dblookup")[i % 2], arrival_cycle=i * 300_000,
+                       job_id=i) for i in range(6)]
+    result = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=2,
+                                 warm_capacity_mb=1e-6)
+    m = serve.summarize_cluster(result)
+    assert m["n_cold_starts"] == 6.0
+    assert m["cold_start_mcycles"] == pytest.approx(
+        sum(je.cold_start_cycles for je in result.jobs) / 1e6)
+    assert m["cold_start_mcycles"] > 0
+
+
+def test_summarize_cluster_gang_metrics():
+    """Gang totals: one ganged lstm across 2 chips reports exactly its link
+    bytes once (primary fragment) and link stalls × members in mcycles."""
+    jobs = [J.make_job("lstm", job_id=0)]
+    result = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=2, router="hetero",
+                                 gang_max_chips=2, cold_start=False)
+    m = serve.summarize_cluster(result)
+    assert m["n_gang_jobs"] == 1.0
+    assert m["gang_chips_mean"] == 2.0
+    assert m["gang_link_bytes"] == pytest.approx(gang_link_bytes(jobs[0], 2))
+    assert m["gang_link_mcycles"] == pytest.approx(
+        2 * gang_link_bytes(jobs[0], 2) / 256.0 / 1e6)
+
+
+def test_per_chip_type_utilization_keys_and_range():
+    jobs = _random_jobs(seed=13, n=16, deep_frac=0.25)
+    result = serve.serve_cluster(jobs, chips=MIXED_FLEET, router="hetero")
+    by_type = per_chip_type_utilization(result)
+    assert set(by_type) == {c.name for c in MIXED_FLEET}
+    assert all(0.0 <= u <= 1.0 for u in by_type.values())
+    # the two FLASH dies average into one entry
+    assert len(by_type) == 3 < len(result.chips)
 
 
 # ---------------------------------------------------------------------------

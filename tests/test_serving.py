@@ -363,6 +363,41 @@ def test_aging_respects_strictly_higher_priority_shallow():
 
 
 # ---------------------------------------------------------------------------
+# deep_coop: swift clusters join deep gangs
+# ---------------------------------------------------------------------------
+
+
+def test_deep_coop_strictly_reduces_deep_p99():
+    """FlashPolicy(deep_coop=True) on a deep-only stream: every deep job's
+    gang also recruits the swift clusters through the L3 transpose, so the
+    deep tail strictly improves vs the paper's boot-only gang."""
+    rows = [("lstm", i * 4_000_000, 0) if i % 2 == 0
+            else ("logreg", i * 4_000_000, 0) for i in range(6)]
+    jobs = serve.trace_jobs(rows)
+    base = serve.serve(jobs, H.FLASH_FHE)
+    coop = serve.serve(jobs, H.FLASH_FHE,
+                       policy=serve.FlashPolicy(H.FLASH_FHE, deep_coop=True))
+    mb, mc = serve.summarize(base), serve.summarize(coop)
+    assert mc["latency_p99_deep_cycles"] < mb["latency_p99_deep_cycles"]
+    # per-job: coop is never slower, and the lane label names the mode
+    for b, c in zip(base.jobs, coop.jobs):
+        assert c.service_cycles < b.service_cycles
+        assert "deep-coop" in c.lanes
+
+
+def test_deep_coop_leaves_shallow_service_unchanged():
+    """The coop flag only re-prices deep gangs — shallow jobs still run on
+    their single affiliation with identical service time."""
+    jobs = serve.trace_jobs([("matmul", i * 200_000, 0) for i in range(4)])
+    base = serve.serve(jobs, H.FLASH_FHE)
+    coop = serve.serve(jobs, H.FLASH_FHE,
+                       policy=serve.FlashPolicy(H.FLASH_FHE, deep_coop=True))
+    for b, c in zip(base.jobs, coop.jobs):
+        assert c.service_cycles == b.service_cycles
+        assert c.completion == b.completion
+
+
+# ---------------------------------------------------------------------------
 # core.scheduler compatibility wrapper
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,106 @@
+"""Docs smoke: execute every fenced ``python`` snippet in README.md and
+docs/*.md, and check that intra-repo markdown links resolve.
+
+Every snippet runs in a fresh namespace with the repo's ``src/`` on
+``sys.path`` and the legacy-shim ``DeprecationWarning``s promoted to errors
+(the same ``repro.fhe`` message filter the deprecation-smoke CI job uses), so
+documentation can neither rot against the API nor quietly teach the
+deprecated surface.  Snippets must therefore be self-contained and fast —
+that is a feature: every example a reader copies actually runs.
+
+Link checking covers relative ``[text](path)`` targets: the target (anchor
+stripped) must exist on disk.  Targets that escape the repository root (the
+README's ``../../actions`` CI-badge idiom resolves only on GitHub) and
+absolute URLs are skipped.
+
+    PYTHONPATH=src python tools/docs_smoke.py            # all docs
+    PYTHONPATH=src python tools/docs_smoke.py README.md  # one file
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+import time
+import warnings
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.MULTILINE | re.DOTALL)
+# [text](target) — but not ![image](...) captures too; images are links too,
+# and inline code/URLs with parens are rare enough to keep the regex simple
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files(argv: list[str]) -> list[Path]:
+    if argv:
+        return [REPO / a for a in argv]
+    return [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+
+
+def extract_snippets(text: str) -> list[tuple[int, str]]:
+    """(starting line number, source) for every ```python fenced block."""
+    out = []
+    for m in FENCE_RE.finditer(text):
+        line = text.count("\n", 0, m.start()) + 2  # code starts after fence
+        out.append((line, m.group(1)))
+    return out
+
+
+def run_snippet(path: Path, line: int, src: str) -> str | None:
+    """Execute one snippet; returns an error string or None."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings("error", message=r"repro\.fhe",
+                                category=DeprecationWarning)
+        try:
+            code = compile(src, f"{path.name}:{line}", "exec")
+            exec(code, {"__name__": f"docs_smoke_{path.stem}_{line}"})
+        except Exception as e:  # noqa: BLE001 — report, don't crash the runner
+            return f"{type(e).__name__}: {e}"
+    return None
+
+
+def check_links(path: Path, text: str) -> list[str]:
+    errors = []
+    for m in LINK_RE.finditer(text):
+        target = m.group(1).split("#", 1)[0]
+        if not target or target.startswith(("http://", "https://", "mailto:")):
+            continue
+        resolved = (path.parent / target).resolve()
+        if not resolved.is_relative_to(REPO):
+            continue  # e.g. the ../../actions CI-badge path, valid on GitHub only
+        if not resolved.exists():
+            line = text.count("\n", 0, m.start()) + 1
+            errors.append(f"{path.name}:{line}: broken link -> {m.group(1)}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    sys.path.insert(0, str(REPO / "src"))
+    failures: list[str] = []
+    n_snippets = 0
+    for path in doc_files(argv):
+        if not path.exists():
+            failures.append(f"{path}: file not found")
+            continue
+        text = path.read_text()
+        failures.extend(check_links(path, text))
+        for line, src in extract_snippets(text):
+            n_snippets += 1
+            t0 = time.perf_counter()
+            err = run_snippet(path, line, src)
+            status = "FAIL" if err else "ok"
+            print(f"[docs-smoke] {path.relative_to(REPO)}:{line} "
+                  f"{status} ({time.perf_counter() - t0:.1f}s)")
+            if err:
+                failures.append(f"{path.name}:{line}: {err}")
+    for f in failures:
+        print(f"[docs-smoke] FAIL — {f}", file=sys.stderr)
+    if not failures:
+        print(f"[docs-smoke] {n_snippets} snippets executed, all links resolve")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -84,6 +84,21 @@ def emit_serving(emit, smoke: bool) -> None:
     emit("serving.claim_flash_beats_craterlake", int(not failures))
 
 
+def emit_multischeme(emit, smoke: bool) -> None:
+    """Mixed CKKS+BGV serving: per-(scenario, chip) SLOs + the scheme gates."""
+    from . import multischeme_bench
+
+    rows = multischeme_bench.run(smoke=smoke)
+    for r in rows:
+        prefix = f"multischeme.{r['scenario']}.{r['chip']}"
+        for key in ("n_ckks", "n_bgv", "latency_p99_shallow_cycles",
+                    "latency_p99_cycles", "makespan_mcycles", "util_mean",
+                    "n_preemptions"):
+            emit(f"{prefix}.{key}", r[key])
+    failures = multischeme_bench.check_paper_claim(rows)
+    emit("multischeme.claim_flash_beats_craterlake", int(not failures))
+
+
 def emit_cluster(emit, smoke: bool) -> None:
     """Fleet scale-out + heterogeneous/gang scenarios: throughput/p99 per
     (scenario, fleet, router, chips, gang) row, plus the four gates."""
@@ -168,6 +183,7 @@ def main(argv=None) -> None:
                          "+ a small hoisted-rotation group row (the N=2^14 "
                          "CtS-stage GATES run only in benchmarks.hoisting_bench) "
                          "+ fleet scale-out/hetero/gang smoke (all four cluster "
+                         "gates enforced) + mixed CKKS/BGV serving smoke (scheme "
                          "gates enforced)")
     ap.add_argument("--out", default=None, help="also write CSV rows to this file")
     ap.add_argument("--iters", type=int, default=3, help="timing iterations per config")
@@ -179,6 +195,7 @@ def main(argv=None) -> None:
         emit_fusedks(emit, smoke=args.smoke, iters=args.iters)
         emit_hoisting(emit, smoke=args.smoke, iters=args.iters)
         emit_cluster(emit, smoke=args.smoke)
+        emit_multischeme(emit, smoke=args.smoke)
         if not args.smoke:
             emit_paper_figs(emit)
             emit_serving(emit, smoke=False)

@@ -66,7 +66,11 @@ def _ws(n: int, limbs: int, fused: bool) -> list[Instr]:
     return [I("STORE_WS", n, limbs), I("LOAD_WS", n, limbs)]
 
 
-def key_switch(pp: PlanParams, level: int, fused: bool = True) -> list[Instr]:
+def key_switch_accumulate(pp: PlanParams, level: int, fused: bool = True) -> list[Instr]:
+    """Stages 1–4 of a key switch (digit decompose + KSK MAC), before ModDown.
+
+    Mirrors ``repro.fhe.keyswitch.key_switch_accumulate`` — the seam BGV's
+    t-wrapped relinearisation shares with the CKKS pipeline."""
     n = pp.n
     beta = pp.beta(level)
     nq = level + 1
@@ -84,8 +88,11 @@ def key_switch(pp: PlanParams, level: int, fused: bool = True) -> list[Instr]:
         out += [I("PMULT", n, 2 * ext, mac=True, fused=fused)]  # ksk MAC rides the NTT exit
         out += _ws(n, 2 * ext, fused)
         out += [I("PADD", n, 2 * ext, mac=True, fused=fused)]   # when the chip fuses it
-    out += mod_down(pp, level, fused) * 2
     return out
+
+
+def key_switch(pp: PlanParams, level: int, fused: bool = True) -> list[Instr]:
+    return key_switch_accumulate(pp, level, fused) + mod_down(pp, level, fused) * 2
 
 
 def mod_up(pp: PlanParams, level: int, fused: bool = True) -> list[Instr]:
@@ -164,6 +171,46 @@ def hmul(pp: PlanParams, level: int, rescale_after: bool = True, fused: bool = T
     out += [I("PADD", n, 2 * nq)]
     if rescale_after:
         out += rescale(pp, level)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# BGV expansions (mirror repro.fhe.bgv exactly)
+# ---------------------------------------------------------------------------
+
+
+def bgv_relin(pp: PlanParams, level: int, fused: bool = True) -> list[Instr]:
+    """BGV relinearisation: the shared key-switch accumulate with the ModDown
+    wrapped in the t-scaling sandwich (``repro.fhe.bgv._relin``): one t^{-1}
+    pre-twist PMULT per accumulator over the extended basis, the unchanged
+    ModDown pair, one t post-twist PMULT per component over the active basis."""
+    n, nq = pp.n, level + 1
+    ext = nq + pp.alpha
+    out = key_switch_accumulate(pp, level, fused)
+    out += [I("PMULT", n, ext)] * 2          # t^{-1} pre-twist, both accumulators
+    out += mod_down(pp, level, fused) * 2
+    out += [I("PMULT", n, nq)] * 2           # t post-twist, both components
+    return out
+
+
+def bgv_mod_switch(pp: PlanParams, level: int) -> list[Instr]:
+    """BGV modulus switch (``repro.fhe.bgv._mod_switch``): the CKKS rescale
+    dataflow plus one single-limb PMULT per component for the t^{-1} twist of
+    the dropped limb."""
+    n, lv = pp.n, level
+    one = [I("INTT", n, 1), I("PMULT", n, 1), I("NTT", n, lv),
+           I("PSUB", n, lv, mac=True), I("PMULT", n, lv, mac=True)]
+    return one * 2  # c0 and c1
+
+
+def bgv_hmul(pp: PlanParams, level: int, mod_switch_after: bool = True,
+             fused: bool = True) -> list[Instr]:
+    n, nq = pp.n, level + 1
+    out = [I("PMULT", n, 4 * nq), I("PADD", n, nq)]
+    out += bgv_relin(pp, level, fused)
+    out += [I("PADD", n, 2 * nq)]
+    if mod_switch_after:
+        out += bgv_mod_switch(pp, level)
     return out
 
 
@@ -533,6 +580,38 @@ def _w_resnet20(pp: PlanParams, mode: str) -> list[Instr]:
     return out
 
 
+def _w_psi(pp: PlanParams, mode: str) -> list[Instr]:
+    """Private set intersection (BGV, t=2): 32-bit identifiers bit-packed into
+    slots.  XNOR bit-equality is additive over GF(2) (1 + a + b — PADDs only);
+    the log-depth AND-tree is the multiplicative core; per-bin plaintext masks
+    aggregate the matches."""
+    out: list[Instr] = []
+    lvl = pp.L
+    key_bits = 32
+    for _ in range(key_bits):  # XNOR layer: one ct add per bit position
+        out += add_ct(pp, lvl)
+    for _ in range(int(math.log2(key_bits))):  # AND-tree: depth log2(bits)
+        out += bgv_hmul(pp, lvl, fused=_plan_fused())
+        lvl -= 1
+    for _ in range(16):  # per-bin mask-and-aggregate (no level cost)
+        out += mul_plain(pp, lvl, rescale_after=False, mode=mode) + add_ct(pp, lvl)
+    return out
+
+
+def _w_exact_count(pp: PlanParams, mode: str) -> list[Instr]:
+    """Exact-count aggregation (BGV, t=2^16): two predicate products (range /
+    one-hot filters), then 64 groups of plaintext mask-and-accumulate — exact
+    16-bit counters, no approximation error to budget for."""
+    out: list[Instr] = []
+    lvl = pp.L
+    for _ in range(2):
+        out += bgv_hmul(pp, lvl, fused=_plan_fused())
+        lvl -= 1
+    for _ in range(64):
+        out += mul_plain(pp, lvl, rescale_after=False, mode=mode) + add_ct(pp, lvl)
+    return out
+
+
 def _w_packed_bootstrap(pp: PlanParams, mode: str) -> list[Instr]:
     """Paper §6.1: exhaust L then refresh — the bootstrap stream itself."""
     out: list[Instr] = []
@@ -550,6 +629,8 @@ _WORKLOADS = {
     "lola_mnist_plain": lambda pp, m: _w_lola_mnist(pp, m, encrypted_weights=False),
     "lola_mnist_enc": lambda pp, m: _w_lola_mnist(pp, m, encrypted_weights=True),
     "lola_cifar_plain": _w_lola_cifar,
+    "psi": _w_psi,
+    "exact_count": _w_exact_count,
     "logreg": _w_logreg,
     "lstm": _w_lstm,
     "resnet20": _w_resnet20,

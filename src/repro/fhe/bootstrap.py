@@ -18,7 +18,8 @@ a0 = Re(A0·z), a1 = Re(A1·z) with A{0,1} = (2/N)·E{0,1}^H.  EvalMod applies
 coefficients); *how* to execute comes from an ``FheContext``:
 ``fhe_ctx.bootstrap(bctx, ct)`` is the primary API, with the policy choosing
 the key-switch pipeline and whether CtS/StC baby groups hoist.  The
-``backend=``/``hoisting=``-kwarg free functions are deprecated shims.
+``backend=``/``hoisting=``-kwarg free functions were retired
+(docs/context_api.md).
 """
 
 from __future__ import annotations
@@ -205,44 +206,24 @@ def _bootstrap(fc, bctx: BootstrapContext, ct: ops.Ciphertext,
 
 
 # ---------------------------------------------------------------------------
-# deprecated free-function shims
+# retired free-function shims (docs/context_api.md retirement plan, step 3):
+# names stay resolvable for one more PR, raising with the migration hint.
 # ---------------------------------------------------------------------------
 
-
-def _warn_deprecated(name: str, repl: str | None = None) -> None:
-    ops._warn_deprecated(name, repl, module="repro.fhe.bootstrap", stacklevel=4)
-
-
-def _shim_fc(ctx: BootstrapContext, backend: str, hoisting: str = "auto"):
-    return ops._shim_ctx(ctx.params, backend, ctx.keys, hoisting)
-
-
-def mod_raise(ctx: BootstrapContext, ct: ops.Ciphertext, backend: str = "auto") -> ops.Ciphertext:
-    _warn_deprecated("mod_raise")
-    return _mod_raise(_shim_fc(ctx, backend), ctx, ct)
+_RETIRED = {
+    "bootstrap": "ctx.bootstrap(bctx, ct)",
+    "mod_raise": "ctx.mod_raise(bctx, ct)",
+    "coeff_to_slot": "ctx.coeff_to_slot(bctx, ct)",
+    "eval_mod": "ctx.eval_mod(bctx, ct, coeff_scale)",
+    "slot_to_coeff": "ctx.slot_to_coeff(bctx, a0, a1)",
+}
 
 
-def coeff_to_slot(ctx: BootstrapContext, ct: ops.Ciphertext, backend: str = "auto",
-                  hoisting: str = "auto") -> tuple[ops.Ciphertext, ops.Ciphertext]:
-    _warn_deprecated("coeff_to_slot")
-    return _coeff_to_slot(_shim_fc(ctx, backend, hoisting), ctx, ct)
-
-
-def eval_mod(ctx: BootstrapContext, ct: ops.Ciphertext, coeff_scale: float,
-             backend: str = "auto") -> ops.Ciphertext:
-    _warn_deprecated("eval_mod")
-    return _eval_mod(_shim_fc(ctx, backend), ctx, ct, coeff_scale)
-
-
-def slot_to_coeff(ctx: BootstrapContext, a0: ops.Ciphertext, a1: ops.Ciphertext,
-                  backend: str = "auto", hoisting: str = "auto") -> ops.Ciphertext:
-    _warn_deprecated("slot_to_coeff")
-    return _slot_to_coeff(_shim_fc(ctx, backend, hoisting), ctx, a0, a1)
-
-
-def bootstrap(
-    ctx: BootstrapContext, ct: ops.Ciphertext, post_scale: float | None = None,
-    backend: str = "auto", hoisting: str = "auto",
-) -> ops.Ciphertext:
-    _warn_deprecated("bootstrap")
-    return _bootstrap(_shim_fc(ctx, backend, hoisting), ctx, ct, post_scale)
+def __getattr__(name: str):
+    if name in _RETIRED:
+        raise AttributeError(
+            f"repro.fhe.bootstrap.{name}() was removed; use {_RETIRED[name]} on "
+            "an FheContext over the BootstrapContext's params/keys "
+            "(see docs/context_api.md)"
+        )
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

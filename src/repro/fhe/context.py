@@ -46,6 +46,7 @@ from typing import Callable
 
 from repro.kernels import dispatch
 
+from . import bgv as _bgv
 from . import bootstrap as _bootstrap
 from . import keyswitch, linear, ops, polyeval
 from .keys import KeySet, SwitchingKey
@@ -58,6 +59,10 @@ HOISTING_MODES = ops.HOISTING_MODES  # ("never", "auto", "always")
 # planned mode — it changes the noise profile, so it must be opted into here
 # rather than through yet another kwarg thread.
 NUMERICS_MODES = ("standard",)
+# Scheme axis: CKKS (approximate complex arithmetic) and BGV (exact integer
+# arithmetic mod t) share the whole RNS/NTT/key-switch substrate but expand to
+# different instruction streams, so the scheme is part of the policy identity.
+SCHEMES = ("ckks", "bgv")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,14 +71,15 @@ class ExecPolicy:
 
     ``policy_key()`` is the canonical cache identity — two policies with equal
     keys are guaranteed to produce identical instruction streams and cycle
-    counts, and distinct (backend, hoisting, numerics) triples never alias.
-    ``dispatch_hook`` is deliberately NOT part of the key (or of equality):
-    observing kernel launches cannot change what is launched.
+    counts, and distinct (scheme, backend, hoisting, numerics) tuples never
+    alias.  ``dispatch_hook`` is deliberately NOT part of the key (or of
+    equality): observing kernel launches cannot change what is launched.
     """
 
     backend: str = "auto"  # kernel pipeline: fused | kernel | staged | ref | auto
     hoisting: str = "auto"  # rotation key-switch shape: never | auto | always
     numerics: str = "standard"  # exactness class (future: double_hoist)
+    scheme: str = "ckks"  # which scheme's op expansions run: ckks | bgv
     dispatch_hook: Callable[[str], None] | None = dataclasses.field(
         default=None, compare=False
     )
@@ -87,17 +93,27 @@ class ExecPolicy:
             raise ValueError(
                 f"unknown numerics mode {self.numerics!r}; available: {NUMERICS_MODES}"
             )
+        if self.scheme not in SCHEMES:
+            raise ValueError(f"unknown scheme {self.scheme!r}; available: {SCHEMES}")
 
     # -- identity -----------------------------------------------------------
 
-    def policy_key(self) -> tuple[str, str, str]:
+    def policy_key(self) -> tuple[str, str, str, str]:
         """Hashable identity for memo keys (serving service times, planner
-        stream caches).  Excludes ``dispatch_hook`` — hooks observe execution,
-        they never change it."""
-        return (self.backend, self.hoisting, self.numerics)
+        stream caches).  The scheme leads: a BGV and a CKKS job with otherwise
+        identical knobs run different op expansions and must never share a
+        cached service time.  Excludes ``dispatch_hook`` — hooks observe
+        execution, they never change it."""
+        return (self.scheme, self.backend, self.hoisting, self.numerics)
 
     def replace(self, **changes) -> "ExecPolicy":
         return dataclasses.replace(self, **changes)
+
+    def for_scheme(self, scheme: str) -> "ExecPolicy":
+        """This policy re-tagged for ``scheme`` (identity when it already
+        matches) — the serving layer derives per-job effective policies this
+        way, so one engine can price mixed CKKS+BGV traffic distinctly."""
+        return self if scheme == self.scheme else dataclasses.replace(self, scheme=scheme)
 
     # -- resolved views -----------------------------------------------------
 
@@ -147,6 +163,13 @@ class FheContext:
     keys: KeySet | None = None
     policy: ExecPolicy = ExecPolicy()
 
+    def __post_init__(self):
+        # The scheme is ground truth on the params (plain_modulus set ⇔ BGV);
+        # the policy's scheme tag is derived state for cache identity.  Align
+        # it here so ``ctx.policy_key()`` is correctly scheme-tagged without
+        # every construction site having to thread ``scheme=`` by hand.
+        object.__setattr__(self, "policy", self.policy.for_scheme(self.params.scheme))
+
     # -- derivation ---------------------------------------------------------
 
     def with_policy(self, policy: ExecPolicy | None = None, **changes) -> "FheContext":
@@ -163,10 +186,16 @@ class FheContext:
     def with_keys(self, keys: KeySet) -> "FheContext":
         return dataclasses.replace(self, keys=keys)
 
-    def policy_key(self) -> tuple[str, str, str]:
+    def policy_key(self) -> tuple[str, str, str, str]:
         return self.policy.policy_key()
 
     # -- resolved execution knobs (used by the impl layer) ------------------
+
+    @property
+    def scheme(self) -> str:
+        """The scheme this context evaluates ("ckks" or "bgv") — always equal
+        to ``params.scheme`` (aligned at construction)."""
+        return self.policy.scheme
 
     @property
     def backend(self) -> str:
@@ -189,7 +218,9 @@ class FheContext:
     # -- encode / encrypt / decrypt -----------------------------------------
 
     @_hooked
-    def encode(self, z, level: int | None = None, scale: float | None = None) -> "ops.Plaintext":
+    def encode(self, z, level: int | None = None, scale: float | None = None):
+        if self.scheme == "bgv":
+            return _bgv._encode(self, z, level)
         return ops._encode(self, z, level, scale)
 
     @_hooked
@@ -197,34 +228,48 @@ class FheContext:
         return ops._encode_const(self, c, level, scale)
 
     @_hooked
-    def decode(self, pt: "ops.Plaintext"):
+    def decode(self, pt):
+        if self.scheme == "bgv":
+            return _bgv._decode(self, pt)
         return ops._decode(self, pt)
 
     @_hooked
-    def encrypt(self, pt: "ops.Plaintext", seed: int = 17) -> "ops.Ciphertext":
+    def encrypt(self, pt, seed: int = 17):
+        if self.scheme == "bgv":
+            return _bgv._encrypt(self, self.require_keys().pk, pt, seed)
         return ops._encrypt(self, self.require_keys().pk, pt, seed)
 
     @_hooked
-    def decrypt(self, ct: "ops.Ciphertext") -> "ops.Plaintext":
+    def decrypt(self, ct):
+        if self.scheme == "bgv":
+            return _bgv._decrypt(self, self.require_keys().sk, ct)
         return ops._decrypt(self, self.require_keys().sk, ct)
 
     @_hooked
-    def decrypt_decode(self, ct: "ops.Ciphertext"):
+    def decrypt_decode(self, ct):
         sk = self.require_keys().sk
+        if self.scheme == "bgv":
+            return _bgv._decode(self, _bgv._decrypt(self, sk, ct))
         return ops._decode(self, ops._decrypt(self, sk, ct))
 
     # -- additive ops -------------------------------------------------------
 
     @_hooked
     def add(self, a, b):
+        if self.scheme == "bgv":
+            return _bgv._add(self, a, b)
         return ops._add(self, a, b)
 
     @_hooked
     def sub(self, a, b):
+        if self.scheme == "bgv":
+            return _bgv._sub(self, a, b)
         return ops._sub(self, a, b)
 
     @_hooked
     def negate(self, a):
+        if self.scheme == "bgv":
+            return _bgv._negate(self, a)
         return ops._negate(self, a)
 
     @_hooked
@@ -254,17 +299,34 @@ class FheContext:
 
     @_hooked
     def mul(self, a, b, rlk: SwitchingKey | None = None, rescale_after: bool = True):
+        """Ciphertext-ciphertext multiplication with relinearisation.  Under a
+        BGV context, ``rescale_after`` means "modulus-switch one level down
+        after the product" (the BGV analogue of the CKKS rescale)."""
         rlk = rlk if rlk is not None else self.require_keys().rlk
+        if self.scheme == "bgv":
+            return _bgv._mul(self, a, b, rlk, mod_switch_after=rescale_after)
         return ops._mul(self, a, b, rlk, rescale_after)
 
     @_hooked
     def square(self, a, rlk: SwitchingKey | None = None, rescale_after: bool = True):
         rlk = rlk if rlk is not None else self.require_keys().rlk
+        if self.scheme == "bgv":
+            return _bgv._mul(self, a, a, rlk, mod_switch_after=rescale_after)
         return ops._mul(self, a, a, rlk, rescale_after)
 
     @_hooked
     def rescale(self, ct):
+        if self.scheme == "bgv":
+            raise ValueError("BGV has no rescale; use ctx.mod_switch(ct) instead")
         return ops._rescale(self, ct)
+
+    @_hooked
+    def mod_switch(self, ct):
+        """BGV modulus switch: drop the last chain prime, preserving the
+        message mod t exactly (q_ℓ ≡ 1 mod t on the shared chain)."""
+        if self.scheme != "bgv":
+            raise ValueError("mod_switch is a BGV op; use ctx.rescale for CKKS")
+        return _bgv._mod_switch(self, ct)
 
     # -- rotations / conjugation --------------------------------------------
 

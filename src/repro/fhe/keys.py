@@ -76,12 +76,19 @@ def keygen(params: CkksParams, seed: int = 0, h: int | None = None) -> SecretKey
     return SecretKey(s_coeff=s, s_eval=s_eval)
 
 
+def _err_scale(params: CkksParams) -> int:
+    """Error multiplier for key material: BGV keys carry t·e errors (message in
+    the low-order bits), CKKS keys plain e."""
+    return int(params.plain_modulus) if params.plain_modulus is not None else 1
+
+
 def pkgen(params: CkksParams, sk: SecretKey, seed: int = 1) -> PublicKey:
     rng = np.random.default_rng(seed)
     qp = params.q_primes
     idx = poly.q_idx(params, params.L)
     a = jnp.asarray(_uniform_rns(rng, qp, params.n))
-    e = poly.to_eval(poly.to_rns_signed(poly.sample_gaussian(rng, params.n), qp), params, idx)
+    e_coeff = _err_scale(params) * poly.sample_gaussian(rng, params.n)
+    e = poly.to_eval(poly.to_rns_signed(e_coeff, qp), params, idx)
     s_q = sk.s_eval[: params.L + 1]
     from repro.kernels.modops import ops as mo
 
@@ -121,9 +128,8 @@ def kskgen(params: CkksParams, sk: SecretKey, s_prime_eval: jnp.ndarray, seed: i
         pfj_limbs = np.array([PFj % int(p) for p in all_primes], np.uint64)
 
         a = jnp.asarray(_uniform_rns(rng, all_primes, n))
-        e = poly.to_eval(
-            poly.to_rns_signed(poly.sample_gaussian(rng, n), all_primes), params, idx_full
-        )
+        e_coeff = _err_scale(params) * poly.sample_gaussian(rng, n)
+        e = poly.to_eval(poly.to_rns_signed(e_coeff, all_primes), params, idx_full)
         # b = -a·s + e + PFj·s'  (eval domain, per limb)
         asq = mo.pointwise_mulmod(a, sk.s_eval, qs, backend="ref")
         pf = mo.pointwise_mulmod(

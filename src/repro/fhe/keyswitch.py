@@ -196,6 +196,20 @@ def key_switch_selected(d_eval, params: CkksParams, level: int, ksk_sel, backend
     The rotation path hands in σ_t^{-1}-pre-permuted Galois keys here (see
     ``hoisted_ksk``) so the standard and hoisted pipelines run the *same*
     per-digit math and stay bit-exact against each other."""
+    acc0, acc1 = key_switch_accumulate(d_eval, params, level, ksk_sel, backend)
+    return mod_down_pair(acc0, acc1, params, level, backend)
+
+
+def key_switch_accumulate(d_eval, params: CkksParams, level: int, ksk_sel,
+                          backend: str = "auto"):
+    """Stages 1–4 of a key switch: decompose d into digits and MAC against the
+    key, returning both raw accumulators (eval domain, extended basis Q∪P)
+    *before* ModDown.
+
+    This seam exists so BGV relinearisation (``repro.fhe.bgv``) can wrap the
+    shared ModDown in its t-scaling sandwich; the CKKS path goes straight to
+    ``mod_down_pair``.
+    """
     pipeline, stage = resolve_pipeline(backend)
     n = params.n
     beta = params.beta(level)
@@ -209,10 +223,7 @@ def key_switch_selected(d_eval, params: CkksParams, level: int, ksk_sel, backend
     if pipeline == "fused":
         # stages 2–4 for all β digits and both key components: ONE launch
         _record_fused_digits(params, level)
-        acc0, acc1 = fused_ops.key_switch_digits(
-            d_coeff, ksk_sel, params, level, backend="kernel"
-        )
-        return mod_down_pair(acc0, acc1, params, level, backend)
+        return fused_ops.key_switch_digits(d_coeff, ksk_sel, params, level, backend="kernel")
 
     acc0 = jnp.zeros((m, n), jnp.uint32)
     acc1 = jnp.zeros((m, n), jnp.uint32)
@@ -235,10 +246,7 @@ def key_switch_selected(d_eval, params: CkksParams, level: int, ksk_sel, backend
         trace.record("PADD", n, 2 * m, mac=True)
         acc0 = mo.pointwise_addmod(acc0, t0, ext_primes, backend=stage)
         acc1 = mo.pointwise_addmod(acc1, t1, ext_primes, backend=stage)
-
-    ks0 = mod_down(acc0, params, level, backend)
-    ks1 = mod_down(acc1, params, level, backend)
-    return ks0, ks1
+    return acc0, acc1
 
 
 # ---------------------------------------------------------------------------

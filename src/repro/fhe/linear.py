@@ -11,8 +11,9 @@ Execution policy comes from ``repro.fhe.context.FheContext`` —
 ``ctx.apply_bsgs``/``ctx.plan_matrix`` are the primary API, and
 ``plan_matrix`` picks the baby-step count n1 from a hoisting-aware cost model
 (under hoisting, baby steps are nearly free — see ``choose_n1``).  The
-module-level free functions taking ``backend=``/``hoisting=`` kwargs are
-deprecated shims that delegate to an equivalent context.
+deprecated module-level free functions taking ``backend=``/``hoisting=``
+kwargs were retired (docs/context_api.md); only the pure planning helpers
+remain at module level.
 """
 
 from __future__ import annotations
@@ -23,7 +24,6 @@ import math
 import numpy as np
 
 from . import ops
-from .keys import KeySet
 from .params import CkksParams
 
 
@@ -221,51 +221,24 @@ def _imag_part(ctx, ct: ops.Ciphertext) -> ops.Ciphertext:
 
 
 # ---------------------------------------------------------------------------
-# deprecated free-function shims
+# retired free-function shims (docs/context_api.md retirement plan, step 3):
+# the deprecated kwarg-threading entry points were deleted; the stub below
+# keeps the old names resolvable for ONE more PR, raising with the migration
+# hint instead of silently delegating.
 # ---------------------------------------------------------------------------
 
-
-def _warn_deprecated(name: str, repl: str | None = None) -> None:
-    ops._warn_deprecated(name, repl, module="repro.fhe.linear", stacklevel=4)
-
-
-def apply_bsgs(
-    params: CkksParams,
-    ct: ops.Ciphertext,
-    plan: BsgsPlan,
-    keys: KeySet,
-    scale: float | None = None,
-    backend: str = "auto",
-    hoisting: str = "auto",
-) -> ops.Ciphertext:
-    _warn_deprecated("apply_bsgs")
-    return _apply_bsgs(ops._shim_ctx(params, backend, keys, hoisting), ct, plan, scale)
+_RETIRED = {
+    "apply_bsgs": "ctx.apply_bsgs(ct, plan)",
+    "apply_bsgs_pair": "ctx.apply_bsgs_pair(ct, plans)",
+    "real_part": "ctx.real_part(ct)",
+    "imag_part": "ctx.imag_part(ct)",
+}
 
 
-def apply_bsgs_pair(
-    params: CkksParams,
-    ct: ops.Ciphertext,
-    plans: tuple[BsgsPlan, BsgsPlan],
-    keys: KeySet,
-    scale: float | None = None,
-    backend: str = "auto",
-    hoisting: str = "auto",
-) -> tuple[ops.Ciphertext, ops.Ciphertext]:
-    """Two transforms of the same input sharing the baby rotations."""
-    # (simple composition; baby-step sharing is an optimisation the scheduler
-    # models — numerically we just apply twice)
-    _warn_deprecated("apply_bsgs_pair")
-    ctx = ops._shim_ctx(params, backend, keys, hoisting)
-    return (_apply_bsgs(ctx, ct, plans[0], scale), _apply_bsgs(ctx, ct, plans[1], scale))
-
-
-def real_part(params: CkksParams, ct: ops.Ciphertext, keys: KeySet,
-              backend: str = "auto") -> ops.Ciphertext:
-    _warn_deprecated("real_part")
-    return _real_part(ops._shim_ctx(params, backend, keys), ct)
-
-
-def imag_part(params: CkksParams, ct: ops.Ciphertext, keys: KeySet,
-              backend: str = "auto") -> ops.Ciphertext:
-    _warn_deprecated("imag_part")
-    return _imag_part(ops._shim_ctx(params, backend, keys), ct)
+def __getattr__(name: str):
+    if name in _RETIRED:
+        raise AttributeError(
+            f"repro.fhe.linear.{name}() was removed; use {_RETIRED[name]} on an "
+            "FheContext (see docs/context_api.md)"
+        )
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

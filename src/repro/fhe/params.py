@@ -45,6 +45,27 @@ class CkksParams:
     q_primes: tuple[int, ...]  # len L+1
     p_primes: tuple[int, ...]  # len alpha
     security_bits: int = 128
+    # BGV plaintext modulus t, or None for CKKS.  Restricted to powers of two
+    # dividing 2·N_MAX = 2^17: every master-chain prime satisfies q ≡ 1
+    # (mod 2^17), hence q ≡ 1 (mod t) and P ≡ 1 (mod t) — modulus switching
+    # and key switching then preserve the message mod t with no scale-factor
+    # bookkeeping (see repro.fhe.bgv).
+    plain_modulus: int | None = None
+
+    def __post_init__(self):
+        t = self.plain_modulus
+        if t is not None:
+            if t < 2 or (t & (t - 1)) or (2 * N_MAX) % t:
+                raise ValueError(
+                    f"plain_modulus {t} must be a power of two dividing 2^17 "
+                    "(so every chain prime is ≡ 1 mod t)"
+                )
+
+    @property
+    def scheme(self) -> str:
+        """Which scheme these params encode for: "bgv" iff a plaintext modulus
+        is set, "ckks" otherwise."""
+        return "bgv" if self.plain_modulus is not None else "ckks"
 
     @property
     def alpha(self) -> int:
@@ -108,8 +129,13 @@ def make_params(
     scale_bits: int = DEFAULT_SCALE_BITS,
     security_bits: int = 128,
     check_security: bool = True,
+    plain_modulus: int | None = None,
 ) -> CkksParams:
-    """Build a parameter set: L+1 chain primes + α = ⌈(L+1)/dnum⌉ special primes."""
+    """Build a parameter set: L+1 chain primes + α = ⌈(L+1)/dnum⌉ special primes.
+
+    ``plain_modulus`` selects BGV over the same RNS tower (see
+    ``CkksParams.scheme``); leave it ``None`` for CKKS.
+    """
     alpha = -(-(L + 1) // dnum)
     chain = master_chain(L + 1 + alpha)
     p = CkksParams(
@@ -120,6 +146,7 @@ def make_params(
         q_primes=chain[: L + 1],
         p_primes=chain[L + 1 : L + 1 + alpha],
         security_bits=security_bits,
+        plain_modulus=plain_modulus,
     )
     if check_security and not p.check_security():
         raise ValueError(
@@ -134,17 +161,25 @@ def make_params(
 # ---------------------------------------------------------------------------
 
 
-def _preset(n_log2: int, L: int, dnum: int, kind: str, sec: int = 128, check: bool = True) -> dict:
-    return dict(n=1 << n_log2, L=L, dnum=dnum, kind=kind, sec=sec, check=check)
+def _preset(n_log2: int, L: int, dnum: int, kind: str, sec: int = 128, check: bool = True,
+            t: int | None = None) -> dict:
+    return dict(n=1 << n_log2, L=L, dnum=dnum, kind=kind, sec=sec, check=check,
+                scheme="bgv" if t is not None else "ckks", t=t)
 
 
 WORKLOAD_PRESETS: dict[str, dict] = {
-    # --- shallow: 80-bit security (paper §6.3) ---
+    # --- shallow CKKS: 80-bit security (paper §6.3) ---
     "matmul": _preset(13, 2, 3, "shallow", sec=80),  # Fig 1a sweet spot N=2^13
     "dblookup": _preset(14, 8, 3, "shallow", sec=80),  # Fig 1b sweet spot N=2^14
     "lola_mnist_plain": _preset(13, 6, 3, "shallow", sec=80),  # §6.1: L=6
     "lola_mnist_enc": _preset(13, 6, 3, "shallow", sec=80),
     "lola_cifar_plain": _preset(13, 7, 4, "shallow", sec=80),  # §6.1: L=7
+    # --- shallow BGV: exact integer workloads (APACHE-style mixed deployments).
+    #     psi: private set intersection — depth-log equality circuits over
+    #     binary-packed identifiers (t=2); exact_count: private aggregation
+    #     with 16-bit exact counters (t=2^16).  Both ride swift clusters.
+    "psi": _preset(13, 6, 3, "shallow", sec=80, t=2),
+    "exact_count": _preset(13, 4, 3, "shallow", sec=80, t=1 << 16),
     # --- deep: 128-bit; L matches the paper so limb counts (the perf driver)
     #     match; the two check=False chains exceed the budget only because of
     #     our wider 30-bit words (see module docstring).
@@ -156,14 +191,20 @@ WORKLOAD_PRESETS: dict[str, dict] = {
 
 SHALLOW_WORKLOADS = tuple(k for k, v in WORKLOAD_PRESETS.items() if v["kind"] == "shallow")
 DEEP_WORKLOADS = tuple(k for k, v in WORKLOAD_PRESETS.items() if v["kind"] == "deep")
+BGV_WORKLOADS = tuple(k for k, v in WORKLOAD_PRESETS.items() if v["scheme"] == "bgv")
 
 
 def workload_params(name: str) -> CkksParams:
     cfg = WORKLOAD_PRESETS[name]
     return make_params(
-        cfg["n"], cfg["L"], cfg["dnum"], security_bits=cfg["sec"], check_security=cfg["check"]
+        cfg["n"], cfg["L"], cfg["dnum"], security_bits=cfg["sec"], check_security=cfg["check"],
+        plain_modulus=cfg["t"],
     )
 
 
 def workload_kind(name: str) -> str:
     return WORKLOAD_PRESETS[name]["kind"]
+
+
+def workload_scheme(name: str) -> str:
+    return WORKLOAD_PRESETS[name]["scheme"]

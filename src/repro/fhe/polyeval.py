@@ -18,7 +18,7 @@ the Paterson–Stockmeyer count ~2√d when emitting instruction streams — the
 
 Evaluate through a context: ``ctx.eval_poly(ct, coeffs)`` (or
 ``ctx.chebyshev_basis`` + ``ctx.eval_chebyshev`` to reuse a basis).  The
-``backend=``-kwarg free functions below are deprecated shims.
+``backend=``-kwarg free functions were retired (docs/context_api.md).
 """
 
 from __future__ import annotations
@@ -26,8 +26,6 @@ from __future__ import annotations
 import numpy as np
 
 from . import ops
-from .keys import KeySet
-from .params import CkksParams
 
 
 def chebyshev_fit(f, degree: int, k: float = 1.0) -> np.ndarray:
@@ -82,27 +80,18 @@ class ChebyshevBasis:
 
     Context-first construction: ``ChebyshevBasis(ctx, x, degree)`` (or
     ``ctx.chebyshev_basis(x, degree)``).  The legacy positional form
-    ``ChebyshevBasis(params, x, keys, degree, backend=...)`` still works and
-    builds an equivalent context internally.
+    ``ChebyshevBasis(params, x, keys, degree, backend=...)`` was retired
+    along with the kwarg-threading shims (docs/context_api.md).
     """
 
-    def __init__(self, params_or_ctx, x: ops.Ciphertext, keys_or_degree=None,
-                 degree: int | None = None, backend: str = "auto"):
+    def __init__(self, ctx, x: ops.Ciphertext, degree: int):
         from .context import FheContext
 
-        if isinstance(params_or_ctx, FheContext):
-            ctx = params_or_ctx
-            assert degree is None and isinstance(keys_or_degree, int), (
-                "context form is ChebyshevBasis(ctx, x, degree)"
-            )
-            degree = keys_or_degree
-        else:
-            assert isinstance(keys_or_degree, KeySet) and degree is not None, (
-                "legacy form is ChebyshevBasis(params, x, keys, degree, backend=...)"
-            )
-            ops._warn_deprecated("ChebyshevBasis", "chebyshev_basis",
-                                 module="repro.fhe.polyeval")
-            ctx = ops._shim_ctx(params_or_ctx, backend, keys_or_degree)
+        assert isinstance(ctx, FheContext) and isinstance(degree, int), (
+            "ChebyshevBasis(ctx, x, degree) — the legacy "
+            "(params, x, keys, degree, backend=...) form was removed; build an "
+            "FheContext (see docs/context_api.md)"
+        )
         self.ctx = ctx
         self.params = ctx.params
         self.keys = ctx.keys
@@ -158,29 +147,21 @@ def _eval_chebyshev(ctx, basis: ChebyshevBasis, coeffs: np.ndarray) -> ops.Ciphe
 
 
 # ---------------------------------------------------------------------------
-# deprecated free-function shims
+# retired free-function shims (docs/context_api.md retirement plan, step 3):
+# names stay resolvable for one more PR, raising with the migration hint.
 # ---------------------------------------------------------------------------
 
-
-def _warn_deprecated(name: str, repl: str | None = None) -> None:
-    ops._warn_deprecated(name, repl, module="repro.fhe.polyeval", stacklevel=4)
-
-
-def force_to(params: CkksParams, ct: ops.Ciphertext, level: int, scale: float,
-             backend: str = "auto") -> ops.Ciphertext:
-    _warn_deprecated("force_to")
-    return _force_to(ops._shim_ctx(params, backend), ct, level, scale)
+_RETIRED = {
+    "force_to": "ctx.force_to(ct, level, scale)",
+    "add_any": "ctx.add_any(a, b)",
+    "eval_chebyshev": "ctx.eval_chebyshev(basis, coeffs)",
+}
 
 
-def add_any(params: CkksParams, a: ops.Ciphertext, b: ops.Ciphertext,
-            backend: str = "auto") -> ops.Ciphertext:
-    _warn_deprecated("add_any")
-    return _add_any(ops._shim_ctx(params, backend), a, b)
-
-
-def eval_chebyshev(
-    params: CkksParams, basis: ChebyshevBasis, coeffs: np.ndarray, keys: KeySet,
-    backend: str = "auto",
-) -> ops.Ciphertext:
-    _warn_deprecated("eval_chebyshev")
-    return _eval_chebyshev(ops._shim_ctx(params, backend, keys), basis, coeffs)
+def __getattr__(name: str):
+    if name in _RETIRED:
+        raise AttributeError(
+            f"repro.fhe.polyeval.{name}() was removed; use {_RETIRED[name]} on "
+            "an FheContext (see docs/context_api.md)"
+        )
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

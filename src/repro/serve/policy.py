@@ -46,7 +46,9 @@ Per-job service times come from the cycle-level simulator
 fused-key-switch accounting composes directly.  Identical
 (chip, workload, kind, ``ExecPolicy.policy_key()``) jobs share one memoised
 ``SimResult`` — the policy key is the canonical identity of the execution
-mode (kernel pipeline, hoisting, numerics).
+mode (scheme, kernel pipeline, hoisting, numerics); each job's policy is
+re-tagged with its scheme (CKKS vs BGV) before keying, so mixed-scheme
+streams never alias cached service times.
 """
 
 from __future__ import annotations
@@ -195,6 +197,10 @@ def job_service_sim(job: FheJob, chip: ChipConfig, hoist: bool = False,
     no policy is given.  Callers must treat the result as read-only.
     """
     policy = policy if policy is not None else exec_policy_from_hoist(hoist)
+    # re-tag the execution policy with the job's scheme (CKKS vs BGV): a mixed
+    # stream prices BGV jobs off their own planner expansions, and the
+    # scheme-leading policy_key keeps the memo entries from aliasing
+    policy = policy.for_scheme(job.scheme)
     coop = bool(deep_coop) and job.kind == "deep" and chip.multi_job
     key = (chip, job.workload, job.kind, policy.policy_key(), coop)
     hit = _SERVICE_MEMO.get(key)

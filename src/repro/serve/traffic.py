@@ -41,6 +41,21 @@ MIXED_MIX: dict[str, float] = {
     "lstm": 0.10,
     "logreg": 0.05,
 }
+# pure exact-arithmetic traffic (BGV presets only)
+BGV_MIX: dict[str, float] = {"psi": 0.55, "exact_count": 0.45}
+# mixed-scheme deployment (APACHE's argument): CKKS inference traffic plus
+# exact integer workloads in one stream — shallow BGV jobs ride the swift
+# clusters alongside shallow CKKS per the paper's affiliation policy
+MULTISCHEME_MIX: dict[str, float] = {
+    "lola_mnist_plain": 0.22,
+    "matmul": 0.18,
+    "psi": 0.20,
+    "exact_count": 0.15,
+    "dblookup": 0.10,
+    "lola_cifar_plain": 0.05,
+    "lstm": 0.07,
+    "logreg": 0.03,
+}
 
 
 def _normalise(weights: Mapping) -> tuple[list, np.ndarray]:

@@ -1,0 +1,280 @@
+"""BGV subsystem: differential correctness against a u64 oracle + identity.
+
+Four contracts pinned here:
+
+  * **oracle parity** — every BGV op (encode/encrypt roundtrip, add/sub/neg,
+    mul+relin+mod-switch chains) is bit-exact mod t against a plain-integer
+    negacyclic-convolution oracle, across plaintext moduli, levels, and both
+    key-switch pipelines (hypothesis-driven);
+  * **backend bit-exactness** — the fused Pallas pipeline and the staged
+    reference produce identical ciphertext limbs (the t-wrap sandwich runs the
+    unmodified ModDown kernels between two pointwise scalings, so this is
+    inherited from the CKKS parity rather than re-proven — pinned anyway);
+  * **policy identity** — the scheme-tagged ``ExecPolicy.policy_key()`` never
+    aliases across (scheme, backend, hoisting, numerics), contexts coerce the
+    policy scheme to the params' ground truth, and the serving service-time
+    memo keys mixed CKKS/BGV jobs distinctly;
+  * **planner parity** — ``core.planner.bgv_hmul``/``bgv_mod_switch`` match
+    the captured execution traces instruction-for-instruction, in both
+    pipelines, so the serving simulator prices BGV off the real dataflow.
+"""
+
+import collections
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hardware as H
+from repro.core import jobs as J
+from repro.core import planner as PL
+from repro.fhe import keys as K
+from repro.fhe import params as P
+from repro.fhe import trace
+from repro.fhe.context import (
+    BACKENDS,
+    HOISTING_MODES,
+    NUMERICS_MODES,
+    SCHEMES,
+    ExecPolicy,
+    FheContext,
+)
+from repro.serve import policy as SP
+
+PIPELINES = ("ref", "fused")  # staged oracle vs fused accelerator pipeline
+
+
+def oracle_mul(a: np.ndarray, b: np.ndarray, n: int, t: int) -> np.ndarray:
+    """Negacyclic convolution mod t — the ring product X^n + 1 induces on
+    coefficient-packed messages (the semantics ``bgv._encode`` documents)."""
+    conv = np.convolve(a.astype(np.int64), b.astype(np.int64))
+    res = np.zeros(n, np.int64)
+    res[: min(n, conv.shape[0])] += conv[:n]
+    wrap = conv[n:]
+    res[: wrap.shape[0]] -= wrap
+    return res % t
+
+
+@pytest.fixture(scope="module", params=(2, 1 << 16), ids=("t=2", "t=2^16"))
+def bgv(request):
+    t = request.param
+    p = P.make_params(1 << 9, 5, 2, check_security=False, plain_modulus=t)
+    ks = K.full_keyset(p, seed=0)
+    return p, ks, FheContext(params=p, keys=ks), t
+
+
+def _msgs(rng: np.random.Generator, n: int, t: int, k: int = 2):
+    return [rng.integers(0, t, size=n).astype(np.int64) for _ in range(k)]
+
+
+# ---------------------------------------------------------------------------
+# oracle parity: encode/encrypt roundtrip and the additive ops
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_encode_decode_roundtrip(bgv, seed):
+    p, _, ctx, t = bgv
+    (z,) = _msgs(np.random.default_rng(seed), p.n, t, k=1)
+    assert np.array_equal(ctx.decode(ctx.encode(z)), z % t)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), backend=st.sampled_from(PIPELINES))
+def test_additive_ops_vs_oracle(bgv, seed, backend):
+    p, _, ctx, t = bgv
+    ctx = ctx.with_policy(backend=backend)
+    rng = np.random.default_rng(seed)
+    za, zb = _msgs(rng, p.n, t)
+    ct_a = ctx.encrypt(ctx.encode(za), seed=seed)
+    ct_b = ctx.encrypt(ctx.encode(zb), seed=seed + 1)
+    assert np.array_equal(ctx.decrypt_decode(ct_a), za % t)
+    assert np.array_equal(ctx.decrypt_decode(ctx.add(ct_a, ct_b)), (za + zb) % t)
+    assert np.array_equal(ctx.decrypt_decode(ctx.sub(ct_a, ct_b)), (za - zb) % t)
+    assert np.array_equal(ctx.decrypt_decode(ctx.negate(ct_a)), (-za) % t)
+
+
+# ---------------------------------------------------------------------------
+# oracle parity: multiplication across levels / pipelines / dnum
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), backend=st.sampled_from(PIPELINES),
+       level=st.sampled_from((5, 4, 2)))
+def test_mul_vs_oracle_across_levels(bgv, seed, backend, level):
+    """One mul (relin + mod switch) starting from every tested level."""
+    p, _, ctx, t = bgv
+    ctx = ctx.with_policy(backend=backend)
+    rng = np.random.default_rng(seed)
+    za, zb = _msgs(rng, p.n, t)
+    ct_a = ctx.encrypt(ctx.encode(za, level=level), seed=seed)
+    ct_b = ctx.encrypt(ctx.encode(zb, level=level), seed=seed + 1)
+    got = ctx.mul(ct_a, ct_b)
+    assert got.level == level - 1  # mod switch dropped exactly one limb
+    assert np.array_equal(ctx.decrypt_decode(got), oracle_mul(za, zb, p.n, t))
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), backend=st.sampled_from(PIPELINES))
+def test_mul_depth2_and_square_vs_oracle(bgv, seed, backend):
+    """(a·b)·c and (a²) — chained products stay exact through the level drops."""
+    p, _, ctx, t = bgv
+    ctx = ctx.with_policy(backend=backend)
+    rng = np.random.default_rng(seed)
+    za, zb, zc = _msgs(rng, p.n, t, k=3)
+    ct_a = ctx.encrypt(ctx.encode(za), seed=seed)
+    ct_b = ctx.encrypt(ctx.encode(zb), seed=seed + 1)
+    ct_c = ctx.encrypt(ctx.encode(zc), seed=seed + 2)
+    ab = oracle_mul(za, zb, p.n, t)
+    got = ctx.mul(ctx.mul(ct_a, ct_b), ct_c)
+    assert np.array_equal(ctx.decrypt_decode(got), oracle_mul(ab, zc, p.n, t))
+    assert np.array_equal(ctx.decrypt_decode(ctx.square(ct_a)),
+                          oracle_mul(za, za, p.n, t))
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), dnum=st.sampled_from((1, 2, 3)))
+def test_mul_vs_oracle_across_dnum(seed, dnum):
+    """The digit count only reshapes the hybrid key switch — never the result."""
+    t = 1 << 8
+    p = P.make_params(1 << 9, 5, dnum, check_security=False, plain_modulus=t)
+    ctx = FheContext(params=p, keys=K.full_keyset(p, seed=0))
+    rng = np.random.default_rng(seed)
+    za, zb = _msgs(rng, p.n, t)
+    ct_a = ctx.encrypt(ctx.encode(za), seed=seed)
+    ct_b = ctx.encrypt(ctx.encode(zb), seed=seed + 1)
+    assert np.array_equal(ctx.decrypt_decode(ctx.mul(ct_a, ct_b)),
+                          oracle_mul(za, zb, p.n, t))
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mul_backends_bitexact(bgv, seed):
+    """Fused and staged pipelines agree on every ciphertext limb, not just the
+    decrypted message — the t-wrap sandwich preserves the CKKS parity."""
+    p, _, ctx, t = bgv
+    rng = np.random.default_rng(seed)
+    za, zb = _msgs(rng, p.n, t)
+    cts = {}
+    for backend in PIPELINES:
+        c = ctx.with_policy(backend=backend)
+        cts[backend] = c.mul(c.encrypt(c.encode(za), seed=seed),
+                             c.encrypt(c.encode(zb), seed=seed + 1))
+    ref, fused = cts["ref"], cts["fused"]
+    assert bool(jnp.array_equal(ref.c0, fused.c0))
+    assert bool(jnp.array_equal(ref.c1, fused.c1))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), backend=st.sampled_from(PIPELINES))
+def test_mod_switch_preserves_message(bgv, seed, backend):
+    p, _, ctx, t = bgv
+    ctx = ctx.with_policy(backend=backend)
+    (z,) = _msgs(np.random.default_rng(seed), p.n, t, k=1)
+    ct = ctx.encrypt(ctx.encode(z), seed=seed)
+    down = ctx.mod_switch(ct)
+    assert down.level == ct.level - 1
+    assert np.array_equal(ctx.decrypt_decode(down), z % t)
+
+
+# ---------------------------------------------------------------------------
+# policy identity: scheme-tagged keys, context coercion, serving memo
+# ---------------------------------------------------------------------------
+
+
+def test_policy_key_no_aliasing_across_schemes():
+    combos = list(itertools.product(SCHEMES, BACKENDS, HOISTING_MODES, NUMERICS_MODES))
+    keys = {ExecPolicy(backend=b, hoisting=h, numerics=m, scheme=s).policy_key()
+            for s, b, h, m in combos}
+    assert len(keys) == len(combos)
+    assert all(k[0] in SCHEMES for k in keys)  # the scheme leads the tuple
+
+
+def test_context_coerces_policy_scheme(bgv):
+    p, ks, ctx, _ = bgv
+    assert ctx.scheme == "bgv" and ctx.policy_key()[0] == "bgv"
+    # a CKKS-tagged policy over BGV params is re-tagged at construction
+    mis = FheContext(params=p, keys=ks, policy=ExecPolicy(scheme="ckks"))
+    assert mis.scheme == "bgv" and mis.policy_key()[0] == "bgv"
+    ckks_p = P.make_params(1 << 9, 5, 2, check_security=False)
+    ckks_ctx = FheContext(params=ckks_p, policy=ExecPolicy(scheme="bgv"))
+    assert ckks_ctx.scheme == "ckks"
+
+
+def test_scheme_op_guards(bgv):
+    p, _, ctx, t = bgv
+    ct = ctx.encrypt(ctx.encode(np.arange(8) % t))
+    with pytest.raises(ValueError, match="mod_switch"):
+        ctx.rescale(ct)
+    ckks_p = P.make_params(1 << 9, 5, 2, check_security=False)
+    ckks_ctx = FheContext(params=ckks_p, keys=K.full_keyset(ckks_p, seed=0))
+    ckks_ct = ckks_ctx.encrypt(ckks_ctx.encode(np.zeros(ckks_p.slots)))
+    with pytest.raises(ValueError, match="BGV op"):
+        ckks_ctx.mod_switch(ckks_ct)
+
+
+def test_preset_scheme_tags_and_job_scheme():
+    for name in P.BGV_WORKLOADS:
+        assert P.workload_scheme(name) == "bgv"
+        assert J.make_job(name).scheme == "bgv"
+    assert J.make_job("lola_mnist_plain").scheme == "ckks"
+
+
+def test_serving_memo_keys_schemes_distinctly():
+    """psi and lola_mnist_plain share (N, L, dnum, kind) — only the scheme in
+    the policy key separates their cached service times from a common default
+    policy, and the BGV job must actually be priced off the BGV expansion."""
+    chip = H.FLASH_FHE
+    pol = ExecPolicy(backend="fused", hoisting="always")
+    r_bgv = SP.job_service_sim(J.make_job("psi"), chip, policy=pol)
+    r_ckks = SP.job_service_sim(J.make_job("lola_mnist_plain"), chip, policy=pol)
+    schemes = {key[3][0] for key in SP._SERVICE_MEMO
+               if key[0] == chip and key[1] in ("psi", "lola_mnist_plain")}
+    assert schemes == {"bgv", "ckks"}
+    assert r_bgv.cycles != r_ckks.cycles  # distinct expansions, distinct prices
+
+
+# ---------------------------------------------------------------------------
+# planner parity: analytic BGV streams == captured execution traces
+# ---------------------------------------------------------------------------
+
+
+def _sig(instrs):
+    """Multiset signature of (op, n, limbs) triples (ignoring meta)."""
+    return collections.Counter((i.op, i.n, i.limbs) for i in instrs)
+
+
+@pytest.mark.parametrize("backend,fused", [("ref", False), ("fused", True)])
+def test_planner_bgv_hmul_matches_execution(bgv, backend, fused):
+    p, _, ctx, t = bgv
+    ctx = ctx.with_policy(backend=backend)
+    rng = np.random.default_rng(11)
+    za, zb = _msgs(rng, p.n, t)
+    ct_a = ctx.encrypt(ctx.encode(za), seed=3)
+    ct_b = ctx.encrypt(ctx.encode(zb), seed=4)
+    with trace.capture_trace() as tr:
+        ctx.mul(ct_a, ct_b)
+    pp = PL.PlanParams.of(p)
+    assert _sig(tr) == _sig(PL.bgv_hmul(pp, p.L, mod_switch_after=True, fused=fused))
+
+
+def test_planner_bgv_mod_switch_matches_execution(bgv):
+    p, _, ctx, t = bgv
+    (z,) = _msgs(np.random.default_rng(7), p.n, t, k=1)
+    ct = ctx.encrypt(ctx.encode(z), seed=5)
+    with trace.capture_trace() as tr:
+        ctx.mod_switch(ct)
+    pp = PL.PlanParams.of(p)
+    assert _sig(tr) == _sig(PL.bgv_mod_switch(pp, p.L))
+
+
+def test_bgv_workload_streams_priced():
+    """The registered BGV presets expand to non-trivial planner streams."""
+    for name in P.BGV_WORKLOADS:
+        st_ = PL.workload_stream(name, P.workload_params(name), mode="hw")
+        assert len(st_) > 10
+        assert any(i.op == "LOAD_KSK" for i in st_)  # relinearisations present

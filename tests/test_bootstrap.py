@@ -11,7 +11,8 @@ import pytest
 from repro.fhe import bootstrap as B
 from repro.fhe import ops
 from repro.fhe import params as P
-from repro.fhe import polyeval, trace
+from repro.fhe import trace
+from repro.fhe.context import FheContext
 
 
 @pytest.fixture(scope="module")
@@ -28,8 +29,9 @@ def boot_result(btctx):
     ct = ops.encrypt(p, ctx.keys.pk, ops.encode(p, z))
     att = 1 / 64.0
     ct = ops.level_drop(ops.mul_const(p, ct, att), 0)
+    fc = FheContext(params=p, keys=ctx.keys)
     with trace.capture_trace() as t:
-        out = B.bootstrap(ctx, ct, post_scale=1 / att)
+        out = fc.bootstrap(ctx, ct, post_scale=1 / att)
     return p, ctx, z, out, list(t)
 
 
@@ -67,8 +69,9 @@ def test_eval_mod_precision(btctx):
     rng = np.random.default_rng(3)
     x = rng.uniform(-0.95, 0.95, size=p.slots)
     xct = ops.encrypt(p, ctx.keys.pk, ops.encode(p, x))
-    basis = polyeval.ChebyshevBasis(p, xct, ctx.keys, ctx.eval_mod_degree)
-    out = polyeval.eval_chebyshev(p, basis, ctx.sine_coeffs, ctx.keys)
+    fc = FheContext(params=p, keys=ctx.keys)
+    basis = fc.chebyshev_basis(xct, ctx.eval_mod_degree)
+    out = fc.eval_chebyshev(basis, ctx.sine_coeffs)
     want = np.polynomial.chebyshev.Chebyshev(ctx.sine_coeffs)(x)
     got = ops.decrypt_decode(p, ctx.keys.sk, out).real
     np.testing.assert_allclose(got, want, atol=1e-3)
@@ -80,7 +83,7 @@ def test_force_to_exactness(btctx):
     rng = np.random.default_rng(11)
     z = rng.normal(size=p.slots) * 0.3
     ct = ops.encrypt(p, ctx.keys.pk, ops.encode(p, z))
-    dropped = polyeval.force_to(p, ct, ct.level - 5, p.scale * 1.01)
+    dropped = FheContext(params=p).force_to(ct, ct.level - 5, p.scale * 1.01)
     assert dropped.level == ct.level - 5
     assert dropped.scale == p.scale * 1.01
     np.testing.assert_allclose(ops.decrypt_decode(p, ctx.keys.sk, dropped), z, atol=2e-3)

@@ -2,13 +2,13 @@
 
 Three contracts pinned here:
 
-  * **shim parity** — every legacy free function in ``fhe.ops``/``fhe.linear``
-    (and the polyeval/bootstrap entry points) is a thin shim over the SAME
-    context-consuming implementation, so context and legacy results are
-    bit-exact across backend × hoisting combinations (hypothesis-driven);
+  * **shim lifecycle** — the surviving ``fhe.ops`` free functions are thin
+    shims over the SAME context-consuming implementation (bit-exact parity,
+    hypothesis-driven, always warning); the retired linear/polyeval/bootstrap
+    tranche raises ``AttributeError`` with the migration hint;
   * **policy identity** — ``ExecPolicy.policy_key()`` distinguishes every
-    (backend, hoisting, numerics) combination, excludes the dispatch hook,
-    and is what keys the serving service-time memo (no mode aliasing);
+    (scheme, backend, hoisting, numerics) combination, excludes the dispatch
+    hook, and is what keys the serving service-time memo (no mode aliasing);
   * **planning** — ``plan_matrix``/``choose_n1`` pick the baby-step count
     from the hoisting-aware cost model (n1 = 16 for the radix-32 CtS stage
     shape the hoisting bench measures, vs the classic √n without hoisting).
@@ -115,8 +115,11 @@ def test_encode_encrypt_decrypt_parity(cset, backend, hoisting):
 @settings(max_examples=6, deadline=None)
 @given(backend=st.sampled_from(("ref", "fused")),
        hoisting=st.sampled_from(HOISTING_MODES))
-def test_apply_bsgs_context_vs_legacy_bitexact(cset, backend, hoisting):
-    p, ks, _, ct_a, _, _, _ = cset
+def test_apply_bsgs_modes_bitexact_and_correct(cset, backend, hoisting):
+    """The linear-transform shims retired; the context path carries the whole
+    contract now: every (backend, hoisting) combination is bit-exact against
+    the reference mode and numerically matches the plain matvec."""
+    p, ks, _, ct_a, _, za, _ = cset
     rng = np.random.default_rng(11)
     m = np.zeros((p.slots, p.slots))
     for d in range(4):
@@ -126,33 +129,44 @@ def test_apply_bsgs_context_vs_legacy_bitexact(cset, backend, hoisting):
     ctx = FheContext(params=p, keys=ks,
                      policy=ExecPolicy(backend=backend, hoisting=hoisting))
     got = ctx.apply_bsgs(ct_a, plan)
-    want = _legacy(linear.apply_bsgs, p, ct_a, plan, ks,
-                   backend=backend, hoisting=hoisting)
-    assert _ct_equal(got, want)
+    base = FheContext(params=p, keys=ks,
+                      policy=ExecPolicy(backend="ref", hoisting="never"))
+    assert _ct_equal(got, base.apply_bsgs(ct_a, plan))
+    np.testing.assert_allclose(np.asarray(ctx.decrypt_decode(got)).real,
+                               m @ za, atol=5e-3)
 
 
-def test_real_imag_part_parity(cset):
-    p, ks, ctx, ct_a, _, _, _ = cset
-    assert _ct_equal(ctx.real_part(ct_a), _legacy(linear.real_part, p, ct_a, ks))
-    assert _ct_equal(ctx.imag_part(ct_a), _legacy(linear.imag_part, p, ct_a, ks))
+def test_real_imag_part_correct(cset):
+    p, _, ctx, ct_a, _, za, _ = cset
+    np.testing.assert_allclose(np.asarray(ctx.decrypt_decode(ctx.real_part(ct_a))).real,
+                               za, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(ctx.decrypt_decode(ctx.imag_part(ct_a))).real,
+                               np.zeros(p.slots), atol=1e-3)
 
 
 def test_eval_poly_parity(cset):
-    p, ks, ctx, ct_a, _, _, _ = cset
+    """ctx.eval_poly ≡ explicit basis + ctx.eval_chebyshev, and both match
+    the numpy Chebyshev evaluation."""
+    p, ks, ctx, ct_a, _, za, _ = cset
     coeffs = np.array([0.1, 0.8, 0.0, -0.2])
     got = ctx.eval_poly(ct_a, coeffs)
-    basis = polyeval.ChebyshevBasis(p, ct_a, ks, len(coeffs) - 1)
-    want = _legacy(polyeval.eval_chebyshev, p, basis, coeffs, ks)
+    basis = ctx.chebyshev_basis(ct_a, len(coeffs) - 1)
+    want = ctx.eval_chebyshev(basis, coeffs)
     assert _ct_equal(got, want)
     assert got.scale == want.scale and got.level == want.level
+    np.testing.assert_allclose(np.asarray(ctx.decrypt_decode(got)).real,
+                               np.polynomial.chebyshev.Chebyshev(coeffs)(za), atol=1e-3)
 
 
-def test_force_to_add_any_parity(cset):
-    p, ks, ctx, ct_a, ct_b, _, _ = cset
-    lo = ctx.rescale(ct_a)
-    assert _ct_equal(ctx.force_to(ct_b, lo.level, lo.scale),
-                     _legacy(polyeval.force_to, p, ct_b, lo.level, lo.scale))
-    assert _ct_equal(ctx.add_any(lo, ct_b), _legacy(polyeval.add_any, p, lo, ct_b))
+def test_force_to_add_any_exactness(cset):
+    p, _, ctx, ct_a, ct_b, za, zb = cset
+    lo = ctx.mul(ct_a, ct_a)  # one level down, scale back at ≈ 2^30
+    forced = ctx.force_to(ct_b, lo.level, lo.scale)
+    assert forced.level == lo.level and forced.scale == lo.scale
+    np.testing.assert_allclose(np.asarray(ctx.decrypt_decode(forced)).real, zb, atol=1e-3)
+    got = ctx.add_any(lo, ct_b)  # aligns the fresh ct down to lo's level
+    np.testing.assert_allclose(np.asarray(ctx.decrypt_decode(got)).real,
+                               za * za + zb, atol=2e-3)
 
 
 def test_hoisting_modes_bitexact_through_context(cset):
@@ -214,7 +228,8 @@ def test_service_memo_keys_on_policy():
     # legacy bool spelling lands on the same entries (one source of truth)
     assert SP.job_service_sim(job, H.FLASH_FHE, hoist=False) is fused_never
     assert SP.job_service_sim(job, H.FLASH_FHE, hoist=True) is fused_always
-    assert SP.exec_policy_from_hoist(True).policy_key() == ("fused", "always", "standard")
+    assert SP.exec_policy_from_hoist(True).policy_key() == (
+        "ckks", "fused", "always", "standard")
 
 
 def test_workload_stream_policy_mirrors_legacy_flags():
@@ -340,6 +355,7 @@ def test_plan_diags_banded():
 
 
 def test_legacy_free_functions_warn(cset):
+    """The surviving ops shims still warn on every call."""
     p, ks, _, ct_a, ct_b, za, _ = cset
     with pytest.warns(DeprecationWarning):
         ops.add(p, ct_a, ct_b)
@@ -347,7 +363,26 @@ def test_legacy_free_functions_warn(cset):
         ops.encode(p, za)
     with pytest.warns(DeprecationWarning):
         ops.rotate(p, ct_a, 1, ks)
-    with pytest.warns(DeprecationWarning):
-        linear.real_part(p, ct_a, ks)
-    with pytest.warns(DeprecationWarning):
-        polyeval.add_any(p, ct_a, ct_b)
+
+
+def test_retired_shims_raise_with_migration_hint():
+    """First retirement tranche (docs/context_api.md step 3): the
+    linear/polyeval/bootstrap free functions are gone — the names resolve to
+    an AttributeError carrying the context replacement, never to silent
+    delegation."""
+    from repro.fhe import bootstrap
+
+    retired = [
+        (linear, "apply_bsgs"), (linear, "apply_bsgs_pair"),
+        (linear, "real_part"), (linear, "imag_part"),
+        (polyeval, "force_to"), (polyeval, "add_any"),
+        (polyeval, "eval_chebyshev"),
+        (bootstrap, "bootstrap"), (bootstrap, "mod_raise"),
+        (bootstrap, "coeff_to_slot"), (bootstrap, "eval_mod"),
+        (bootstrap, "slot_to_coeff"),
+    ]
+    for mod, name in retired:
+        with pytest.raises(AttributeError, match="ctx\\."):
+            getattr(mod, name)
+    with pytest.raises(AttributeError):
+        linear.no_such_function  # unknown names still raise plainly

@@ -18,6 +18,7 @@ from repro.fhe import keyswitch as KS
 from repro.fhe import linear, ops
 from repro.fhe import params as P
 from repro.fhe import trace
+from repro.fhe.context import ExecPolicy, FheContext
 from repro.kernels import dispatch
 
 ROTS = (1, 2, 3, 5, 7)
@@ -208,8 +209,10 @@ def bsgs_setup():
 
 def test_apply_bsgs_hoisting_bitexact(bsgs_setup):
     p, ks, plan, mat, ct, z = bsgs_setup
-    hoisted = linear.apply_bsgs(p, ct, plan, ks, backend="ref", hoisting="always")
-    staged = linear.apply_bsgs(p, ct, plan, ks, backend="ref", hoisting="never")
+    ctx = FheContext(params=p, keys=ks,
+                     policy=ExecPolicy(backend="ref", hoisting="always"))
+    hoisted = ctx.apply_bsgs(ct, plan)
+    staged = ctx.with_policy(hoisting="never").apply_bsgs(ct, plan)
     assert _ct_equal(hoisted, staged)
     got = ops.decrypt_decode(p, ks.sk, hoisted)
     np.testing.assert_allclose(got, mat @ z, atol=5e-2)
@@ -220,8 +223,10 @@ def test_apply_bsgs_planner_parity_both_modes(bsgs_setup):
     pp = PL.PlanParams.of(p)
     n_diags = len(plan.diags)
     for hoisting, hoist in (("always", True), ("never", False)):
+        ctx = FheContext(params=p, keys=ks,
+                         policy=ExecPolicy(backend="ref", hoisting=hoisting))
         with trace.capture_trace() as t:
-            linear.apply_bsgs(p, ct, plan, ks, backend="ref", hoisting=hoisting)
+            ctx.apply_bsgs(ct, plan)
         want = PL.bsgs_matvec(pp, ct.level, n_diags, plan.n1, mode="exec",
                               hoist=hoist, fused=False)
         assert _sig(t) == _sig(want), hoisting

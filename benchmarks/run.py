@@ -117,6 +117,25 @@ def emit_cluster(emit, smoke: bool) -> None:
     emit("cluster.gates_scaleout_hetero_gang", int(not failures))
 
 
+def emit_overload(emit, smoke: bool) -> None:
+    """Overload/admission SLO table: goodput, drop rate, per-kind p99, and
+    peak backlog per (chips, load, admission) diurnal run, plus the admission
+    gates (flat tail + goodput floor with admission, divergence without)."""
+    from . import overload_bench
+
+    rows = overload_bench.run(smoke=smoke)
+    for r in rows:
+        prefix = (f"overload.{r['scenario']}.chips{int(r['n_chips'])}"
+                  f".load{r['load_x']:g}.adm{int(r['admission'])}")
+        for key in ("goodput_frac", "drop_rate", "drop_rate_shallow", "drop_rate_deep",
+                    "latency_p99_shallow_cycles", "latency_p99_deep_cycles",
+                    "peak_backlog_mcycles", "fairness_jain",
+                    "time_to_shed_p99_cycles", "n_completed_shallow"):
+            emit(f"{prefix}.{key}", r[key])
+    failures = overload_bench.check_gates(rows)
+    emit("overload.gates_flat_tail_goodput_divergence", int(not failures))
+
+
 def emit_paper_figs(emit) -> None:
     from . import paper_figs, roofline_table
 
@@ -184,7 +203,8 @@ def main(argv=None) -> None:
                          "CtS-stage GATES run only in benchmarks.hoisting_bench) "
                          "+ fleet scale-out/hetero/gang smoke (all four cluster "
                          "gates enforced) + mixed CKKS/BGV serving smoke (scheme "
-                         "gates enforced)")
+                         "gates enforced) + diurnal overload/admission smoke "
+                         "(flat-tail/goodput/divergence gates enforced)")
     ap.add_argument("--out", default=None, help="also write CSV rows to this file")
     ap.add_argument("--iters", type=int, default=3, help="timing iterations per config")
     args = ap.parse_args(argv)
@@ -196,6 +216,7 @@ def main(argv=None) -> None:
         emit_hoisting(emit, smoke=args.smoke, iters=args.iters)
         emit_cluster(emit, smoke=args.smoke)
         emit_multischeme(emit, smoke=args.smoke)
+        emit_overload(emit, smoke=args.smoke)
         if not args.smoke:
             emit_paper_figs(emit)
             emit_serving(emit, smoke=False)

@@ -47,7 +47,7 @@ class ScheduledJob:
 
 def schedule(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: int = 1,
              router: str = "jsq", exec_policy=None, chips=None,
-             gang_max_chips: int = 1) -> list[ScheduledJob]:
+             gang_max_chips: int = 1, admission=None) -> list[ScheduledJob]:
     """Run ``jobs`` through the event-driven serving engine; returns per-job
     placement and completion in submission order.  Timeline consistency
     (no overlapping placements, work conservation) is asserted on every call.
@@ -59,19 +59,25 @@ def schedule(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: int = 
     deep jobs gang-split across identical chips.  Each returned
     ``ScheduledJob.chip_index`` names the (primary) chip that ran it.
     ``exec_policy`` (an ``repro.fhe.ExecPolicy``) selects the service-time
-    kernel mode.
+    kernel mode.  ``admission`` (an ``repro.serve.AdmissionConfig``) arms
+    overload protection: SHED jobs are *dropped from the returned schedule*
+    (they have no placement or completion) — callers that need the shed
+    records use ``repro.serve.serve_cluster`` directly.
     """
     # deferred import: repro.core.__init__ imports this module, and the serve
     # package imports repro.core submodules — a top-level import would cycle
     from repro.serve.cluster import serve_cluster
-    from repro.serve.policy import serve
+    from repro.serve.policy import JobState, serve
 
     if chips is None and n_chips <= 1:
-        jes = serve(jobs, chip, validate=True, exec_policy=exec_policy).jobs
+        shed_after = admission.shed_after_cycles if admission is not None else None
+        jes = serve(jobs, chip, validate=True, exec_policy=exec_policy,
+                    shed_after=shed_after).jobs
     else:
         jes = serve_cluster(jobs, chip, n_chips=n_chips, router=router, validate=True,
                             exec_policy=exec_policy, chips=chips,
-                            gang_max_chips=gang_max_chips).jobs
+                            gang_max_chips=gang_max_chips, admission=admission).jobs
+    jes = [je for je in jes if je.state is JobState.DONE]
     return [
         ScheduledJob(
             job=je.job,

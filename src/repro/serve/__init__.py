@@ -14,11 +14,19 @@ The online realisation of the paper's §4.2 scheduling policy:
              workload-affinity / hetero routing, a per-chip warm-set
              cold-start model, and cross-chip deep gangs with an explicit
              inter-chip link cost)
-  traffic  — seeded Poisson / sharded / bursty / trace-replay / closed-loop
-             tenant sources (multi-source RNGs via SeedSequence.spawn)
+  traffic  — seeded Poisson / sharded / bursty / diurnal / trace-replay /
+             closed-loop tenant sources (multi-source RNGs via
+             SeedSequence.spawn) plus mix/fleet capacity estimators
   metrics  — SLO summary: latency & queueing percentiles (overall and
              per-kind), throughput, utilization (+ per-chip and per-chip-type
-             views), fairness, starvation, gang/link totals
+             views), fairness, starvation, gang/link totals, and the overload
+             block (goodput, drop rate by kind/tenant, time-to-shed)
+
+Overload protection (``AdmissionConfig``): per-tenant token buckets and a
+utilization reserve at the cluster router plus an engine-level queue
+timeout; rejected jobs end in the terminal ``JobState.SHED`` with their
+queued events cancelled and never touch warm-sets or backlog estimators —
+see docs/serving.md "Overload & admission".
 
 Quick use::
 
@@ -50,12 +58,15 @@ from . import cluster, events, metrics, policy, traffic
 from .cluster import ClusterConfig, ClusterResult, ClusterRouter, serve_cluster
 from .events import Event, EventLoop
 from .metrics import (
+    drop_rate_by_tenant,
+    goodput_by_tenant,
     max_queueing_by_kind,
     per_chip_type_utilization,
     summarize,
     summarize_cluster,
 )
 from .policy import (
+    AdmissionConfig,
     FlashPolicy,
     GangReservation,
     JobExec,
@@ -64,6 +75,7 @@ from .policy import (
     SequentialPolicy,
     ServeResult,
     ServingEngine,
+    TokenBucket,
     exec_policy_from_hoist,
     gang_link_bytes,
     gang_service_cycles,
@@ -75,8 +87,13 @@ from .policy import (
 from .traffic import (
     BurstyConfig,
     ClosedLoopSource,
+    DiurnalConfig,
     PoissonConfig,
     bursty_jobs,
+    diurnal_jobs,
+    diurnal_rate,
+    fleet_capacity_jobs_per_mcycle,
+    mix_capacity_jobs_per_mcycle,
     poisson_jobs,
     sharded_poisson_jobs,
     trace_jobs,

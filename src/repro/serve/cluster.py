@@ -88,11 +88,14 @@ from repro.fhe.context import ExecPolicy
 from .events import EventLoop
 from .policy import (
     GANG_SYNCS,
+    AdmissionConfig,
     FlashPolicy,
     GangReservation,
     JobExec,
+    JobState,
     ServeResult,
     ServingEngine,
+    TokenBucket,
     gang_link_bytes,
     gang_service_cycles,
     working_set_bytes,
@@ -128,8 +131,15 @@ class ClusterConfig:
     # boundary is deliberately expensive
     link_bytes_per_cycle: float = 256.0
     gang_syncs: int = GANG_SYNCS  # global barriers per ganged deep job
+    # overload protection (None = admit everything, the historical behaviour):
+    # utilization reserve + per-tenant token buckets at the router, and an
+    # engine-level queue timeout — see ``policy.AdmissionConfig``
+    admission: AdmissionConfig | None = None
 
     def __post_init__(self):
+        if self.admission is not None and not isinstance(self.admission, AdmissionConfig):
+            raise ValueError(
+                f"admission must be an AdmissionConfig, got {type(self.admission).__name__}")
         if self.chips is not None:
             norm = []
             for entry in self.chips:
@@ -185,6 +195,15 @@ class ClusterResult:
     events_processed: int
     chips: list[ChipConfig] = dataclasses.field(default_factory=list)  # per-chip
     gangs: dict[int, tuple[int, ...]] = dataclasses.field(default_factory=dict)
+    # router state snapshots at drain (admission/overload observability):
+    # per-chip backlog estimators (should both be ~0 after a full drain and
+    # are invariant-checked non-negative with serial <= total), the peak
+    # fleet-wide backlog over the run (the "are queues bounded?" observable),
+    # and shed counts by trigger ("token_bucket" / "reserve" / "timeout")
+    final_backlog: list[float] = dataclasses.field(default_factory=list)
+    final_backlog_serial: list[float] = dataclasses.field(default_factory=list)
+    peak_backlog_cycles: float = 0.0
+    shed_reasons: dict[str, int] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         if not self.chips:
@@ -196,11 +215,14 @@ class ClusterResult:
 
     def validate(self) -> "ClusterResult":
         """Fleet invariants on top of each chip's own ``ServeResult.validate``:
-        every non-gang job completed on EXACTLY one chip; every gang job ran
-        EXACTLY once on each reserved member chip (never double-booked, never
-        anywhere else) with its fragments finishing in lockstep; the recorded
-        placements match the per-chip timelines; and the fleet makespan is
-        the max over chips."""
+        every non-gang job completed on EXACTLY one chip (or was shed); every
+        gang job ran EXACTLY once on each reserved member chip (never
+        double-booked, never anywhere else) with its fragments finishing in
+        lockstep; the recorded placements match the per-chip timelines;
+        admission-shed jobs appear on NO chip and in NO placement; the
+        backlog estimators never drift negative (and the serial component
+        never exceeds the total); and the fleet makespan is the max over
+        chips."""
         for r in self.chip_results:
             r.validate()
         on_chips: dict[int, list[int]] = {}
@@ -216,6 +238,30 @@ class ClusterResult:
                 )
                 on_chips.setdefault(jid, []).append(i)
                 frags.setdefault(jid, []).append(je)
+        # router-shed jobs (chip_index < 0): rejected at the door, so they
+        # must never have reached a chip timeline, a placement, or a warm-set
+        # (the cold_start_cycles charge is the warm-set's observable)
+        router_shed = {je.job.job_id for je in self.jobs
+                       if je.state is JobState.SHED and je.chip_index < 0}
+        for je in self.jobs:
+            if je.job.job_id in router_shed:
+                assert not je.segments and je.completion is None
+                assert je.shed_cycle is not None and je.cold_start_cycles == 0.0
+        assert not router_shed & set(on_chips), (
+            f"admission-shed jobs found on chips: {sorted(router_shed & set(on_chips))}"
+        )
+        assert not router_shed & set(self.placements), (
+            "admission-shed jobs leaked into router placements"
+        )
+        for name, arr in (("backlog", self.final_backlog),
+                          ("backlog_serial", self.final_backlog_serial)):
+            for i, v in enumerate(arr):
+                assert v >= 0.0, f"chip {i} {name} estimator drifted negative: {v}"
+        for i, (total, serial) in enumerate(zip(self.final_backlog,
+                                                self.final_backlog_serial)):
+            assert serial <= total + 1e-6 * max(1.0, total), (
+                f"chip {i} serial backlog {serial} exceeds total {total}"
+            )
         for jid, used in on_chips.items():
             members = self.gangs.get(jid)
             if members is None:
@@ -240,8 +286,9 @@ class ClusterResult:
         assert set(on_chips) == set(self.placements), (
             "router placements disagree with chip timelines"
         )
-        assert len(self.jobs) == len(on_chips), (
-            f"{len(self.jobs)} jobs routed, {len(on_chips)} found on chips"
+        assert len(self.jobs) == len(on_chips) + len(router_shed), (
+            f"{len(self.jobs)} jobs routed, {len(on_chips)} found on chips "
+            f"+ {len(router_shed)} shed at admission"
         )
         per_chip_mk = max((r.makespan for r in self.chip_results), default=0.0)
         assert abs(self.makespan - per_chip_mk) <= 1e-6 * max(1.0, per_chip_mk)
@@ -258,11 +305,22 @@ class ClusterRouter:
         self.config = config
         self.loop = loop if loop is not None else EventLoop()
         self.chips = [c for c, _ in pairs]
+        adm = config.admission
         self.engines = [ServingEngine(c, loop=self.loop, hoist=config.hoist,
-                                      exec_policy=p)
+                                      exec_policy=p,
+                                      shed_after=(adm.shed_after_cycles
+                                                  if adm is not None else None))
                         for c, p in pairs]
         for i, eng in enumerate(self.engines):
             eng.on_job_complete = functools.partial(self._completed, i)
+            eng.on_job_shed = functools.partial(self._shed_echo, i)
+        # per-tenant token buckets, created lazily on first arrival
+        self._buckets: dict[int, TokenBucket] = {}
+        self.shed_reasons: dict[str, int] = {}
+        # peak fleet-wide backlog estimate over the run: THE bounded-queues
+        # observable (without admission it grows with the overload integral,
+        # with admission it plateaus near the utilization reserve)
+        self.peak_backlog = 0.0
         # estimated outstanding service cycles per chip: the simulator prices
         # each job at routing time and completions echo back.  An estimate,
         # not an oracle — spill/restore added to a preempted deep job after
@@ -401,9 +459,49 @@ class ClusterRouter:
         while len(w) > 1 and sum(w.values()) > self._warm_cap[i]:
             w.popitem(last=False)  # evict least-recently-used working set
 
+    # -- admission control ---------------------------------------------------
+
+    def _admission_verdict(self, job: FheJob) -> str | None:
+        """``None`` = admit; otherwise the shed trigger ("token_bucket" /
+        "reserve").  The bucket is charged first — an over-rate tenant pays
+        with its own tokens before it can even contend for fleet capacity."""
+        adm = self.config.admission
+        if adm is None:
+            return None
+        if adm.tenant_rate_per_mcycle is not None:
+            bucket = self._buckets.get(job.tenant_id)
+            if bucket is None:
+                bucket = self._buckets[job.tenant_id] = TokenBucket(
+                    adm.tenant_rate_per_mcycle, adm.tenant_burst)
+            if not bucket.try_take(self.loop.now):
+                return "token_bucket"
+        if adm.max_wait_cycles is not None:
+            best = min(self._wait(i) for i in range(self.config.n_chips))
+            if best > adm.max_wait_cycles:
+                return "reserve"
+        return None
+
+    def _shed_at_door(self, job: FheJob, reason: str) -> None:
+        """Admission rejection: terminal SHED without touching any engine,
+        warm-set, or backlog estimator.  The record keeps the job visible to
+        the metrics layer (drop rate by tenant/kind) via ``ClusterResult.jobs``
+        with the sentinel ``chip_index = -1``."""
+        je = JobExec(job=job, service_cycles=0.0, sim=None, lanes="",
+                     state=JobState.SHED, chip_index=-1)
+        je.shed_cycle = self.loop.now
+        self._by_id[job.job_id] = je
+        self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
+
+    def _note_backlog(self) -> None:
+        self.peak_backlog = max(self.peak_backlog, sum(self.backlog))
+
     # -- event handlers ------------------------------------------------------
 
     def _route(self, job: FheJob) -> None:
+        verdict = self._admission_verdict(job)
+        if verdict is not None:
+            self._shed_at_door(job, verdict)
+            return
         if job.kind == "deep" and self.config.gang_max_chips > 1:
             members = self._plan_gang(job)
             if members is not None:
@@ -419,6 +517,7 @@ class ClusterRouter:
         self.backlog[i] += je.service_cycles
         if job.kind == "deep":
             self.backlog_serial[i] += je.service_cycles
+        self._note_backlog()
 
     def _route_gang(self, job: FheJob, members: list[int]) -> None:
         """Commit a multi-chip reservation: one lockstep fragment per member.
@@ -448,12 +547,33 @@ class ClusterRouter:
             self.backlog_serial[i] += je.service_cycles
         self.placements[job.job_id] = members[0]
         self.gangs[job.job_id] = tuple(members)
+        self._note_backlog()
 
-    def _completed(self, i: int, je: JobExec) -> None:
+    def _debit_backlog(self, i: int, je: JobExec) -> None:
+        """Echo a job's routed service demand back out of chip i's estimators.
+
+        Every decrement clamps at 0.0 — actual service can diverge from the
+        routed estimate (preemption spill/restore accrues after placement,
+        gang suspensions re-price remaining work), so naive subtraction can
+        drift the estimators negative and then *attract* the jsq/po2/hetero
+        routers to phantom capacity.  The serial component is additionally
+        clamped to never exceed the total (``ClusterResult.validate`` asserts
+        both invariants on the drained snapshot)."""
         self.backlog[i] = max(0.0, self.backlog[i] - je.service_cycles)
         if je.kind == "deep":
             self.backlog_serial[i] = max(
                 0.0, self.backlog_serial[i] - je.service_cycles)
+        self.backlog_serial[i] = min(self.backlog_serial[i], self.backlog[i])
+
+    def _completed(self, i: int, je: JobExec) -> None:
+        self._debit_backlog(i, je)
+
+    def _shed_echo(self, i: int, je: JobExec) -> None:
+        """A queue-timeout shed un-books the backlog the router charged at
+        routing time (the job will never run), so the estimators keep
+        tracking genuinely outstanding work."""
+        self._debit_backlog(i, je)
+        self.shed_reasons["timeout"] = self.shed_reasons.get("timeout", 0) + 1
 
     # -- run -----------------------------------------------------------------
 
@@ -466,7 +586,11 @@ class ClusterRouter:
                              chip_results=chip_results, jobs=jobs,
                              placements=dict(self.placements), makespan=makespan,
                              events_processed=self.loop.processed,
-                             chips=list(self.chips), gangs=dict(self.gangs))
+                             chips=list(self.chips), gangs=dict(self.gangs),
+                             final_backlog=list(self.backlog),
+                             final_backlog_serial=list(self.backlog_serial),
+                             peak_backlog_cycles=self.peak_backlog,
+                             shed_reasons=dict(self.shed_reasons))
 
 
 def serve_cluster(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: int = 2,
@@ -477,7 +601,8 @@ def serve_cluster(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: i
                   exec_policy: ExecPolicy | None = None,
                   chips=None, gang_max_chips: int = 1,
                   link_bytes_per_cycle: float = 256.0,
-                  gang_syncs: int = GANG_SYNCS) -> ClusterResult:
+                  gang_syncs: int = GANG_SYNCS,
+                  admission: AdmissionConfig | None = None) -> ClusterResult:
     """Serve an open-loop job list on a chip fleet; the one-call API.
 
     Homogeneous fleet: pass ``chip`` + ``n_chips``.  Heterogeneous fleet:
@@ -488,6 +613,10 @@ def serve_cluster(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: i
     ``config=`` to reuse a prepared ``ClusterConfig`` (the other keyword
     arguments are ignored in that case); ``exec_policy`` sets the per-engine
     service-time execution policy (wins over the legacy ``hoist=`` bool).
+    ``admission=`` arms overload protection (``AdmissionConfig``: per-tenant
+    token buckets + utilization reserve at the router, queue-timeout at the
+    engines); rejected jobs end ``JobState.SHED`` and surface through the
+    drop-rate/goodput metrics rather than growing the backlog.
     """
     cfg = config if config is not None else ClusterConfig(
         n_chips=0 if chips is not None else n_chips, router=router, seed=seed,
@@ -495,7 +624,7 @@ def serve_cluster(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: i
         warm_capacity_mb=warm_capacity_mb, hoist=hoist, exec_policy=exec_policy,
         chips=tuple(chips) if chips is not None else None,
         gang_max_chips=gang_max_chips, link_bytes_per_cycle=link_bytes_per_cycle,
-        gang_syncs=gang_syncs)
+        gang_syncs=gang_syncs, admission=admission)
     rt = ClusterRouter(chip, cfg)
     for job in jobs:
         rt.submit(job)

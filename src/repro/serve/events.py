@@ -7,9 +7,14 @@ makes simultaneous events deterministic (submission order) and breaks heap
 ties without comparing payloads.  Cancellation is lazy: a cancelled event
 stays in the heap and is skipped when popped — O(1) cancel, which preemption
 uses to revoke a suspended job's completion event.  The loop compacts the heap
-once cancelled entries outnumber live ones, so long fleet runs (many engines
-sharing one loop, each preemption leaving a dead completion event) stay
-O(live events) in memory.
+once cancelled entries outnumber live ones — checked on BOTH insertion and
+cancellation, so a mass-cancellation burst with no follow-up inserts (admission
+shedding revoking thousands of queued deadline events at once) still compacts
+immediately.  Long fleet runs (many engines sharing one loop, each preemption
+leaving a dead completion event) therefore stay O(live events) in memory: the
+heap never holds more cancelled entries than live ones outside the compaction
+call itself, and each compaction's O(heap) cost is amortised over the ≥ heap/2
+cancellations that triggered it.
 """
 
 from __future__ import annotations
@@ -35,7 +40,7 @@ class Event:
         if not self.cancelled:
             self.cancelled = True
             if self._loop is not None:
-                self._loop._n_cancelled += 1
+                self._loop._note_cancel()
 
     def __lt__(self, other: "Event") -> bool:  # heap ordering
         return (self.time, self.seq) < (other.time, other.seq)
@@ -65,11 +70,20 @@ class EventLoop:
     def call_at(self, time: float, fn: Callable[[], None]) -> Event:
         if time < self.now:
             raise ValueError(f"cannot schedule into the past: {time} < now={self.now}")
-        if self._n_cancelled > 32 and 2 * self._n_cancelled > len(self._heap):
-            self._compact()
+        self._maybe_compact()
         ev = Event(float(time), next(self._seq), fn, loop=self)
         heapq.heappush(self._heap, ev)
         return ev
+
+    def _note_cancel(self) -> None:
+        """Bookkeeping hook ``Event.cancel`` calls; compacts when dead entries
+        outnumber live ones so pure cancellation bursts cannot bloat the heap."""
+        self._n_cancelled += 1
+        self._maybe_compact()
+
+    def _maybe_compact(self) -> None:
+        if self._n_cancelled > 32 and 2 * self._n_cancelled > len(self._heap):
+            self._compact()
 
     def _compact(self) -> None:
         """Drop cancelled entries and re-heapify (amortised by the cancel count)."""

@@ -20,8 +20,15 @@ PERCENTILES = (50.0, 95.0, 99.0)
 
 
 def _pct(values: list[float]) -> dict[str, float]:
+    """Percentiles of a sample; an EMPTY sample yields NaN, not 0.0.
+
+    A zero here used to read as a *perfect* tail — a stream with no deep
+    completions (or every job shed) would sail through a "p99 must beat X"
+    CI gate.  NaN poisons any such comparison instead (NaN > x and NaN < x
+    are both False), and the ``n_completed_{kind}`` counts let gates require
+    a non-empty sample explicitly."""
     if not values:
-        return {f"p{int(q)}": 0.0 for q in PERCENTILES}
+        return {f"p{int(q)}": float("nan") for q in PERCENTILES}
     arr = np.asarray(values, dtype=float)
     return {f"p{int(q)}": float(np.percentile(arr, q)) for q in PERCENTILES}
 
@@ -75,6 +82,61 @@ def max_queueing_by_kind(result: ServeResult | ClusterResult) -> dict[str, float
     return out
 
 
+def drop_rate_by_tenant(result: ServeResult | ClusterResult) -> dict[int, float]:
+    """Shed fraction of each tenant's offered jobs (admission + timeout sheds)."""
+    offered: dict[int, int] = {}
+    shed: dict[int, int] = {}
+    for je in result.jobs:
+        t = je.job.tenant_id
+        offered[t] = offered.get(t, 0) + 1
+        if je.state is JobState.SHED:
+            shed[t] = shed.get(t, 0) + 1
+    return {t: shed.get(t, 0) / n for t, n in offered.items()}
+
+
+def goodput_by_tenant(result: ServeResult | ClusterResult) -> dict[int, int]:
+    """Completed-job count per tenant — the per-tenant goodput numerator the
+    token-bucket isolation property compares (victim goodput under a flood vs
+    its solo goodput)."""
+    out: dict[int, int] = {}
+    for je in result.jobs:
+        if je.state is JobState.DONE:
+            out[je.job.tenant_id] = out.get(je.job.tenant_id, 0) + 1
+    return out
+
+
+def _overload_block(result: ServeResult | ClusterResult,
+                    done: list, makespan: float) -> dict[str, float]:
+    """Shared SLO-degradation keys: offered/completed/shed counts, drop rates
+    by kind, goodput, and the time-to-shed tail.  ``time_to_shed_*`` is NaN
+    when nothing shed (same empty-sample semantics as the latency
+    percentiles)."""
+    jobs = result.jobs
+    shed = [je for je in jobs if je.state is JobState.SHED]
+    n_offered = len(jobs)
+    out = {
+        "n_offered": float(n_offered),
+        "n_shed": float(len(shed)),
+        "drop_rate": len(shed) / n_offered if n_offered else 0.0,
+        # goodput two ways: completed fraction of offered load (what the
+        # overload gates compare against the feasible fraction), and the
+        # completion rate (identical to throughput_jobs_per_mcycle — named
+        # here so SLO tables read naturally)
+        "goodput_frac": len(done) / n_offered if n_offered else 0.0,
+        "goodput_jobs_per_mcycle": (len(done) / (makespan / 1e6)
+                                    if makespan > 0 else 0.0),
+    }
+    for kind in ("shallow", "deep"):
+        offered_k = sum(1 for je in jobs if je.kind == kind)
+        shed_k = sum(1 for je in shed if je.kind == kind)
+        out[f"n_completed_{kind}"] = float(sum(1 for je in done if je.kind == kind))
+        out[f"drop_rate_{kind}"] = shed_k / offered_k if offered_k else 0.0
+    tts = _pct([je.time_to_shed for je in shed])
+    out["time_to_shed_p50_cycles"] = tts["p50"]
+    out["time_to_shed_p99_cycles"] = tts["p99"]
+    return out
+
+
 def summarize(result: ServeResult | ClusterResult) -> dict[str, float]:
     """Flat metric dict (CSV-friendly).  Keys:
 
@@ -88,7 +150,19 @@ def summarize(result: ServeResult | ClusterResult) -> dict[str, float]:
     util_mean, util_min, util_max              — busy/makespan per affiliation;
     fairness_jain                              — over per-tenant mean slowdown
                                                  (per-job when single-tenant);
-    n_jobs, n_shallow, n_deep, n_preemptions, spill_restore_mcycles.
+    n_jobs, n_shallow, n_deep, n_preemptions, spill_restore_mcycles;
+    n_offered, n_shed, n_completed_shallow/deep — admission accounting
+                                                 (n_jobs counts completions;
+                                                 offered = completed + shed);
+    drop_rate, drop_rate_shallow/deep          — shed fraction of offered;
+    goodput_frac, goodput_jobs_per_mcycle      — completed/offered, and the
+                                                 completion rate;
+    time_to_shed_p50/p99_cycles                — arrival → shed decision
+                                                 (NaN when nothing shed).
+
+    Empty percentile samples (a kind with zero completions, nothing shed)
+    are NaN, never 0.0 — gates must check the ``n_completed_{kind}`` counts
+    before comparing tails.
 
     A ``ClusterResult`` routes to ``summarize_cluster`` (fleet-level SLOs).
     """
@@ -120,6 +194,7 @@ def summarize(result: ServeResult | ClusterResult) -> dict[str, float]:
         "n_preemptions": float(sum(je.n_preemptions for je in done)),
         "spill_restore_mcycles": sum(je.spill_restore_cycles for je in done) / 1e6,
     }
+    out.update(_overload_block(result, done, mk))
     for k, v in lat.items():
         out[f"latency_{k}_cycles"] = v
     out["latency_p99_ms"] = lat["p99"] / freq_hz * 1e3
@@ -170,7 +245,14 @@ def summarize_cluster(result: ClusterResult) -> dict[str, float]:
                                                  their mean width in chips;
     gang_link_bytes, gang_link_mcycles         — inter-chip exchange totals
                                                  (mcycles = per-chip link
-                                                 stalls summed over members).
+                                                 stalls summed over members);
+    peak_backlog_mcycles                       — max fleet-wide outstanding
+                                                 routed demand over the run
+                                                 (the bounded-queues
+                                                 observable under overload);
+    plus the admission block (n_offered, n_shed, n_completed_{kind},
+    drop_rate[_kind], goodput_frac, goodput_jobs_per_mcycle,
+    time_to_shed_p50/p99_cycles) shared with ``summarize``.
 
     Per-job numbers (latency, queueing, preemptions, spill) count each ganged
     job ONCE through its primary fragment — fragments share completion times
@@ -212,7 +294,9 @@ def summarize_cluster(result: ClusterResult) -> dict[str, float]:
         "spill_restore_mcycles": sum(je.spill_restore_cycles for je in done) / 1e6,
         "n_cold_starts": float(sum(1 for je in done if je.cold_start_cycles > 0)),
         "cold_start_mcycles": sum(je.cold_start_cycles for je in done) / 1e6,
+        "peak_backlog_mcycles": result.peak_backlog_cycles / 1e6,
     }
+    out.update(_overload_block(result, done, mk))
     ganged = [je for je in done if je.gang_size > 1]
     out["n_gang_jobs"] = float(len(ganged))
     out["gang_chips_mean"] = (float(np.mean([je.gang_size for je in ganged]))

@@ -83,6 +83,10 @@ class JobState(enum.Enum):
     RUNNING = "running"
     SUSPENDED = "suspended"
     DONE = "done"
+    # terminal rejection: admission control (router) or queue-timeout (engine)
+    # dropped the job before it ever ran — no segments, no completion, and the
+    # work-conservation invariants exclude it
+    SHED = "shed"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,7 +112,7 @@ class JobExec:
 
     job: FheJob
     service_cycles: float
-    sim: SimResult
+    sim: SimResult | None  # None only for admission-shed jobs (never priced)
     lanes: str  # final placement label (affiliation-i / deep / whole-chip)
     state: JobState = JobState.QUEUED
     remaining: float = 0.0  # cycles left, incl. unpaid spill/restore overhead
@@ -126,9 +130,11 @@ class JobExec:
     gang_size: int = 1  # chips in the gang (1 = not ganged)
     link_cycles: float = 0.0  # per-chip inter-chip exchange stalls, inside service_cycles
     link_bytes: float = 0.0  # gang-total link traffic, recorded on the rank-0 fragment
+    shed_cycle: float | None = None  # instant the job was dropped (SHED only)
     _run_start: float | None = None
     _suspended_at: float | None = None  # last preemption time (aging reference)
     _complete_ev: Event | None = None
+    _deadline_ev: Event | None = None  # queue-timeout shed deadline, if armed
 
     def __post_init__(self):
         self.remaining = self.service_cycles
@@ -136,6 +142,12 @@ class JobExec:
     @property
     def kind(self) -> str:
         return self.job.kind
+
+    @property
+    def time_to_shed(self) -> float:
+        """Arrival → shed decision (0.0 = rejected at admission)."""
+        assert self.shed_cycle is not None, "job was not shed"
+        return self.shed_cycle - self.job.arrival_cycle
 
     @property
     def turnaround(self) -> float:
@@ -164,6 +176,88 @@ def working_set_bytes(job: FheJob) -> float:
     polynomials over the extended basis plus key-switch accumulators."""
     p = job.params
     return 6.0 * (p.L + 1 + p.alpha) * p.n * 4.0
+
+
+# ---------------------------------------------------------------------------
+# admission control (overload protection)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Overload-protection policy: which jobs get dropped (``JobState.SHED``)
+    instead of growing the backlog without bound.
+
+    Three independent mechanisms, each off (``None``) by default:
+
+      * ``max_wait_cycles`` — *utilization reserve* at the cluster router: a
+        job is shed on arrival when the best estimated wait across the fleet
+        (``ClusterRouter._wait``, the same drain-width/serial estimator the
+        ``hetero`` router uses) already exceeds this bound.  This is what
+        keeps queues bounded under sustained overload: once the fleet's
+        backlog covers ``max_wait_cycles`` of work, further arrivals shed at
+        the door rather than queueing behind it.
+      * ``tenant_rate_per_mcycle`` (+ ``tenant_burst``) — a classic *token
+        bucket per tenant* at the router: each tenant's bucket refills at the
+        rate (jobs per Mcycle of simulated time) up to the burst capacity and
+        each admitted job takes one token; an empty bucket sheds.  Isolates
+        an abusive tenant: a flood drains only its own bucket, so a
+        well-behaved tenant's admissions are untouched.
+      * ``shed_after_cycles`` — an *engine-level queue timeout*: a job still
+        QUEUED (never started) this many cycles after arrival is shed where
+        it waits.  This is the SLO backstop for jobs the router admitted into
+        a queue that subsequently congested (e.g. behind a deep gang); its
+        ``time_to_shed`` is exactly this bound, where router sheds are 0.
+
+    Shed jobs are terminal: no segments, no completion, queued events
+    cancelled, never counted into warm-sets, and their admission never
+    touched (router path) or is echoed back out of (engine path) the backlog
+    estimators.
+    """
+
+    max_wait_cycles: float | None = None
+    tenant_rate_per_mcycle: float | None = None
+    tenant_burst: float = 8.0
+    shed_after_cycles: float | None = None
+
+    def __post_init__(self):
+        if self.max_wait_cycles is not None and self.max_wait_cycles < 0:
+            raise ValueError(f"max_wait_cycles must be >= 0, got {self.max_wait_cycles}")
+        if self.tenant_rate_per_mcycle is not None and self.tenant_rate_per_mcycle <= 0:
+            raise ValueError(
+                f"tenant_rate_per_mcycle must be positive, got {self.tenant_rate_per_mcycle}")
+        if self.tenant_burst < 1:
+            raise ValueError(f"tenant_burst must be >= 1, got {self.tenant_burst}")
+        if self.shed_after_cycles is not None and self.shed_after_cycles <= 0:
+            raise ValueError(
+                f"shed_after_cycles must be positive, got {self.shed_after_cycles}")
+
+
+class TokenBucket:
+    """Continuous-refill token bucket (rate in tokens per Mcycle).
+
+    Starts full.  ``try_take`` refills by elapsed simulated time, then either
+    spends one token (admit) or reports empty (shed).  Fractional tokens
+    accumulate, so a rate of 0.5/Mcycle admits one job every 2 Mcycles in
+    steady state.
+    """
+
+    __slots__ = ("rate_per_cycle", "burst", "tokens", "_t")
+
+    def __init__(self, rate_per_mcycle: float, burst: float):
+        assert rate_per_mcycle > 0 and burst >= 1
+        self.rate_per_cycle = rate_per_mcycle / 1e6
+        self.burst = float(burst)
+        self.tokens = float(burst)
+        self._t = 0.0
+
+    def try_take(self, now: float) -> bool:
+        self.tokens = min(self.burst, self.tokens + (now - self._t) * self.rate_per_cycle)
+        self._t = now
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True
+        return False
 
 
 # ---------------------------------------------------------------------------
@@ -334,23 +428,44 @@ class GangReservation:
 
 
 class _PriorityQueue:
-    """Max-priority, then FIFO-by-arrival, then submission order."""
+    """Max-priority, then FIFO-by-arrival, then submission order.
+
+    Shed entries are dropped lazily: a queue-timeout shed marks the job
+    ``SHED`` in place (O(1)) and the entry is discarded whenever it surfaces
+    at the top — the same trick the event heap uses for cancellations."""
 
     def __init__(self):
         self._heap: list[tuple[float, float, int, JobExec]] = []
         self._seq = itertools.count()
 
+    def _purge(self) -> None:
+        while self._heap and self._heap[0][-1].state is JobState.SHED:
+            heapq.heappop(self._heap)
+
     def __len__(self) -> int:
+        # after the purge a non-zero length guarantees a live (non-shed) head,
+        # which is all the dispatch loops rely on; shed entries buried deeper
+        # may still be counted until they surface
+        self._purge()
         return len(self._heap)
 
     def push(self, je: JobExec) -> None:
         heapq.heappush(self._heap, (-je.job.priority, je.job.arrival_cycle, next(self._seq), je))
 
     def pop(self) -> JobExec:
+        self._purge()
         return heapq.heappop(self._heap)[-1]
 
     def peek(self) -> JobExec | None:
+        self._purge()
         return self._heap[0][-1] if self._heap else None
+
+
+def _cancel_deadline(je: JobExec) -> None:
+    """Revoke a job's queue-timeout shed deadline (it is starting to run)."""
+    if je._deadline_ev is not None:
+        je._deadline_ev.cancel()
+        je._deadline_ev = None
 
 
 class _DeferredDispatchMixin:
@@ -529,6 +644,7 @@ class FlashPolicy(_DeferredDispatchMixin):
             self._start_shallow(self.shallow_q.pop(), free[0], now)
 
     def _start_shallow(self, je: JobExec, aff: int, now: float) -> None:
+        _cancel_deadline(je)
         je.state = JobState.RUNNING
         je.lanes = f"affiliation-{aff}"
         je.first_start = now
@@ -586,6 +702,7 @@ class FlashPolicy(_DeferredDispatchMixin):
             self._run_deep(d, now)
 
     def _run_deep(self, d: JobExec, now: float) -> None:
+        _cancel_deadline(d)
         d.state = JobState.RUNNING
         d.lanes = (f"{self._deep_label}+gang[{d.gang_rank}/{d.gang_size}]"
                    if d.gang is not None else self._deep_label)
@@ -632,6 +749,7 @@ class SequentialPolicy(_DeferredDispatchMixin):
             return
         je = self.queue.pop()
         now = self.loop.now
+        _cancel_deadline(je)
         je.state = JobState.RUNNING
         je.lanes = lanes_whole_chip(self.chip).label
         je.first_start = now
@@ -668,12 +786,24 @@ class ServeResult:
 
     def validate(self) -> "ServeResult":
         """Timeline-consistency invariants (raises AssertionError on violation):
-        every submission completed, per-affiliation intervals never overlap,
-        and each job's run segments sum to its service time plus the
-        spill/restore overhead it was charged (work conservation)."""
+        every submission completed OR was shed, per-affiliation intervals never
+        overlap, and each completed job's run segments sum to its service time
+        plus the spill/restore overhead it was charged (work conservation —
+        shed jobs are excluded: they must have NO segments, no start, no
+        completion, and a shed instant no earlier than their arrival)."""
         n_aff = self.chip.n_affiliations if self.chip.multi_job else 1
         per_resource: dict[str, list[Segment]] = {}
         for je in self.jobs:
+            if je.state is JobState.SHED:
+                assert not je.segments, f"shed job {je.job.job_id} holds run segments"
+                assert je.completion is None and je.first_start is None, (
+                    f"shed job {je.job.job_id} has start/completion timestamps"
+                )
+                assert je.shed_cycle is not None, f"shed job {je.job.job_id} missing shed_cycle"
+                assert je.shed_cycle >= je.job.arrival_cycle - _TOL, (
+                    f"job {je.job.job_id} shed before it arrived"
+                )
+                continue
             assert je.state is JobState.DONE, f"job {je.job.job_id} never completed ({je.state})"
             assert je.completion is not None and je.first_start is not None
             assert je.first_start >= je.job.arrival_cycle - _TOL, (
@@ -712,9 +842,14 @@ class ServingEngine:
     """
 
     def __init__(self, chip: ChipConfig, policy=None, loop: EventLoop | None = None,
-                 hoist: bool = False, exec_policy: ExecPolicy | None = None):
+                 hoist: bool = False, exec_policy: ExecPolicy | None = None,
+                 shed_after: float | None = None):
         self.chip = chip
         self.policy = policy if policy is not None else policy_for(chip)
+        # engine-level queue timeout (AdmissionConfig.shed_after_cycles): a job
+        # still QUEUED this long after arrival is shed where it waits
+        assert shed_after is None or shed_after > 0
+        self.shed_after = shed_after
         # a caller-supplied loop lets N engines share one clock (fleet serving,
         # repro.serve.cluster); by default each engine owns its own
         self.loop = loop if loop is not None else EventLoop()
@@ -727,8 +862,10 @@ class ServingEngine:
         self.hoist = self.exec_policy.plan_hoist
         self.jobs: list[JobExec] = []
         self._source = None
-        # fleet hook: the cluster router tracks per-chip backlog through this
+        # fleet hooks: the cluster router tracks per-chip backlog through these
+        # (a queue-timeout shed must echo its admission back OUT of the backlog)
         self.on_job_complete: Callable[[JobExec], None] | None = None
+        self.on_job_shed: Callable[[JobExec], None] | None = None
         self.policy.bind(self.loop, self._job_completed)
 
     def service_sim(self, job: FheJob) -> SimResult:
@@ -758,9 +895,39 @@ class ServingEngine:
         self.jobs.append(je)
         # clamp: integer-rounded arrivals from a closed-loop source can land a
         # fraction of a cycle before a fractional clock (non-integral spill pay)
-        self.loop.call_at(max(self.loop.now, float(job.arrival_cycle)),
-                          lambda: self.policy.submit(je))
+        arrival = max(self.loop.now, float(job.arrival_cycle))
+        self.loop.call_at(arrival, lambda: self.policy.submit(je))
+        if self.shed_after is not None and gang is None:
+            # gang fragments are exempt: the lockstep barrier already bounds
+            # their queueing through the router's gang-vs-single estimate, and
+            # shedding one fragment of a committed reservation would deadlock
+            # the others at the barrier
+            je._deadline_ev = self.loop.call_at(
+                arrival + self.shed_after, lambda: self._shed_deadline(je))
         return je
+
+    def _shed_deadline(self, je: JobExec) -> None:
+        """Queue-timeout shed: fires ``shed_after`` cycles past arrival; a
+        no-op unless the job is still waiting for its first dispatch."""
+        je._deadline_ev = None
+        if je.state is JobState.QUEUED and je.first_start is None:
+            self.shed(je)
+
+    def shed(self, je: JobExec) -> None:
+        """Terminal SHED for a queued job: cancel its pending events, mark it,
+        and notify the fleet hook (the router un-books its backlog charge).
+        The policy queues drop the entry lazily (``_PriorityQueue._purge``)."""
+        assert je.state is JobState.QUEUED and je.first_start is None, (
+            f"can only shed a never-started queued job, not {je.state}"
+        )
+        _cancel_deadline(je)
+        if je._complete_ev is not None:  # defensive: queued jobs hold none
+            je._complete_ev.cancel()
+            je._complete_ev = None
+        je.state = JobState.SHED
+        je.shed_cycle = self.loop.now
+        if self.on_job_shed is not None:
+            self.on_job_shed(je)
 
     def _job_completed(self, je: JobExec) -> None:
         if self.on_job_complete is not None:
@@ -789,13 +956,17 @@ class ServingEngine:
 
 
 def serve(jobs: list[FheJob], chip: ChipConfig, policy=None, validate: bool = True,
-          hoist: bool = False, exec_policy: ExecPolicy | None = None) -> ServeResult:
+          hoist: bool = False, exec_policy: ExecPolicy | None = None,
+          shed_after: float | None = None) -> ServeResult:
     """Run an open-loop job list through the event engine; the one-call API.
 
     ``exec_policy`` selects the service-time kernel mode (an
     ``repro.fhe.ExecPolicy``); the legacy ``hoist=`` bool is honoured when no
-    policy is given."""
-    eng = ServingEngine(chip, policy=policy, hoist=hoist, exec_policy=exec_policy)
+    policy is given.  ``shed_after`` arms the engine-level queue timeout: jobs
+    still queued that many cycles after arrival end ``JobState.SHED`` instead
+    of waiting forever (fleet admission lives in ``serve_cluster``)."""
+    eng = ServingEngine(chip, policy=policy, hoist=hoist, exec_policy=exec_policy,
+                        shed_after=shed_after)
     for job in jobs:
         eng.submit(job)
     result = eng.run()
@@ -803,8 +974,10 @@ def serve(jobs: list[FheJob], chip: ChipConfig, policy=None, validate: bool = Tr
 
 
 def serve_source(source, chip: ChipConfig, policy=None, validate: bool = True,
-                 hoist: bool = False, exec_policy: ExecPolicy | None = None) -> ServeResult:
+                 hoist: bool = False, exec_policy: ExecPolicy | None = None,
+                 shed_after: float | None = None) -> ServeResult:
     """Run a closed-loop traffic source (arrivals depend on completions)."""
-    eng = ServingEngine(chip, policy=policy, hoist=hoist, exec_policy=exec_policy)
+    eng = ServingEngine(chip, policy=policy, hoist=hoist, exec_policy=exec_policy,
+                        shed_after=shed_after)
     result = eng.run(source=source)
     return result.validate() if validate else result

@@ -1,6 +1,9 @@
 """Traffic generation for the serving subsystem: open-loop Poisson streams,
-sharded per-chip sub-streams, a skewed bursty-tenant stream, trace replay,
-and a closed-loop "N concurrent tenants" source.
+sharded per-chip sub-streams, a skewed bursty-tenant stream, a diurnal
+(day/night rate curve) production-shaped stream, trace replay, and a
+closed-loop "N concurrent tenants" source — plus the mix-capacity helpers
+(``mix_capacity_jobs_per_mcycle`` / ``fleet_capacity_jobs_per_mcycle``) that
+turn "serve X× fleet capacity" into a concrete arrival rate.
 
 All generators are seeded and fully deterministic — the same seed reproduces
 the same arrival sequence bit-for-bit (the determinism test in
@@ -127,6 +130,129 @@ def sharded_poisson_jobs(cfg: PoissonConfig, n_shards: int) -> list[list[FheJob]
         shards.append(_draw_poisson(sub, np.random.default_rng(child)))
         next_id += n_k
     return shards
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalConfig:
+    """Production-shaped open-loop arrivals: a Poisson process whose rate
+    follows a raised-cosine day/night curve over hours of simulated time.
+
+    The instantaneous rate is::
+
+        rate(t) = trough + (peak − trough) · ½(1 − cos 2π(t/period + phase))
+
+    i.e. the stream starts at the trough (``phase_frac=0`` ≈ midnight), peaks
+    half a period in, and returns — the canonical diurnal shape every
+    production service sees.  The long-run mean rate is
+    ``peak · (1 + trough_frac) / 2`` (``mean_rate_per_mcycle``), which is how
+    the overload bench dials a stream to X× fleet capacity.  Arrivals are
+    drawn by *thinning* (Lewis & Shedler): candidate arrivals at the peak
+    rate, each kept with probability ``rate(t)/peak`` — exact for a
+    non-homogeneous Poisson process and fully seeded/deterministic like every
+    other source here.
+    """
+
+    peak_rate_per_mcycle: float
+    period_mcycles: float = 40.0  # one simulated "day"
+    n_periods: float = 2.0  # stream horizon in days
+    trough_frac: float = 0.25  # night-time rate as a fraction of peak
+    phase_frac: float = 0.0  # fraction of a period to shift the curve by
+    mix: Mapping[str, float] = dataclasses.field(default_factory=lambda: dict(MIXED_MIX))
+    priority_mix: Mapping[int, float] = dataclasses.field(default_factory=lambda: {0: 1.0})
+    seed: int = 0
+    start_id: int = 0
+    tenant_id: int = 0
+
+    def __post_init__(self):
+        if self.peak_rate_per_mcycle <= 0:
+            raise ValueError(f"peak rate must be positive, got {self.peak_rate_per_mcycle}")
+        if self.period_mcycles <= 0 or self.n_periods <= 0:
+            raise ValueError("period_mcycles and n_periods must be positive")
+        if not 0.0 <= self.trough_frac <= 1.0:
+            raise ValueError(f"trough_frac must be in [0, 1], got {self.trough_frac}")
+
+    @property
+    def mean_rate_per_mcycle(self) -> float:
+        """Long-run mean of the rate curve (jobs per Mcycle)."""
+        return self.peak_rate_per_mcycle * (1.0 + self.trough_frac) / 2.0
+
+    @property
+    def horizon_cycles(self) -> float:
+        return self.n_periods * self.period_mcycles * 1e6
+
+
+def diurnal_rate(cfg: DiurnalConfig, t_cycles: float) -> float:
+    """Instantaneous arrival rate (jobs/Mcycle) at simulated time ``t_cycles``."""
+    peak, trough = cfg.peak_rate_per_mcycle, cfg.trough_frac * cfg.peak_rate_per_mcycle
+    x = t_cycles / (cfg.period_mcycles * 1e6) + cfg.phase_frac
+    return trough + (peak - trough) * 0.5 * (1.0 - np.cos(2.0 * np.pi * x))
+
+
+def diurnal_jobs(cfg: DiurnalConfig) -> list[FheJob]:
+    """Materialise the diurnal stream over ``n_periods`` simulated days.
+
+    Unlike ``poisson_jobs`` the job COUNT is not fixed — it is governed by
+    the rate curve and the horizon (≈ ``mean_rate_per_mcycle × horizon``),
+    exactly like real traffic.  Job ids are ``start_id, start_id+1, …`` in
+    arrival order.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    names, name_p = _normalise(cfg.mix)
+    prios, prio_p = _normalise(cfg.priority_mix)
+    peak_gap = 1e6 / cfg.peak_rate_per_mcycle
+    horizon = cfg.horizon_cycles
+    t, jobs = 0.0, []
+    while True:
+        t += float(rng.exponential(peak_gap))
+        if t >= horizon:
+            return jobs
+        # thinning: keep this candidate with probability rate(t)/peak
+        if float(rng.uniform()) * cfg.peak_rate_per_mcycle > diurnal_rate(cfg, t):
+            continue
+        w = names[int(rng.choice(len(names), p=name_p))]
+        pr = int(prios[int(rng.choice(len(prios), p=prio_p))])
+        jobs.append(make_job(w, priority=pr, arrival_cycle=int(round(t)),
+                             job_id=cfg.start_id + len(jobs), tenant_id=cfg.tenant_id))
+
+
+def mix_capacity_jobs_per_mcycle(mix: Mapping[str, float], chip,
+                                 exec_policy=None, deep_coop: bool = False) -> float:
+    """Steady-state service capacity of ONE chip on this workload mix.
+
+    Each shallow job occupies one of ``n_affiliations`` lanes for its service
+    time (the §4.2 policy drains shallow work affiliation-wide); a deep job
+    owns the whole chip.  The expected chip-time per offered job is therefore
+    ``Σ p_w · service_w / width_w``, and capacity is its reciprocal in jobs
+    per Mcycle.  An estimate, not an oracle — it ignores queueing geometry,
+    cold starts, and preemption — but it is exactly the number a capacity
+    planner needs to dial offered load to X× capacity.
+    """
+    from .policy import job_service_sim  # local: traffic is imported by policy users
+
+    names, p = _normalise(mix)
+    cost = 0.0
+    for name, prob in zip(names, p):
+        job = make_job(name)
+        sim = job_service_sim(job, chip, policy=exec_policy, deep_coop=deep_coop)
+        width = chip.n_affiliations if (chip.multi_job and job.kind == "shallow") else 1
+        cost += float(prob) * sim.cycles / width
+    return 1e6 / cost
+
+
+def fleet_capacity_jobs_per_mcycle(mix: Mapping[str, float], chip_pairs,
+                                   deep_coop: bool = False) -> float:
+    """Aggregate ``mix_capacity_jobs_per_mcycle`` over a fleet.
+
+    ``chip_pairs`` is an iterable of ``ChipConfig`` or ``(ChipConfig,
+    ExecPolicy | None)`` entries — the same shape ``ClusterConfig.chip_pairs``
+    returns, so benches can size offered load straight off a cluster config.
+    """
+    total = 0.0
+    for entry in chip_pairs:
+        chip, pol = entry if isinstance(entry, tuple) else (entry, None)
+        total += mix_capacity_jobs_per_mcycle(mix, chip, exec_policy=pol,
+                                              deep_coop=deep_coop)
+    return total
 
 
 @dataclasses.dataclass(frozen=True)

@@ -379,8 +379,12 @@ def test_cluster_metrics_balance_and_tenants():
     assert 0.0 < m["fairness_jain_chips"] <= 1.0
     assert 0.0 < m["fairness_jain"] <= 1.0  # two tenants (background + bursty)
     assert m["throughput_jobs_per_mcycle"] > 0
-    # summarize dispatches on result type: explicit call agrees
-    assert m == serve.summarize_cluster(result)
+    # summarize dispatches on result type: explicit call agrees (NaN-aware:
+    # empty percentile samples are NaN and NaN != NaN under plain ==)
+    explicit = serve.summarize_cluster(result)
+    assert m.keys() == explicit.keys()
+    assert all(v == explicit[k] or (np.isnan(v) and np.isnan(explicit[k]))
+               for k, v in m.items())
 
 
 def test_summarize_cluster_idle_chip():
@@ -394,8 +398,14 @@ def test_summarize_cluster_idle_chip():
     assert m["n_jobs"] == 1 and m["n_chips"] == 3
     assert m["chip_util_min"] == 0.0
     assert m["chip_util_max"] > 0.0
-    assert m["latency_p99_deep_cycles"] == 0.0  # no deep jobs: percentile of []
-    assert all(np.isfinite(v) for v in m.values())
+    # no deep jobs and nothing shed: empty percentile samples are NaN (a 0.0
+    # here used to read as a perfect tail and sail through p99 gates)
+    assert np.isnan(m["latency_p99_deep_cycles"])
+    assert m["n_completed_deep"] == 0.0
+    assert np.isnan(m["time_to_shed_p99_cycles"])
+    empty_sample_keys = {"latency_p99_deep_cycles", "time_to_shed_p50_cycles",
+                         "time_to_shed_p99_cycles"}
+    assert all(np.isfinite(v) for k, v in m.items() if k not in empty_sample_keys)
 
 
 def test_summarize_cluster_single_chip_fleet():

@@ -1,0 +1,350 @@
+"""Overload-protection tests: the admission property suite (work conservation
+with drops excluded, shed jobs never touching placements/warm-sets/backlogs,
+token-bucket tenant isolation, cross-run determinism), the engine queue
+timeout, event-heap compaction under mass cancellation, the NaN
+empty-percentile regression, diurnal traffic determinism, and the
+`core.scheduler` admission passthrough."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import serve
+from repro.core import hardware as H
+from repro.core import jobs as J
+from repro.core import scheduler as S
+from repro.serve.cluster import ROUTERS
+from repro.serve.events import EventLoop
+from repro.serve.metrics import _pct
+from repro.serve.policy import AdmissionConfig, JobState, ServingEngine, TokenBucket
+
+SHALLOW = ("matmul", "lola_mnist_plain", "dblookup")
+
+
+def _spaced_jobs(n, gap, workload="matmul", tenant_id=0, start_id=0, start=0):
+    return [J.make_job(workload, arrival_cycle=start + i * gap,
+                       job_id=start_id + i, tenant_id=tenant_id)
+            for i in range(n)]
+
+
+def _random_jobs(seed, n, deep_frac=0.15):
+    import random
+
+    rng = random.Random(seed)
+    jobs = []
+    for i in range(n):
+        w = "lstm" if rng.random() < deep_frac else rng.choice(SHALLOW)
+        jobs.append(J.make_job(w, priority=rng.randint(0, 3),
+                               arrival_cycle=rng.randint(0, 1_500_000), job_id=i))
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# empty-percentile NaN regression (satellite: _pct must not report p99=0.0)
+# ---------------------------------------------------------------------------
+
+
+def test_pct_empty_sample_is_nan():
+    """p99 of an empty sample used to be 0.0 — a 'perfect' tail that sails
+    through any p99-must-beat-X gate.  It must be NaN (poisons comparisons)."""
+    out = _pct([])
+    assert set(out) == {"p50", "p95", "p99"}
+    assert all(math.isnan(v) for v in out.values())
+    assert all(math.isfinite(v) for v in _pct([1.0, 2.0]).values())
+
+
+def test_summarize_carries_completion_counts_and_nan_tails():
+    """Gates need explicit per-kind completion counts to require non-empty
+    samples; a shallow-only stream reports deep p99 as NaN, count 0."""
+    res = serve.serve(_spaced_jobs(4, 100_000), H.FLASH_FHE)
+    m = serve.summarize(res)
+    assert m["n_completed_shallow"] == 4.0 and m["n_completed_deep"] == 0.0
+    assert m["n_offered"] == 4.0 and m["n_shed"] == 0.0 and m["drop_rate"] == 0.0
+    assert m["goodput_frac"] == 1.0
+    assert np.isnan(m["latency_p99_deep_cycles"])
+    assert np.isnan(m["time_to_shed_p99_cycles"])  # nothing shed
+
+
+# ---------------------------------------------------------------------------
+# admission property suite (tentpole invariants over random streams)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=5_000),
+       n=st.integers(min_value=1, max_value=12),
+       n_chips=st.integers(min_value=1, max_value=3),
+       router=st.sampled_from(ROUTERS),
+       max_wait=st.sampled_from([None, 50_000.0, 500_000.0]),
+       rate=st.sampled_from([None, 2.0, 50.0]),
+       shed_after=st.sampled_from([None, 150_000.0, 2_000_000.0]))
+def test_admission_invariants(seed, n, n_chips, router, max_wait, rate, shed_after):
+    """For ANY admission policy over ANY stream/fleet/router: every job ends
+    DONE or SHED (drops excluded from conservation), shed jobs never carry
+    segments/completions, per-chip busy cycles equal the service demand of
+    the DONE jobs placed there, backlog estimators stay non-negative, and the
+    whole run is bit-deterministic across repeats."""
+    jobs = _random_jobs(seed, n)
+    adm = AdmissionConfig(max_wait_cycles=max_wait, tenant_rate_per_mcycle=rate,
+                          shed_after_cycles=shed_after)
+
+    def go():
+        return serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=n_chips,
+                                   router=router, seed=seed, validate=True,
+                                   admission=adm)
+
+    result = go()  # validate=True asserts the shed carve-outs + backlog signs
+    done = [je for je in result.jobs if je.state is JobState.DONE]
+    shed = [je for je in result.jobs if je.state is JobState.SHED]
+    assert len(done) + len(shed) == n  # no third terminal state, no losses
+    for je in shed:
+        assert not je.segments and je.completion is None and je.first_start is None
+        assert je.shed_cycle is not None
+        assert je.time_to_shed >= 0.0
+        if je.chip_index < 0:  # router shed: never placed anywhere
+            assert je.job.job_id not in result.placements
+    # work conservation with drops excluded: a shed job contributes zero
+    # busy cycles even though the router priced (and later un-booked) it
+    for r in result.chip_results:
+        busy = sum(je.busy_cycles for je in r.jobs)
+        owed = sum(je.service_cycles + je.spill_restore_cycles
+                   for je in r.jobs if je.state is JobState.DONE)
+        assert busy == pytest.approx(owed)
+    assert all(v >= 0.0 for v in result.final_backlog)
+    assert all(v >= 0.0 for v in result.final_backlog_serial)
+    assert result.peak_backlog_cycles >= 0.0
+    assert sum(result.shed_reasons.values()) == len(shed)
+
+    repeat = go()  # same seed, same stream -> identical decisions
+    assert [je.state for je in repeat.jobs] == [je.state for je in result.jobs]
+    assert repeat.placements == result.placements
+    assert [je.completion for je in repeat.jobs] == [je.completion for je in result.jobs]
+    assert repeat.shed_reasons == result.shed_reasons
+
+
+def test_reserve_sheds_at_the_door_and_bounds_backlog():
+    """max_wait_cycles=0 admits only into idle capacity: every job that would
+    queue sheds with reason 'reserve', and the peak backlog never exceeds what
+    the admitted jobs themselves put there."""
+    jobs = _spaced_jobs(24, 1_000)  # far above one chip's drain rate
+    result = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=1,
+                                 admission=AdmissionConfig(max_wait_cycles=0.0))
+    shed = [je for je in result.jobs if je.state is JobState.SHED]
+    assert shed and result.shed_reasons == {"reserve": len(shed)}
+    assert all(je.chip_index < 0 and je.time_to_shed == 0.0 for je in shed)
+    protected = result.peak_backlog_cycles
+    unprotected = serve.serve_cluster(jobs, H.FLASH_FHE, n_chips=1).peak_backlog_cycles
+    assert protected < unprotected
+
+
+def test_token_bucket_isolates_abusive_tenant():
+    """A flooding tenant drains only its OWN bucket: the victim keeps (almost)
+    its solo goodput, while a reserve-only policy punishes both tenants."""
+    victim = _spaced_jobs(30, 80_000, tenant_id=0, start_id=0)
+    flood = _spaced_jobs(400, 4_000, tenant_id=1, start_id=1_000)
+    mixed = sorted(victim + flood, key=lambda j: (j.arrival_cycle, j.job_id))
+    bucket = AdmissionConfig(tenant_rate_per_mcycle=15.0, tenant_burst=4.0)
+
+    solo = serve.serve_cluster(victim, H.FLASH_FHE, n_chips=2, admission=bucket)
+    solo_goodput = serve.goodput_by_tenant(solo).get(0, 0)
+    assert solo_goodput == len(victim)  # victim alone is well under its rate
+
+    flooded = serve.serve_cluster(mixed, H.FLASH_FHE, n_chips=2, admission=bucket)
+    goodput = serve.goodput_by_tenant(flooded)
+    drops = serve.drop_rate_by_tenant(flooded)
+    assert goodput.get(0, 0) >= solo_goodput - 1  # isolation property
+    assert drops[0] <= 0.05 < 0.5 <= drops[1]  # the abuser pays, not the victim
+    assert flooded.shed_reasons.get("token_bucket", 0) > 0
+
+    # contrast: a tenant-blind utilization reserve sheds whoever arrives when
+    # the fleet is congested -- the flood collaterally drops victim jobs
+    reserve = serve.serve_cluster(mixed, H.FLASH_FHE, n_chips=2,
+                                  admission=AdmissionConfig(max_wait_cycles=50_000.0))
+    assert serve.drop_rate_by_tenant(reserve)[0] > drops[0]
+
+
+def test_engine_queue_timeout_sheds_stuck_jobs():
+    """Jobs still QUEUED shed_after cycles past arrival shed exactly at the
+    deadline (time_to_shed == shed_after); started jobs are exempt."""
+    chip = H.FLASH_FHE
+    n_lanes = chip.n_affiliations
+    jobs = _spaced_jobs(4 * n_lanes, 0)  # one burst: lanes fill, the rest queue
+    shed_after = 10_000.0
+    res = serve.serve(jobs, chip, shed_after=shed_after)
+    done = [je for je in res.jobs if je.state is JobState.DONE]
+    shed = [je for je in res.jobs if je.state is JobState.SHED]
+    assert len(done) >= n_lanes  # the first wave dispatched at arrival
+    assert shed, "overflow jobs behind a full burst must hit the timeout"
+    for je in shed:
+        assert je.time_to_shed == pytest.approx(shed_after)
+        assert not je.segments and je.completion is None
+    m = serve.summarize(res)
+    assert m["n_shed"] == len(shed)
+    assert m["time_to_shed_p99_cycles"] == pytest.approx(shed_after)
+
+
+def test_sequential_engine_purges_shed_jobs():
+    """The SequentialPolicy FIFO lazily purges SHED entries: a CraterLake-style
+    single-job chip under a burst with a short timeout completes some jobs,
+    sheds the tail, and still validates its timeline."""
+    jobs = _spaced_jobs(8, 0)
+    res = serve.serve(jobs, H.CRATERLAKE, shed_after=20_000.0)
+    states = {je.state for je in res.jobs}
+    assert JobState.DONE in states and JobState.SHED in states
+    done = [je for je in res.jobs if je.state is JobState.DONE]
+    # the survivors ran back-to-back, never interleaved with shed entries
+    assert all(je.completion is not None for je in done)
+
+
+# ---------------------------------------------------------------------------
+# event-heap compaction under mass cancellation (satellite 3)
+# ---------------------------------------------------------------------------
+
+
+class _CheckedLoop(EventLoop):
+    """EventLoop that asserts the compaction invariant after every mutation:
+    outside the compaction call itself, cancelled entries never outnumber
+    live ones (beyond the 32-entry hysteresis floor)."""
+
+    def __init__(self):
+        super().__init__()
+        self.max_heap = 0
+        self.max_live = 0
+
+    def _check(self):
+        assert self._n_cancelled <= 32 or 2 * self._n_cancelled <= len(self._heap), (
+            f"heap bloat: {self._n_cancelled} cancelled of {len(self._heap)}")
+        self.max_heap = max(self.max_heap, len(self._heap))
+        self.max_live = max(self.max_live, len(self._heap) - self._n_cancelled)
+
+    def call_at(self, time, fn):
+        ev = super().call_at(time, fn)
+        self._check()
+        return ev
+
+    def _note_cancel(self):
+        super()._note_cancel()
+        self._check()
+
+
+def test_heap_compacts_on_pure_cancellation_burst():
+    """A mass cancellation with NO follow-up inserts (the admission-shed
+    pattern) must compact immediately — O(1) amortised, not O(run length)."""
+    loop = _CheckedLoop()
+    events = [loop.call_at(1e9 + i, lambda: None) for i in range(5_000)]
+    for ev in events[100:]:
+        ev.cancel()
+    assert len(loop._heap) <= 2 * 100 + 66  # 100 live survivors
+    assert len(loop) == 100
+
+
+def test_heap_bounded_under_mass_shedding():
+    """Stress: a 10k-job burst stream on one chip with a tight queue timeout
+    sheds >50% of jobs (each shed cancels its queued deadline event); the heap
+    must never exceed 2x the live events (+hysteresis) at ANY point."""
+    loop = _CheckedLoop()
+    eng = ServingEngine(H.FLASH_FHE, loop=loop, shed_after=150_000.0)
+    for job in _spaced_jobs(10_000, 2_500):  # ~3x one chip's drain rate
+        eng.submit(job)
+    res = eng.run()
+    shed = sum(1 for je in res.jobs if je.state is JobState.SHED)
+    assert shed > 5_000, f"stress stream must shed >50%, shed {shed}"
+    assert loop.max_heap <= 2 * loop.max_live + 66, (
+        f"heap peaked at {loop.max_heap} with only {loop.max_live} live events")
+
+
+# ---------------------------------------------------------------------------
+# diurnal traffic + capacity estimators
+# ---------------------------------------------------------------------------
+
+
+def test_diurnal_stream_is_deterministic_and_bounded():
+    cfg = serve.DiurnalConfig(peak_rate_per_mcycle=10.0, period_mcycles=5.0,
+                              n_periods=2.0, trough_frac=0.5, seed=9)
+    a, b = serve.diurnal_jobs(cfg), serve.diurnal_jobs(cfg)
+    assert [(j.job_id, j.arrival_cycle, j.workload) for j in a] == \
+           [(j.job_id, j.arrival_cycle, j.workload) for j in b]
+    assert all(0 <= j.arrival_cycle < cfg.horizon_cycles for j in a)
+    assert [j.job_id for j in a] == list(range(len(a)))  # contiguous ids
+    # the realised count tracks mean_rate x horizon (deterministic seed, so a
+    # loose band is safe)
+    expect = cfg.mean_rate_per_mcycle * cfg.horizon_cycles / 1e6
+    assert 0.5 * expect <= len(a) <= 1.5 * expect
+
+
+def test_diurnal_rate_curve_shape():
+    cfg = serve.DiurnalConfig(peak_rate_per_mcycle=8.0, period_mcycles=10.0,
+                              trough_frac=0.25)
+    half = cfg.period_mcycles * 1e6 / 2
+    assert serve.diurnal_rate(cfg, 0.0) == pytest.approx(2.0)  # trough
+    assert serve.diurnal_rate(cfg, half) == pytest.approx(8.0)  # peak
+    assert serve.diurnal_rate(cfg, half / 2) == pytest.approx(5.0)  # midpoint
+    assert cfg.mean_rate_per_mcycle == pytest.approx(5.0)
+
+
+def test_diurnal_config_validation():
+    with pytest.raises(ValueError):
+        serve.DiurnalConfig(peak_rate_per_mcycle=0.0)
+    with pytest.raises(ValueError):
+        serve.DiurnalConfig(peak_rate_per_mcycle=1.0, period_mcycles=0.0)
+    with pytest.raises(ValueError):
+        serve.DiurnalConfig(peak_rate_per_mcycle=1.0, trough_frac=1.5)
+
+
+def test_capacity_estimators_scale_with_fleet():
+    mix = {"matmul": 0.7, "lstm": 0.3}
+    one = serve.mix_capacity_jobs_per_mcycle(mix, H.FLASH_FHE)
+    assert one > 0.0
+    fleet = serve.fleet_capacity_jobs_per_mcycle(mix, [H.FLASH_FHE] * 3)
+    assert fleet == pytest.approx(3 * one)
+    # a pure-shallow mix drains n_affiliations-wide, so capacity is higher
+    assert serve.mix_capacity_jobs_per_mcycle({"matmul": 1.0}, H.FLASH_FHE) > one
+
+
+# ---------------------------------------------------------------------------
+# config validation + token bucket unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_admission_config_validation():
+    with pytest.raises(ValueError):
+        AdmissionConfig(max_wait_cycles=-1.0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(tenant_rate_per_mcycle=0.0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(tenant_rate_per_mcycle=1.0, tenant_burst=0.5)
+    with pytest.raises(ValueError):
+        AdmissionConfig(shed_after_cycles=0.0)
+    with pytest.raises(ValueError):  # cluster config type-checks the field
+        serve.serve_cluster([], H.FLASH_FHE, n_chips=1, admission="reserve")
+
+
+def test_token_bucket_refill_and_burst_cap():
+    b = TokenBucket(rate_per_mcycle=1.0, burst=2.0)
+    assert b.try_take(0.0) and b.try_take(0.0)  # starts full at burst
+    assert not b.try_take(0.0)  # empty now
+    assert not b.try_take(500_000.0)  # +0.5 tokens: still < 1
+    assert b.try_take(1_600_000.0)  # refilled past 1
+    b2 = TokenBucket(rate_per_mcycle=1.0, burst=2.0)
+    b2.try_take(0.0)
+    assert b2.try_take(100e6)  # refill caps at burst, not elapsed x rate
+    assert b2.try_take(100e6) and not b2.try_take(100e6)
+
+
+# ---------------------------------------------------------------------------
+# scheduler passthrough
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_drops_shed_jobs_from_schedule():
+    jobs = _spaced_jobs(16, 1_000)
+    out = S.schedule(jobs, H.FLASH_FHE, n_chips=2,
+                     admission=AdmissionConfig(max_wait_cycles=0.0))
+    assert 0 < len(out) < len(jobs)  # some admitted, some shed at the door
+    assert all(s.sim is not None and s.end_cycle > s.start_cycle >= 0 for s in out)
+    # single-chip path threads the queue timeout through serve()
+    solo = S.schedule(_spaced_jobs(24, 0), H.FLASH_FHE,
+                      admission=AdmissionConfig(shed_after_cycles=10_000.0))
+    assert 0 < len(solo) < 24

@@ -5,6 +5,7 @@ core.scheduler compatibility wrapper."""
 
 import random
 
+import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
@@ -71,17 +72,19 @@ def test_event_loop_rejects_past_and_negative():
 
 
 def test_event_heap_compacts_cancelled_events():
-    """Lazy cancellation must not bloat the heap: once cancelled entries
-    outnumber live ones, the next insertion compacts (long fleet runs leave a
-    dead completion event per preemption)."""
+    """Lazy cancellation must not bloat the heap: compaction now fires on the
+    cancellation itself (not just the next insertion), so even a pure
+    cancellation burst — admission shedding revoking queued deadlines with no
+    follow-up inserts — keeps cancelled entries bounded by max(32, live)."""
     loop = EventLoop()
     evs = [loop.call_at(1_000.0 + i, lambda: None) for i in range(500)]
     for e in evs[:400]:
         e.cancel()
         e.cancel()  # double-cancel must not double-count
+        assert loop._n_cancelled <= 32 or 2 * loop._n_cancelled <= len(loop._heap)
     assert len(loop) == 100
-    loop.call_at(5_000.0, lambda: None)  # triggers compaction
-    assert len(loop._heap) == 101  # physically shrunk, not just logically
+    assert len(loop._heap) <= 2 * 100 + 32  # physically bounded, not just logically
+    loop.call_at(5_000.0, lambda: None)
     assert len(loop) == 101
     loop.run()
     assert loop.processed == 101
@@ -211,7 +214,10 @@ def test_serving_end_to_end_deterministic():
                               priority_mix={0: 0.5, 5: 0.5}, seed=7)
     m1 = serve.summarize(serve.serve(serve.poisson_jobs(cfg), H.FLASH_FHE))
     m2 = serve.summarize(serve.serve(serve.poisson_jobs(cfg), H.FLASH_FHE))
-    assert m1 == m2
+    # NaN-aware equality: empty percentile samples (no deep jobs, no sheds)
+    # report NaN, and NaN != NaN under plain ==
+    assert m1.keys() == m2.keys()
+    assert all(v == m2[k] or (np.isnan(v) and np.isnan(m2[k])) for k, v in m1.items())
 
 
 def test_trace_jobs_tuples_and_dicts():

@@ -136,6 +136,25 @@ def emit_overload(emit, smoke: bool) -> None:
     emit("overload.gates_flat_tail_goodput_divergence", int(not failures))
 
 
+def emit_faults(emit, smoke: bool) -> None:
+    """Fault-tolerance table: goodput/loss/retry/availability per scenario
+    (fault-free baseline, crash with and without recovery, flaky, straggler),
+    plus the recovery gates (goodput floor through the outage, loss
+    divergence without recovery, retries recorded)."""
+    from . import fault_bench
+
+    rows = fault_bench.run(smoke=smoke)
+    for r in rows:
+        prefix = f"faults.{r['scenario']}.chips{int(r['n_chips'])}"
+        for key in ("goodput_frac", "n_failed", "retries_total",
+                    "n_retried_jobs", "wasted_mcycles",
+                    "checkpoint_saved_mcycles", "availability",
+                    "downtime_mcycles", "latency_p99_shallow_cycles"):
+            emit(f"{prefix}.{key}", r[key])
+    failures = fault_bench.check_gates(rows)
+    emit("faults.gates_goodput_loss_divergence", int(not failures))
+
+
 def emit_paper_figs(emit) -> None:
     from . import paper_figs, roofline_table
 
@@ -204,7 +223,9 @@ def main(argv=None) -> None:
                          "+ fleet scale-out/hetero/gang smoke (all four cluster "
                          "gates enforced) + mixed CKKS/BGV serving smoke (scheme "
                          "gates enforced) + diurnal overload/admission smoke "
-                         "(flat-tail/goodput/divergence gates enforced)")
+                         "(flat-tail/goodput/divergence gates enforced) + "
+                         "fault-tolerance smoke (recovery goodput/loss gates "
+                         "enforced)")
     ap.add_argument("--out", default=None, help="also write CSV rows to this file")
     ap.add_argument("--iters", type=int, default=3, help="timing iterations per config")
     args = ap.parse_args(argv)
@@ -217,6 +238,7 @@ def main(argv=None) -> None:
         emit_cluster(emit, smoke=args.smoke)
         emit_multischeme(emit, smoke=args.smoke)
         emit_overload(emit, smoke=args.smoke)
+        emit_faults(emit, smoke=args.smoke)
         if not args.smoke:
             emit_paper_figs(emit)
             emit_serving(emit, smoke=False)

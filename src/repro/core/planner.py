@@ -123,7 +123,7 @@ def hoisted_rotations(pp: PlanParams, level: int, n_rots: int,
     folded automorphism (no per-rotation BConv/NTT through the extended
     basis: β + O(1) forward ext-NTTs per group instead of n_rots·β).
 
-    Mirrors ``repro.fhe.ops.rotate_hoisted_group`` exactly: per rotation one
+    Mirrors ``ctx.rotate_hoisted_group`` exactly: per rotation one
     KSK stream + β MAC pairs + a ModDown pair + the c0 add + one AUTO per
     output component (keys are σ_t^{-1}-pre-permuted, so the automorphism
     lands once, after ModDown)."""

@@ -47,7 +47,8 @@ class ScheduledJob:
 
 def schedule(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: int = 1,
              router: str = "jsq", exec_policy=None, chips=None,
-             gang_max_chips: int = 1, admission=None) -> list[ScheduledJob]:
+             gang_max_chips: int = 1, admission=None,
+             faults=None, retry=None) -> list[ScheduledJob]:
     """Run ``jobs`` through the event-driven serving engine; returns per-job
     placement and completion in submission order.  Timeline consistency
     (no overlapping placements, work conservation) is asserted on every call.
@@ -62,21 +63,25 @@ def schedule(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: int = 
     kernel mode.  ``admission`` (an ``repro.serve.AdmissionConfig``) arms
     overload protection: SHED jobs are *dropped from the returned schedule*
     (they have no placement or completion) — callers that need the shed
-    records use ``repro.serve.serve_cluster`` directly.
+    records use ``repro.serve.serve_cluster`` directly.  ``faults=`` (a
+    ``repro.serve.FaultPlan`` / ``FaultConfig``) and ``retry=`` (a
+    ``RetryPolicy``) arm fault injection on the fleet path; like SHED jobs,
+    FAILED (retries-exhausted) jobs are dropped from the returned schedule.
     """
     # deferred import: repro.core.__init__ imports this module, and the serve
     # package imports repro.core submodules — a top-level import would cycle
     from repro.serve.cluster import serve_cluster
     from repro.serve.policy import JobState, serve
 
-    if chips is None and n_chips <= 1:
+    if chips is None and n_chips <= 1 and faults is None:
         shed_after = admission.shed_after_cycles if admission is not None else None
         jes = serve(jobs, chip, validate=True, exec_policy=exec_policy,
                     shed_after=shed_after).jobs
     else:
         jes = serve_cluster(jobs, chip, n_chips=n_chips, router=router, validate=True,
                             exec_policy=exec_policy, chips=chips,
-                            gang_max_chips=gang_max_chips, admission=admission).jobs
+                            gang_max_chips=gang_max_chips, admission=admission,
+                            faults=faults, retry=retry).jobs
     jes = [je for je in jes if je.state is JobState.DONE]
     return [
         ScheduledJob(

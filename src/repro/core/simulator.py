@@ -23,7 +23,7 @@ traces (``repro.kernels.fusedks``) emit none — `tests/test_fusedks.py`
 validates this accounting against both captured streams.
 
 Hoisted-rotation traces (``planner.hoisted_rotations`` /
-``fhe.ops.rotate_hoisted_group``) are the other shape this model prices:
+``ctx.rotate_hoisted_group``) are the other shape this model prices:
 one ModUp (INTT + β·{PMULT, BCONV, NTT}) plus ONE STORE_WS/LOAD_WS pair of
 β·ext limbs — the materialised hoisted digits round-tripping to the MAC
 launches — followed by k per-rotation {LOAD_KSK, MAC, ModDown, PADD, 2×AUTO}

@@ -3,7 +3,7 @@
 Slot ordering follows the standard generator-5 convention: slot j evaluates the
 message polynomial at ζ^{5^j mod 2N} (ζ = e^{iπ/N}), with conjugate slots at the
 negated exponents.  Under this ordering the Galois automorphism σ_{5^r} is a
-cyclic left-rotation of the slot vector by r — which is what `ops.rotate`
+cyclic left-rotation of the slot vector by r — which is what `ctx.rotate`
 key-switches.
 
 Both directions are O(N log N): the evaluation at all odd powers ζ^{2k+1}

@@ -447,7 +447,7 @@ def rotate_hoisted(c0_eval, hd: HoistedDigits, t: int, keys: KeySet, params: Ckk
     Runs only KSK-MAC + ModDown (+ the folded automorphism) — the expensive
     ModUp was paid once when ``hd`` was built.  Returns the rotated
     ciphertext's (c0, c1) eval-domain polynomials; bit-exact against the
-    un-hoisted ``ops.rotate`` path.
+    un-hoisted ``ctx.rotate`` path.
     """
     ksk_stack = hoisted_ksk(params, keys, t, level)[None]
     accs = hoisted_galois_ks(hd, ksk_stack, params, level, backend)

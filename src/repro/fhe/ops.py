@@ -9,15 +9,14 @@ Execution choices (kernel backend, rotation-hoisting mode, numerics mode) are
 owned by ``repro.fhe.context.FheContext`` — every op here is implemented ONCE
 as a context-consuming ``_impl`` function, and the context's methods
 (``ctx.add``, ``ctx.rotate``, ...) are the primary API.  The module-level free
-functions that take a loose ``backend=`` kwarg are **deprecated** shims kept
-for source compatibility: they build an equivalent context and delegate,
-emitting a ``DeprecationWarning``.
+functions that took a loose ``backend=`` kwarg are **retired** (retirement
+plan step 3, docs/context_api.md): the old names resolve to a module
+``__getattr__`` stub that raises with the migration hint.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -52,40 +51,6 @@ class Plaintext:
 
 def _qs(params: CkksParams, level: int) -> np.ndarray:
     return np.array(params.q_primes[: level + 1], np.uint64)
-
-
-# ---------------------------------------------------------------------------
-# legacy-shim machinery
-# ---------------------------------------------------------------------------
-
-
-def _warn_deprecated(name: str, repl: str | None = None,
-                     module: str = "repro.fhe.ops", stacklevel: int = 3) -> None:
-    """The one deprecation-message emitter for every legacy shim in this
-    package (``linear``/``polyeval``/``bootstrap`` delegate through their own
-    one-line wrappers with ``stacklevel=4``) — message shape and attribution
-    stay consistent by construction."""
-    repl = repl if repl is not None else name
-    warnings.warn(
-        f"{module}.{name}() is deprecated; use repro.fhe.FheContext.{repl}()",
-        DeprecationWarning,
-        stacklevel=stacklevel,
-    )
-
-
-def _shim_ctx(params: CkksParams, backend: str, keys: KeySet | None = None,
-              hoisting: str = "auto"):
-    """The context equivalent of one legacy (params, backend[, hoisting]) call."""
-    from .context import ExecPolicy, FheContext
-
-    return FheContext(params=params, keys=keys,
-                      policy=ExecPolicy(backend=backend, hoisting=hoisting))
-
-
-def _stage(backend: str) -> str:
-    """Pointwise-stage backend for an op-level backend choice."""
-    _, stage = keyswitch.resolve_pipeline(backend)
-    return stage
 
 
 # ---------------------------------------------------------------------------
@@ -434,124 +399,42 @@ def _apply_galois(ctx, ct: Ciphertext, t: int, keys: KeySet) -> Ciphertext:
 
 
 # ---------------------------------------------------------------------------
-# deprecated free-function shims (kwarg-threading era API)
+# retired free-function shims (docs/context_api.md retirement plan, step 3):
+# the deprecated kwarg-threading entry points were deleted; the stub below
+# keeps the old names resolvable for ONE more PR, raising with the migration
+# hint instead of silently delegating.
 # ---------------------------------------------------------------------------
 
-
-def encode(params: CkksParams, z, level: int | None = None, scale: float | None = None,
-           backend: str = "auto") -> Plaintext:
-    _warn_deprecated("encode")
-    return _encode(_shim_ctx(params, backend), z, level, scale)
-
-
-def encode_const(params: CkksParams, c, level: int, scale: float,
-                 backend: str = "auto") -> Plaintext:
-    _warn_deprecated("encode_const")
-    return _encode_const(_shim_ctx(params, backend), c, level, scale)
-
-
-def decode(params: CkksParams, pt: Plaintext, backend: str = "auto") -> np.ndarray:
-    _warn_deprecated("decode")
-    return _decode(_shim_ctx(params, backend), pt)
-
-
-def encrypt(params: CkksParams, pk: PublicKey, pt: Plaintext, seed: int = 17,
-            backend: str = "auto") -> Ciphertext:
-    _warn_deprecated("encrypt")
-    return _encrypt(_shim_ctx(params, backend), pk, pt, seed)
-
-
-def decrypt(params: CkksParams, sk: SecretKey, ct: Ciphertext, backend: str = "auto") -> Plaintext:
-    _warn_deprecated("decrypt")
-    return _decrypt(_shim_ctx(params, backend), sk, ct)
+_RETIRED = {
+    "encode": "ctx.encode(z)",
+    "encode_const": "ctx.encode_const(c, level, scale)",
+    "decode": "ctx.decode(pt)",
+    "encrypt": "ctx.encrypt(pt)",
+    "decrypt": "ctx.decrypt(ct)",
+    "decrypt_decode": "ctx.decrypt_decode(ct)",
+    "add": "ctx.add(a, b)",
+    "sub": "ctx.sub(a, b)",
+    "negate": "ctx.negate(a)",
+    "add_plain": "ctx.add_plain(a, pt)",
+    "add_const": "ctx.add_const(a, c)",
+    "mul_plain": "ctx.mul_plain(a, pt)",
+    "mul_const": "ctx.mul_const(a, c)",
+    "mul_const_exact": "ctx.mul_const_exact(a, c, target_scale)",
+    "mul": "ctx.mul(a, b)",
+    "square": "ctx.square(a)",
+    "rescale": "ctx.rescale(ct)",
+    "rotate": "ctx.rotate(ct, r)",
+    "rotate_hoisted": "ctx.rotate_hoisted(ct, r)",
+    "rotate_hoisted_group": "ctx.rotate_hoisted_group(ct, rots)",
+    "conjugate": "ctx.conjugate(ct)",
+}
 
 
-def decrypt_decode(params: CkksParams, sk: SecretKey, ct: Ciphertext,
-                   backend: str = "auto") -> np.ndarray:
-    _warn_deprecated("decrypt_decode")
-    ctx = _shim_ctx(params, backend)
-    return _decode(ctx, _decrypt(ctx, sk, ct))
-
-
-def add(params: CkksParams, a: Ciphertext, b: Ciphertext, backend: str = "auto") -> Ciphertext:
-    _warn_deprecated("add")
-    return _add(_shim_ctx(params, backend), a, b)
-
-
-def sub(params: CkksParams, a: Ciphertext, b: Ciphertext, backend: str = "auto") -> Ciphertext:
-    _warn_deprecated("sub")
-    return _sub(_shim_ctx(params, backend), a, b)
-
-
-def negate(params: CkksParams, a: Ciphertext, backend: str = "auto") -> Ciphertext:
-    _warn_deprecated("negate")
-    return _negate(_shim_ctx(params, backend), a)
-
-
-def add_plain(params: CkksParams, a: Ciphertext, pt: Plaintext, backend: str = "auto") -> Ciphertext:
-    _warn_deprecated("add_plain")
-    return _add_plain(_shim_ctx(params, backend), a, pt)
-
-
-def add_const(params: CkksParams, a: Ciphertext, c, backend: str = "auto") -> Ciphertext:
-    _warn_deprecated("add_const")
-    return _add_const(_shim_ctx(params, backend), a, c)
-
-
-def mul_plain(params: CkksParams, a: Ciphertext, pt: Plaintext, rescale_after: bool = True,
-              backend: str = "auto") -> Ciphertext:
-    _warn_deprecated("mul_plain")
-    return _mul_plain(_shim_ctx(params, backend), a, pt, rescale_after)
-
-
-def mul_const(params: CkksParams, a: Ciphertext, c, rescale_after: bool = True,
-              backend: str = "auto") -> Ciphertext:
-    _warn_deprecated("mul_const")
-    return _mul_const(_shim_ctx(params, backend), a, c, rescale_after)
-
-
-def mul_const_exact(params: CkksParams, a: Ciphertext, c, target_scale: float,
-                    backend: str = "auto") -> Ciphertext:
-    _warn_deprecated("mul_const_exact")
-    return _mul_const_exact(_shim_ctx(params, backend), a, c, target_scale)
-
-
-def mul(params: CkksParams, a: Ciphertext, b: Ciphertext, rlk: SwitchingKey,
-        rescale_after: bool = True, backend: str = "auto") -> Ciphertext:
-    _warn_deprecated("mul")
-    return _mul(_shim_ctx(params, backend), a, b, rlk, rescale_after)
-
-
-def square(params: CkksParams, a: Ciphertext, rlk: SwitchingKey, rescale_after: bool = True,
-           backend: str = "auto") -> Ciphertext:
-    _warn_deprecated("square")
-    return _mul(_shim_ctx(params, backend), a, a, rlk, rescale_after)
-
-
-def rescale(params: CkksParams, ct: Ciphertext, backend: str = "auto") -> Ciphertext:
-    _warn_deprecated("rescale")
-    return _rescale(_shim_ctx(params, backend), ct)
-
-
-def rotate(params: CkksParams, ct: Ciphertext, r: int, keys: KeySet, backend: str = "auto",
-           hoisting: str = "never") -> Ciphertext:
-    _warn_deprecated("rotate")
-    return _rotate(_shim_ctx(params, backend, keys, hoisting), ct, r, keys)
-
-
-def rotate_hoisted(params: CkksParams, ct: Ciphertext, r: int, keys: KeySet,
-                   backend: str = "auto",
-                   hoisted: keyswitch.HoistedDigits | None = None) -> Ciphertext:
-    _warn_deprecated("rotate_hoisted")
-    return _rotate_hoisted(_shim_ctx(params, backend, keys), ct, r, keys, hoisted)
-
-
-def rotate_hoisted_group(params: CkksParams, ct: Ciphertext, rots, keys: KeySet,
-                         backend: str = "auto") -> dict[int, Ciphertext]:
-    _warn_deprecated("rotate_hoisted_group")
-    return _rotate_hoisted_group(_shim_ctx(params, backend, keys), ct, rots, keys)
-
-
-def conjugate(params: CkksParams, ct: Ciphertext, keys: KeySet, backend: str = "auto") -> Ciphertext:
-    _warn_deprecated("conjugate")
-    return _conjugate(_shim_ctx(params, backend, keys), ct, keys)
+def __getattr__(name: str):
+    if name in _RETIRED:
+        raise AttributeError(
+            f"repro.fhe.ops.{name}() was removed; use {_RETIRED[name]} on an "
+            "FheContext — execution modes (backend / rotation hoisting) move "
+            "into its ExecPolicy (see docs/context_api.md)"
+        )
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -28,6 +28,13 @@ timeout; rejected jobs end in the terminal ``JobState.SHED`` with their
 queued events cancelled and never touch warm-sets or backlog estimators —
 see docs/serving.md "Overload & admission".
 
+Fault tolerance (``repro.serve.faults``): seeded chip-crash/recover,
+transient-failure and straggler injection (``FaultPlan``/``FaultConfig``)
+with recovery under a ``RetryPolicy`` — capped exponential backoff,
+checkpoint resume from the last SRAM→HBM spill for deep jobs, lockstep
+gang aborts, and health-aware routing that excludes dead chips — see
+docs/serving.md "Fault tolerance & recovery".
+
 Quick use::
 
     from repro.core.hardware import CRATERLAKE, F1PLUS, FLASH_FHE
@@ -54,9 +61,10 @@ package (``n_chips=`` routes through the cluster).
 
 from repro.fhe.context import ExecPolicy
 
-from . import cluster, events, metrics, policy, traffic
+from . import cluster, events, faults, metrics, policy, traffic
 from .cluster import ClusterConfig, ClusterResult, ClusterRouter, serve_cluster
 from .events import Event, EventLoop
+from .faults import FAULT_KINDS, FaultConfig, FaultEvent, FaultPlan, RetryPolicy
 from .metrics import (
     drop_rate_by_tenant,
     goodput_by_tenant,

@@ -86,6 +86,7 @@ from repro.core.jobs import FheJob
 from repro.fhe.context import ExecPolicy
 
 from .events import EventLoop
+from .faults import FaultConfig, FaultEvent, FaultPlan, RetryPolicy
 from .policy import (
     GANG_SYNCS,
     AdmissionConfig,
@@ -135,11 +136,25 @@ class ClusterConfig:
     # utilization reserve + per-tenant token buckets at the router, and an
     # engine-level queue timeout — see ``policy.AdmissionConfig``
     admission: AdmissionConfig | None = None
+    # fault injection (repro.serve.faults): a FaultPlan (scripted) or a
+    # FaultConfig (seeded random plan, drawn over the fleet at router build).
+    # None = fault-free, the historical behaviour
+    faults: FaultPlan | FaultConfig | None = None
+    # recovery policy for transiently-failed jobs; None with faults armed
+    # means NO recovery (failed jobs are lost — the bench's divergence
+    # baseline uses RetryPolicy(max_attempts=0), which is equivalent)
+    retry: RetryPolicy | None = None
 
     def __post_init__(self):
         if self.admission is not None and not isinstance(self.admission, AdmissionConfig):
             raise ValueError(
                 f"admission must be an AdmissionConfig, got {type(self.admission).__name__}")
+        if self.faults is not None and not isinstance(self.faults, (FaultPlan, FaultConfig)):
+            raise ValueError(
+                f"faults must be a FaultPlan or FaultConfig, got {type(self.faults).__name__}")
+        if self.retry is not None and not isinstance(self.retry, RetryPolicy):
+            raise ValueError(
+                f"retry must be a RetryPolicy, got {type(self.retry).__name__}")
         if self.chips is not None:
             norm = []
             for entry in self.chips:
@@ -204,6 +219,12 @@ class ClusterResult:
     final_backlog_serial: list[float] = dataclasses.field(default_factory=list)
     peak_backlog_cycles: float = 0.0
     shed_reasons: dict[str, int] = dataclasses.field(default_factory=dict)
+    # fault observability: per-chip [crash, recover) downtime windows (an
+    # unrecovered crash closes at the run's end) and injected/handled fault
+    # counters ("crashes" / "transients" / "slow_windows" / "retries" /
+    # "jobs_lost" / "retry_no_chip")
+    downtime: dict[int, list[tuple[float, float]]] = dataclasses.field(default_factory=dict)
+    fault_counts: dict[str, int] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         if not self.chips:
@@ -213,31 +234,77 @@ class ClusterResult:
     def n_chips(self) -> int:
         return self.config.n_chips
 
+    def check_no_lost_jobs(self) -> "ClusterResult":
+        """The no-lost-job invariant, cheap enough to run UNCONDITIONALLY:
+        every submitted job's primary record is terminal — DONE, SHED, or
+        FAILED (retries exhausted).  A job silently dropped by a buggy policy
+        (stranded QUEUED/SUSPENDED, or a FAILED_TRANSIENT attempt never
+        retried or given up on) trips this even with ``validate=False``."""
+        terminal = (JobState.DONE, JobState.SHED, JobState.FAILED)
+        for je in self.jobs:
+            assert je.state in terminal, (
+                f"job {je.job.job_id} lost: final state {je.state} is not terminal "
+                f"(DONE/SHED/FAILED)"
+            )
+        return self
+
     def validate(self) -> "ClusterResult":
         """Fleet invariants on top of each chip's own ``ServeResult.validate``:
-        every non-gang job completed on EXACTLY one chip (or was shed); every
-        gang job ran EXACTLY once on each reserved member chip (never
-        double-booked, never anywhere else) with its fragments finishing in
-        lockstep; the recorded placements match the per-chip timelines;
-        admission-shed jobs appear on NO chip and in NO placement; the
-        backlog estimators never drift negative (and the serial component
-        never exceeds the total); and the fleet makespan is the max over
-        chips."""
+        no job is lost (every primary record terminal); every non-gang job
+        completed on EXACTLY one chip (or was shed/failed); every gang job ran
+        EXACTLY once on each reserved member chip with its fragments finishing
+        in lockstep; an aborted gang failed in lockstep too (every fragment
+        frozen at the same ``failed_cycle``); no run segment overlaps its
+        chip's downtime windows (nothing placed on a dead chip); the recorded
+        placements match the per-chip timelines; admission-shed jobs appear on
+        NO chip and in NO placement; the backlog estimators never drift
+        negative (and the serial component never exceeds the total); and the
+        fleet makespan is the max over chips."""
+        self.check_no_lost_jobs()
         for r in self.chip_results:
             r.validate()
-        on_chips: dict[int, list[int]] = {}
-        frags: dict[int, list[JobExec]] = {}
+        done_on: dict[int, list[int]] = {}  # jid -> chips holding a DONE record
+        done_frags: dict[int, list[JobExec]] = {}
+        failed_records: list[JobExec] = []
         for i, r in enumerate(self.chip_results):
             for je in r.jobs:
                 jid = je.job.job_id
-                assert i not in on_chips.get(jid, ()), (
-                    f"job {jid} double-booked on chip {i}"
-                )
                 assert je.chip_index == i, (
                     f"job {jid} tagged chip {je.chip_index}, found on chip {i}"
                 )
-                on_chips.setdefault(jid, []).append(i)
-                frags.setdefault(jid, []).append(je)
+                if je.state is JobState.DONE:
+                    assert not (je.gang_size == 1 and i in done_on.get(jid, ())), (
+                        f"job {jid} double-booked on chip {i}"
+                    )
+                    done_on.setdefault(jid, []).append(i)
+                    done_frags.setdefault(jid, []).append(je)
+                elif je.state in (JobState.FAILED_TRANSIENT, JobState.FAILED):
+                    failed_records.append(je)
+                # no-placement-on-dead-chip: every run interval must avoid the
+                # chip's downtime windows entirely
+                for seg in je.segments:
+                    for lo, hi in self.downtime.get(i, ()):
+                        assert seg.end <= lo + 1e-6 or seg.start >= hi - 1e-6, (
+                            f"job {jid} ran [{seg.start}, {seg.end}) on chip {i} "
+                            f"during its downtime [{lo}, {hi})"
+                        )
+        # gang lockstep-abort: an aborted gang freezes EVERY fragment at one
+        # instant — group failed gang fragments by (job, failed_cycle) and
+        # demand each abort event covers the full membership on distinct chips
+        aborts: dict[tuple[int, float], list[JobExec]] = {}
+        for je in failed_records:
+            if je.gang_size > 1:
+                aborts.setdefault((je.job.job_id, je.failed_cycle), []).append(je)
+        for (jid, at), group in aborts.items():
+            want = group[0].gang_size
+            assert len(group) == want, (
+                f"gang job {jid} aborted at {at} with {len(group)} of {want} "
+                f"fragments — lockstep abort violated"
+            )
+            used = [f.chip_index for f in group]
+            assert len(set(used)) == len(used), (
+                f"gang job {jid} abort records collide on chips {used}"
+            )
         # router-shed jobs (chip_index < 0): rejected at the door, so they
         # must never have reached a chip timeline, a placement, or a warm-set
         # (the cold_start_cycles charge is the warm-set's observable)
@@ -247,11 +314,8 @@ class ClusterResult:
             if je.job.job_id in router_shed:
                 assert not je.segments and je.completion is None
                 assert je.shed_cycle is not None and je.cold_start_cycles == 0.0
-        assert not router_shed & set(on_chips), (
-            f"admission-shed jobs found on chips: {sorted(router_shed & set(on_chips))}"
-        )
-        assert not router_shed & set(self.placements), (
-            "admission-shed jobs leaked into router placements"
+        assert not router_shed & set(done_on), (
+            f"admission-shed jobs found on chips: {sorted(router_shed & set(done_on))}"
         )
         for name, arr in (("backlog", self.final_backlog),
                           ("backlog_serial", self.final_backlog_serial)):
@@ -262,14 +326,16 @@ class ClusterResult:
             assert serial <= total + 1e-6 * max(1.0, total), (
                 f"chip {i} serial backlog {serial} exceeds total {total}"
             )
-        for jid, used in on_chips.items():
-            members = self.gangs.get(jid)
-            if members is None:
-                assert len(used) == 1, f"non-gang job {jid} ran on chips {used}"
+        for jid, used in done_on.items():
+            fs = done_frags[jid]
+            if fs[0].gang_size == 1:
+                assert len(used) == 1, f"non-gang job {jid} completed on chips {used}"
                 assert self.placements[jid] == used[0], (
                     f"job {jid} placed on chip {self.placements[jid]}, ran on {used[0]}"
                 )
                 continue
+            members = self.gangs.get(jid)
+            assert members is not None, f"gang fragments of {jid} lack a reservation"
             assert len(set(members)) == len(members), (
                 f"gang {jid} reserves chip(s) twice: {members}"
             )
@@ -277,18 +343,20 @@ class ClusterResult:
                 f"gang job {jid} ran on chips {used}, reserved {members}"
             )
             assert self.placements[jid] == members[0]
-            fs = frags[jid]
             assert all(f.gang_size == len(members) for f in fs)
             comps = [f.completion for f in fs]
             assert max(comps) - min(comps) <= 1e-6 * max(1.0, max(comps)), (
                 f"gang job {jid} fragments finished out of lockstep: {comps}"
             )
-        assert set(on_chips) == set(self.placements), (
-            "router placements disagree with chip timelines"
+        done_primary = {je.job.job_id for je in self.jobs if je.state is JobState.DONE}
+        assert done_primary == set(done_on), (
+            "primary DONE records disagree with chip timelines"
         )
-        assert len(self.jobs) == len(on_chips) + len(router_shed), (
-            f"{len(self.jobs)} jobs routed, {len(on_chips)} found on chips "
-            f"+ {len(router_shed)} shed at admission"
+        n_failed = sum(1 for je in self.jobs if je.state is JobState.FAILED)
+        n_shed = sum(1 for je in self.jobs if je.state is JobState.SHED)
+        assert len(self.jobs) == len(done_primary) + n_shed + n_failed, (
+            f"{len(self.jobs)} jobs routed != {len(done_primary)} done "
+            f"+ {n_shed} shed + {n_failed} failed"
         )
         per_chip_mk = max((r.makespan for r in self.chip_results), default=0.0)
         assert abs(self.makespan - per_chip_mk) <= 1e-6 * max(1.0, per_chip_mk)
@@ -312,11 +380,24 @@ class ClusterRouter:
                                                   if adm is not None else None))
                         for c, p in pairs]
         for i, eng in enumerate(self.engines):
+            eng.chip_index = i
             eng.on_job_complete = functools.partial(self._completed, i)
             eng.on_job_shed = functools.partial(self._shed_echo, i)
         # per-tenant token buckets, created lazily on first arrival
         self._buckets: dict[int, TokenBucket] = {}
         self.shed_reasons: dict[str, int] = {}
+        # fault state: chip health, downtime windows, and the retry policy.
+        # ``alive`` mirrors each policy's flag but lives here so the routing
+        # hot path never reaches into engines
+        self.alive = [True] * config.n_chips
+        self.retry = config.retry
+        self.downtime: dict[int, list[tuple[float, float]]] = {}
+        self._down_since: dict[int, float] = {}
+        self.fault_counts: dict[str, int] = {}
+        if config.faults is not None:
+            plan = (config.faults.draw(config.n_chips)
+                    if isinstance(config.faults, FaultConfig) else config.faults)
+            self.arm_faults(plan)
         # peak fleet-wide backlog estimate over the run: THE bounded-queues
         # observable (without admission it grows with the overload integral,
         # with admission it plateaus near the utilization reserve)
@@ -366,27 +447,37 @@ class ClusterRouter:
 
     # -- dispatch policies --------------------------------------------------
 
+    def _alive_idx(self) -> list[int]:
+        return [i for i in range(self.config.n_chips) if self.alive[i]]
+
     def _pick(self, job: FheJob) -> int:
-        n = self.config.n_chips
-        if n == 1:
-            return 0
+        """Health-aware placement: dead chips are invisible to every policy.
+        Callers must guarantee at least one healthy chip (``_route`` sheds
+        with reason "no_healthy_chip" otherwise)."""
+        alive = self._alive_idx()
+        assert alive, "_pick called with no healthy chip"
+        if len(alive) == 1:
+            return alive[0]
         r = self.config.router
         if r == "round_robin":
-            i = self._rr_next % n
-            self._rr_next += 1
-            return i
+            while True:  # skip dead chips, keep the cyclic order among live ones
+                i = self._rr_next % self.config.n_chips
+                self._rr_next += 1
+                if self.alive[i]:
+                    return i
         if r == "jsq":
-            return min(range(n), key=lambda i: (self.backlog[i], i))
+            return min(alive, key=lambda i: (self.backlog[i], i))
         if r == "po2":
-            a, b = (int(x) for x in self._rng.choice(n, size=2, replace=False))
+            a, b = (alive[int(x)] for x in
+                    self._rng.choice(len(alive), size=2, replace=False))
             return a if (self.backlog[a], a) <= (self.backlog[b], b) else b
         if r == "affinity":
             # total marginal cost = backlog + the cold-start you'd pay
-            return min(range(n), key=lambda i: (self.backlog[i] + self._cold_penalty(job, i), i))
+            return min(alive, key=lambda i: (self.backlog[i] + self._cold_penalty(job, i), i))
         # hetero: like affinity, but also price THIS chip's service time for
         # THIS job — on a mixed fleet the estimate is what steers deep jobs to
         # bootstrappable-heavy chips and shallow floods to swift-heavy ones
-        return min(range(n), key=lambda i: (self._est(job, i), i))
+        return min(alive, key=lambda i: (self._est(job, i), i))
 
     def _drain_width(self, i: int) -> int:
         """How many jobs chip i retires concurrently: a FlashPolicy chip
@@ -425,9 +516,12 @@ class ClusterRouter:
         delay of aligning M chips."""
         if not self._gang_groups:
             return None
-        best_single = min(self._est(job, i) for i in range(self.config.n_chips))
+        best_single = min(self._est(job, i) for i in self._alive_idx())
         best: tuple[float, int, list[int]] | None = None
-        for idxs in self._gang_groups:
+        for group in self._gang_groups:
+            idxs = [i for i in group if self.alive[i]]  # dead members can't gang
+            if len(idxs) < 2:
+                continue
             single = self.engines[idxs[0]].service_sim(job).cycles
             order = sorted(idxs, key=lambda i: (self._wait(i), i))
             for m in range(2, min(self.config.gang_max_chips, len(order)) + 1):
@@ -476,8 +570,14 @@ class ClusterRouter:
             if not bucket.try_take(self.loop.now):
                 return "token_bucket"
         if adm.max_wait_cycles is not None:
-            best = min(self._wait(i) for i in range(self.config.n_chips))
-            if best > adm.max_wait_cycles:
+            # price the DEGRADED fleet: the reserve shrinks with the healthy
+            # fraction, so admission tightens during an outage instead of
+            # letting arrivals queue up against capacity that no longer exists
+            # and shedding late (by timeout) after the SLO is already blown
+            alive = self._alive_idx()
+            bound = adm.max_wait_cycles * len(alive) / self.config.n_chips
+            best = min(self._wait(i) for i in alive)
+            if best > bound:
                 return "reserve"
         return None
 
@@ -495,9 +595,164 @@ class ClusterRouter:
     def _note_backlog(self) -> None:
         self.peak_backlog = max(self.peak_backlog, sum(self.backlog))
 
+    # -- fault injection + recovery ------------------------------------------
+
+    def arm_faults(self, plan: FaultPlan) -> None:
+        """Schedule every fault event on the shared loop.  Must happen before
+        arrivals are submitted (the constructor arms ``config.faults``): fault
+        events then carry the lowest sequence numbers, so at any shared
+        timestamp the fault processes FIRST and routing decisions already see
+        the new health state — same-instant races resolve deterministically.
+        Events aimed past the fleet (chip >= n_chips) are dropped."""
+        for ev in plan.events:
+            if ev.chip < self.config.n_chips:
+                self.loop.call_at(ev.at, functools.partial(self._fault, ev))
+
+    def _count(self, key: str, n: int = 1) -> None:
+        self.fault_counts[key] = self.fault_counts.get(key, 0) + n
+
+    def _fault(self, ev: FaultEvent) -> None:
+        now = self.loop.now
+        i = ev.chip
+        policy = self.engines[i].policy
+        if ev.kind == "crash":
+            if not self.alive[i]:
+                return  # random plans can crash an already-dead chip
+            self._count("crashes")
+            self.alive[i] = False
+            self._down_since[i] = now
+            victims = policy.fail_all(now)
+            self._handle_victims(victims, now)
+            # the chip's outstanding work is gone: zero its estimators (the
+            # victims' demand requeues against HEALTHY chips) and drop its
+            # warm-set — recovery rejoins cold
+            self.backlog[i] = 0.0
+            self.backlog_serial[i] = 0.0
+            self._warm[i].clear()
+        elif ev.kind == "recover":
+            if self.alive[i]:
+                return
+            self.alive[i] = True
+            policy.revive()
+            self.downtime.setdefault(i, []).append((self._down_since.pop(i), now))
+        elif ev.kind == "transient":
+            if not self.alive[i]:
+                return  # a dead chip has nothing running to fault
+            self._count("transients")
+            self._handle_victims(policy.fail_one(now), now)
+        elif ev.kind == "slow_start":
+            self._count("slow_windows")
+            policy.slow_factor = ev.factor
+        else:  # slow_end
+            policy.slow_factor = 1.0
+
+    def _handle_victims(self, victims: list[JobExec], now: float) -> None:
+        """Requeue (or give up on) every job a fault just killed.  ``victims``
+        holds one record per failed FRAGMENT; a gang abort contributes its
+        whole membership, which collapses to ONE retry of the job."""
+        by_job: dict[int, list[JobExec]] = {}
+        for je in victims:
+            self._debit_backlog(je.chip_index, je)
+            by_job.setdefault(je.job.job_id, []).append(je)
+        for records in by_job.values():
+            primary = min(records, key=lambda je: je.gang_rank)
+            carried = (primary.prior_wasted_cycles
+                       + sum(r.wasted_cycles for r in records))
+            self._by_id[primary.job.job_id] = primary
+            self._after_failure(primary.job, primary, primary.attempts, carried)
+
+    def _after_failure(self, job: FheJob, old: JobExec, attempts_done: int,
+                       carried_wasted: float) -> None:
+        """Decide the failed job's fate: exhausted → terminal FAILED; else
+        schedule a retry after the policy's capped exponential backoff.
+        ``attempts_done`` counts consumed attempts (a retry window finding
+        zero healthy chips consumes one too, without producing a record)."""
+        rp = self.retry
+        if rp is None or attempts_done > rp.max_attempts:
+            old.state = JobState.FAILED
+            self._count("jobs_lost")
+            return
+        self._count("retries")
+        delay = rp.backoff_cycles(attempts_done)
+        self.loop.call_after(delay, functools.partial(
+            self._retry, job, old, attempts_done, carried_wasted))
+
+    def _price_key(self, i: int) -> tuple:
+        """Service-pricing identity of chip i — a checkpoint's ``remaining``
+        is denominated in these cycles, so resume needs an exact match."""
+        eng = self.engines[i]
+        return (eng.chip, eng.exec_policy.policy_key(),
+                getattr(eng.policy, "deep_coop", None))
+
+    def _retry(self, job: FheJob, old: JobExec, attempts_done: int,
+               carried_wasted: float) -> None:
+        """Re-place a transiently-failed job on the healthy sub-fleet.
+
+        Retries bypass admission (the job was already admitted and has
+        already paid — shedding it mid-recovery would both waste that work
+        and violate the shed carve-outs) and skip the queue-timeout deadline
+        (measured from the original arrival it would fire instantly).  A deep
+        job with a spill checkpoint resumes its ``remaining`` on an
+        identically-priced chip; everything else restarts in full, deep jobs
+        re-entering the gang planner over the healthy sub-fleet."""
+        now = self.loop.now
+        if not any(self.alive):
+            # the whole fleet is dark: burn an attempt and back off again
+            self._count("retry_no_chip")
+            self._after_failure(job, old, attempts_done + 1, carried_wasted)
+            return
+        rp = self.retry
+        attempts = attempts_done + 1
+        use_ckpt = (rp.checkpoint and old._has_checkpoint and old.gang is None
+                    and job.kind == "deep")
+        if use_ckpt:
+            okey = self._price_key(old.chip_index)
+            cands = [i for i in self._alive_idx() if self._price_key(i) == okey]
+            if cands:
+                i = min(cands, key=lambda c: (self._wait(c), c))
+                je = self.engines[i].submit(job, sim=old.sim,
+                                            service_cycles=old.remaining,
+                                            arm_deadline=False)
+                je.full_service_cycles = old.full_service_cycles
+                je.checkpoint_cycles = max(
+                    0.0, old.full_service_cycles - old.remaining)
+                je._has_checkpoint = True  # the HBM image outlives the crash
+                self._book_retry(je, i, job, old, attempts, carried_wasted)
+                return
+            # no identically-priced healthy chip: fall through to full restart
+        if job.kind == "deep" and self.config.gang_max_chips > 1:
+            members = self._plan_gang(job)
+            if members is not None:
+                self._route_gang(job, members,
+                                 retry_meta=(attempts, carried_wasted,
+                                             old.first_start))
+                return
+        i = self._pick(job)
+        je = self.engines[i].submit(job, arm_deadline=False)
+        self._book_retry(je, i, job, old, attempts, carried_wasted)
+
+    def _book_retry(self, je: JobExec, i: int, job: FheJob, old: JobExec,
+                    attempts: int, carried_wasted: float) -> None:
+        je.attempts = attempts
+        je.prior_wasted_cycles = carried_wasted
+        je.first_start = old.first_start  # queueing delay stays the original's
+        self.placements[job.job_id] = i
+        self.gangs.pop(job.job_id, None)  # a single-chip retry ends gang status
+        self._by_id[job.job_id] = je
+        self.backlog[i] += je.service_cycles
+        if job.kind == "deep":
+            self.backlog_serial[i] += je.service_cycles
+        self._note_backlog()
+
     # -- event handlers ------------------------------------------------------
 
     def _route(self, job: FheJob) -> None:
+        if not any(self.alive):
+            # the entire fleet is dark: there is no queue to wait in (the
+            # router holds no backlog of its own), so arrivals shed at the
+            # door — the availability metrics surface the outage window
+            self._shed_at_door(job, "no_healthy_chip")
+            return
         verdict = self._admission_verdict(job)
         if verdict is not None:
             self._shed_at_door(job, verdict)
@@ -511,7 +766,6 @@ class ClusterRouter:
         pay = self._cold_penalty(job, i)  # counted in metrics via cold_start_cycles
         self._touch_warm(job, i)
         je = self.engines[i].submit(job, extra_cycles=pay)
-        je.chip_index = i
         self.placements[job.job_id] = i
         self._by_id[job.job_id] = je
         self.backlog[i] += je.service_cycles
@@ -519,13 +773,16 @@ class ClusterRouter:
             self.backlog_serial[i] += je.service_cycles
         self._note_backlog()
 
-    def _route_gang(self, job: FheJob, members: list[int]) -> None:
+    def _route_gang(self, job: FheJob, members: list[int],
+                    retry_meta: tuple[int, float, float | None] | None = None) -> None:
         """Commit a multi-chip reservation: one lockstep fragment per member.
 
         Every fragment carries the full per-chip gang demand (compute/M +
         link stalls) so each member chip's work conservation validates; the
         rank-0 fragment is the job's primary record (``ClusterResult.jobs``)
-        and additionally logs the gang-total link bytes."""
+        and additionally logs the gang-total link bytes.  ``retry_meta``
+        (attempts, carried waste, original first_start) marks a re-ganged
+        retry of a failed job."""
         eng = self.engines[members[0]]
         sim = eng.service_sim(job)
         per_chip, link = gang_service_cycles(
@@ -534,11 +791,18 @@ class ClusterRouter:
         gang = GangReservation(job, self.loop)
         for rank, i in enumerate(members):
             je = self.engines[i].submit(job, sim=sim, service_cycles=per_chip,
-                                        gang=gang)
+                                        gang=gang,
+                                        arm_deadline=retry_meta is None)
             je.chip_index = i
             je.gang_rank = rank
             je.gang_size = len(members)
             je.link_cycles = link
+            if retry_meta is not None:
+                attempts, carried, first_start = retry_meta
+                je.attempts = attempts
+                je.first_start = first_start
+                if rank == 0:
+                    je.prior_wasted_cycles = carried
             if rank == 0:
                 je.link_bytes = gang_link_bytes(job, len(members),
                                                 self.config.gang_syncs)
@@ -579,6 +843,11 @@ class ClusterRouter:
 
     def run(self) -> ClusterResult:
         self.loop.run()
+        # a chip still dark at drain closes its downtime window at run end so
+        # availability integrates the full outage
+        for i, start in sorted(self._down_since.items()):
+            self.downtime.setdefault(i, []).append((start, self.loop.now))
+        self._down_since.clear()
         chip_results = [eng.result() for eng in self.engines]
         makespan = max((r.makespan for r in chip_results), default=0.0)
         jobs = [self._by_id[jid] for jid in self._submit_order]  # submission order
@@ -590,7 +859,9 @@ class ClusterRouter:
                              final_backlog=list(self.backlog),
                              final_backlog_serial=list(self.backlog_serial),
                              peak_backlog_cycles=self.peak_backlog,
-                             shed_reasons=dict(self.shed_reasons))
+                             shed_reasons=dict(self.shed_reasons),
+                             downtime={i: list(w) for i, w in self.downtime.items()},
+                             fault_counts=dict(self.fault_counts))
 
 
 def serve_cluster(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: int = 2,
@@ -602,7 +873,9 @@ def serve_cluster(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: i
                   chips=None, gang_max_chips: int = 1,
                   link_bytes_per_cycle: float = 256.0,
                   gang_syncs: int = GANG_SYNCS,
-                  admission: AdmissionConfig | None = None) -> ClusterResult:
+                  admission: AdmissionConfig | None = None,
+                  faults: FaultPlan | FaultConfig | None = None,
+                  retry: RetryPolicy | None = None) -> ClusterResult:
     """Serve an open-loop job list on a chip fleet; the one-call API.
 
     Homogeneous fleet: pass ``chip`` + ``n_chips``.  Heterogeneous fleet:
@@ -616,7 +889,9 @@ def serve_cluster(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: i
     ``admission=`` arms overload protection (``AdmissionConfig``: per-tenant
     token buckets + utilization reserve at the router, queue-timeout at the
     engines); rejected jobs end ``JobState.SHED`` and surface through the
-    drop-rate/goodput metrics rather than growing the backlog.
+    drop-rate/goodput metrics rather than growing the backlog.  ``faults=``
+    arms seeded fault injection (``FaultPlan`` scripted / ``FaultConfig``
+    random) and ``retry=`` the recovery policy — see ``repro.serve.faults``.
     """
     cfg = config if config is not None else ClusterConfig(
         n_chips=0 if chips is not None else n_chips, router=router, seed=seed,
@@ -624,9 +899,10 @@ def serve_cluster(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: i
         warm_capacity_mb=warm_capacity_mb, hoist=hoist, exec_policy=exec_policy,
         chips=tuple(chips) if chips is not None else None,
         gang_max_chips=gang_max_chips, link_bytes_per_cycle=link_bytes_per_cycle,
-        gang_syncs=gang_syncs, admission=admission)
+        gang_syncs=gang_syncs, admission=admission, faults=faults, retry=retry)
     rt = ClusterRouter(chip, cfg)
     for job in jobs:
         rt.submit(job)
     result = rt.run()
+    result.check_no_lost_jobs()  # cheap, unconditional: no job may vanish
     return result.validate() if validate else result

@@ -137,6 +137,27 @@ def _overload_block(result: ServeResult | ClusterResult,
     return out
 
 
+def _availability_block(result: ServeResult | ClusterResult,
+                        done: list) -> dict[str, float]:
+    """Shared fault/recovery keys.  ``wasted_mcycles`` sums the per-attempt
+    ``wasted_cycles`` over EVERY record in the chip timelines (each attempt
+    counted once — ``prior_wasted_cycles`` is a carry, not new waste);
+    ``checkpoint_saved_mcycles`` is service a checkpoint resume did NOT have
+    to redo."""
+    primaries = result.jobs
+    records = (
+        [je for r in result.chip_results for je in r.jobs]
+        if isinstance(result, ClusterResult) else primaries)
+    return {
+        "n_failed": float(sum(1 for je in primaries
+                              if je.state is JobState.FAILED)),
+        "n_retried_jobs": float(sum(1 for je in done if je.attempts > 1)),
+        "retries_total": float(sum(je.attempts - 1 for je in primaries)),
+        "wasted_mcycles": sum(je.wasted_cycles for je in records) / 1e6,
+        "checkpoint_saved_mcycles": sum(je.checkpoint_cycles for je in done) / 1e6,
+    }
+
+
 def summarize(result: ServeResult | ClusterResult) -> dict[str, float]:
     """Flat metric dict (CSV-friendly).  Keys:
 
@@ -158,7 +179,11 @@ def summarize(result: ServeResult | ClusterResult) -> dict[str, float]:
     goodput_frac, goodput_jobs_per_mcycle      — completed/offered, and the
                                                  completion rate;
     time_to_shed_p50/p99_cycles                — arrival → shed decision
-                                                 (NaN when nothing shed).
+                                                 (NaN when nothing shed);
+    n_failed, n_retried_jobs, retries_total    — fault/recovery accounting;
+    wasted_mcycles, checkpoint_saved_mcycles   — work lost to faults, and
+                                                 service a checkpoint resume
+                                                 did not redo.
 
     Empty percentile samples (a kind with zero completions, nothing shed)
     are NaN, never 0.0 — gates must check the ``n_completed_{kind}`` counts
@@ -195,6 +220,7 @@ def summarize(result: ServeResult | ClusterResult) -> dict[str, float]:
         "spill_restore_mcycles": sum(je.spill_restore_cycles for je in done) / 1e6,
     }
     out.update(_overload_block(result, done, mk))
+    out.update(_availability_block(result, done))
     for k, v in lat.items():
         out[f"latency_{k}_cycles"] = v
     out["latency_p99_ms"] = lat["p99"] / freq_hz * 1e3
@@ -252,7 +278,13 @@ def summarize_cluster(result: ClusterResult) -> dict[str, float]:
                                                  observable under overload);
     plus the admission block (n_offered, n_shed, n_completed_{kind},
     drop_rate[_kind], goodput_frac, goodput_jobs_per_mcycle,
-    time_to_shed_p50/p99_cycles) shared with ``summarize``.
+    time_to_shed_p50/p99_cycles) shared with ``summarize``, and the
+    availability block: the shared fault keys (n_failed, n_retried_jobs,
+    retries_total, wasted_mcycles, checkpoint_saved_mcycles) plus
+    downtime_mcycles / mttr_mcycles (NaN when nothing crashed) /
+    availability (1 − downtime ÷ (n_chips × makespan)) and the injected
+    fault counters (n_crashes, n_transients, n_slow_windows, n_retries,
+    n_jobs_lost, n_retry_no_chip).
 
     Per-job numbers (latency, queueing, preemptions, spill) count each ganged
     job ONCE through its primary fragment — fragments share completion times
@@ -297,6 +329,20 @@ def summarize_cluster(result: ClusterResult) -> dict[str, float]:
         "peak_backlog_mcycles": result.peak_backlog_cycles / 1e6,
     }
     out.update(_overload_block(result, done, mk))
+    out.update(_availability_block(result, done))
+    # availability under faults: per-chip downtime integrates the [crash,
+    # recover) windows; MTTR is the mean window (NaN when nothing crashed,
+    # same empty-sample semantics as the latency percentiles)
+    windows = [hi - lo for ws in result.downtime.values() for lo, hi in ws]
+    total_down = sum(windows)
+    out["downtime_mcycles"] = total_down / 1e6
+    out["mttr_mcycles"] = float(np.mean(windows)) / 1e6 if windows else float("nan")
+    out["availability"] = (1.0 - total_down / (result.n_chips * mk)
+                           if mk > 0 else 1.0)
+    fc = result.fault_counts
+    for key in ("crashes", "transients", "slow_windows", "retries",
+                "jobs_lost", "retry_no_chip"):
+        out[f"n_{key}"] = float(fc.get(key, 0))
     ganged = [je for je in done if je.gang_size > 1]
     out["n_gang_jobs"] = float(len(ganged))
     out["gang_chips_mean"] = (float(np.mean([je.gang_size for je in ganged]))

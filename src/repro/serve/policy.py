@@ -87,6 +87,13 @@ class JobState(enum.Enum):
     # dropped the job before it ever ran — no segments, no completion, and the
     # work-conservation invariants exclude it
     SHED = "shed"
+    # fault injection (repro.serve.faults): the attempt died under it — chip
+    # crash, gang abort, or a transient job fault.  The record freezes (each
+    # retry is a FRESH JobExec) with ``failed_cycle`` set and the running
+    # invariant busy + remaining == service + spill + wasted still holding
+    FAILED_TRANSIENT = "failed_transient"
+    # terminal: retries exhausted (or recovery disabled) — the fleet gave up
+    FAILED = "failed"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,12 +101,15 @@ class Segment:
     """One contiguous occupancy interval on a resource.
 
     ``resource`` is ``affiliation-<i>`` for shallow placements and ``deep``
-    for gang placements (which occupy *every* affiliation).
+    for gang placements (which occupy *every* affiliation).  ``chip`` is the
+    fleet chip index the interval ran on — retried jobs can hold segments on
+    several chips, so overlap checks must group by (chip, resource).
     """
 
     start: float
     end: float
     resource: str
+    chip: int = 0
 
     @property
     def cycles(self) -> float:
@@ -131,6 +141,15 @@ class JobExec:
     link_cycles: float = 0.0  # per-chip inter-chip exchange stalls, inside service_cycles
     link_bytes: float = 0.0  # gang-total link traffic, recorded on the rank-0 fragment
     shed_cycle: float | None = None  # instant the job was dropped (SHED only)
+    # fault/retry accounting (repro.serve.faults): each retry is a FRESH record
+    attempts: int = 1  # 1-based attempt number this record represents
+    wasted_cycles: float = 0.0  # THIS attempt's lost work: failed runs + straggler excess
+    prior_wasted_cycles: float = 0.0  # waste carried from earlier failed attempts
+    checkpoint_cycles: float = 0.0  # work a checkpoint resume skipped (vs full restart)
+    full_service_cycles: float = 0.0  # un-checkpointed demand, for the turnaround identity
+    failed_cycle: float | None = None  # instant the attempt died (FAILED* only)
+    _has_checkpoint: bool = False  # a SRAM→HBM spill exists to resume from
+    _run_factor: float = 1.0  # straggler slowdown of the current run segment
     _run_start: float | None = None
     _suspended_at: float | None = None  # last preemption time (aging reference)
     _complete_ev: Event | None = None
@@ -138,6 +157,8 @@ class JobExec:
 
     def __post_init__(self):
         self.remaining = self.service_cycles
+        if self.full_service_cycles == 0.0:
+            self.full_service_cycles = self.service_cycles
 
     @property
     def kind(self) -> str:
@@ -160,11 +181,23 @@ class JobExec:
         return self.first_start - self.job.arrival_cycle
 
     @property
+    def wasted_total(self) -> float:
+        """All fault-lost work across attempts: failed runs, straggler excess,
+        and abandoned spill payments — everything busy that was not progress."""
+        return self.prior_wasted_cycles + self.wasted_cycles
+
+    @property
     def preempted_cycles(self) -> float:
-        """Extra cycles vs an uninterrupted run: suspension gaps + spill/restore."""
+        """Extra cycles vs an uninterrupted run: suspension gaps, spill/restore,
+        retry backoff and re-queue gaps — everything between first start and
+        completion that is neither service demand nor fault-wasted work.
+        Crash-requeue spill goes to ``wasted_cycles``, never double-counted
+        here: turnaround = queueing_delay + full_service + preempted + wasted.
+        """
         if self.completion is None or self.first_start is None:
             return 0.0
-        return (self.completion - self.first_start) - self.service_cycles
+        return ((self.completion - self.first_start)
+                - self.full_service_cycles - self.wasted_total)
 
     @property
     def busy_cycles(self) -> float:
@@ -388,6 +421,7 @@ class GangReservation:
         self._ready: set[int] = set()
         self._launch_pending = False
         self.running = False
+        self.aborted = False  # fault abort: the gang is dead, fragments frozen
 
     @property
     def size(self) -> int:
@@ -401,6 +435,8 @@ class GangReservation:
 
     def member_ready(self, policy: "FlashPolicy") -> None:
         """Barrier arrival (idempotent); launches once every member holds."""
+        if self.aborted:
+            return
         self._ready.add(id(policy))
         if len(self._ready) == self.size and not self._launch_pending:
             self._launch_pending = True
@@ -408,10 +444,16 @@ class GangReservation:
 
     def _launch(self) -> None:
         self._launch_pending = False
+        if self.aborted:
+            return  # a member chip died between barrier entry and launch
         self._ready.clear()
         self.running = True
+        # lockstep pacing: every fragment runs at the SLOWEST member's factor,
+        # so a straggler chip drags the whole gang (the real failure mode wide
+        # gangs have) and fragments still finish at the same instant
+        factor = max(p.slow_factor for p, _ in self.members)
         for policy, je in self.members:
-            policy._gang_launch(je)
+            policy._gang_launch(je, factor)
 
     def suspend(self) -> None:
         """Gang-wide preemption: suspend every fragment at this instant."""
@@ -421,25 +463,49 @@ class GangReservation:
         for policy, je in self.members:
             policy._gang_suspend(je)
 
+    def abort(self, now: float) -> list[JobExec]:
+        """Fault-driven lockstep abort: a member chip died (or a fragment hit
+        a transient fault), so EVERY fragment fails at this instant — per-chip
+        shard checkpoints are useless once gang membership changes, so the job
+        re-plans from scratch on the healthy sub-fleet.  Idempotent; returns
+        the newly-failed fragment records (all sharing one ``failed_cycle``).
+        """
+        if self.aborted:
+            return []
+        self.aborted = True
+        self.running = False
+        self._ready.clear()
+        victims: list[JobExec] = []
+        for policy, je in self.members:
+            if je.state in (JobState.QUEUED, JobState.RUNNING, JobState.SUSPENDED):
+                policy._gang_member_fail(je, now)
+                victims.append(je)
+        return victims
+
 
 # ---------------------------------------------------------------------------
 # policies
 # ---------------------------------------------------------------------------
 
 
+# states that mark a queue entry dead-in-place (lazily purged, never dispatched)
+_DEAD_STATES = (JobState.SHED, JobState.FAILED_TRANSIENT, JobState.FAILED)
+
+
 class _PriorityQueue:
     """Max-priority, then FIFO-by-arrival, then submission order.
 
-    Shed entries are dropped lazily: a queue-timeout shed marks the job
-    ``SHED`` in place (O(1)) and the entry is discarded whenever it surfaces
-    at the top — the same trick the event heap uses for cancellations."""
+    Shed/failed entries are dropped lazily: a queue-timeout shed (or a fault)
+    marks the job terminal in place (O(1)) and the entry is discarded whenever
+    it surfaces at the top — the same trick the event heap uses for
+    cancellations."""
 
     def __init__(self):
         self._heap: list[tuple[float, float, int, JobExec]] = []
         self._seq = itertools.count()
 
     def _purge(self) -> None:
-        while self._heap and self._heap[0][-1].state is JobState.SHED:
+        while self._heap and self._heap[0][-1].state in _DEAD_STATES:
             heapq.heappop(self._heap)
 
     def __len__(self) -> int:
@@ -466,6 +532,40 @@ def _cancel_deadline(je: JobExec) -> None:
     if je._deadline_ev is not None:
         je._deadline_ev.cancel()
         je._deadline_ev = None
+
+
+def _fail_record(je: JobExec, now: float, resource: str, chip: ChipConfig) -> None:
+    """Freeze one attempt record as FAILED_TRANSIENT with consistent books.
+
+    Closes any open run segment (that wall time is lost → ``wasted_cycles``).
+    A deep job holding a SRAM→HBM spill checkpoint keeps its ``remaining``
+    (the retry resumes from the last suspension point, paying one fresh HBM
+    restore); everything else restarts from zero — its entire busy history
+    becomes waste and abandoned spill payments are re-classified as waste too,
+    so the frozen record satisfies busy + remaining == service + spill +
+    wasted and fleet-wide work conservation stays checkable.
+    """
+    _cancel_deadline(je)
+    if je._complete_ev is not None:
+        je._complete_ev.cancel()
+        je._complete_ev = None
+    if je.state is JobState.RUNNING and je._run_start is not None:
+        w = now - je._run_start
+        if w > 0:
+            je.segments.append(Segment(je._run_start, now, resource, chip=je.chip_index))
+        je.wasted_cycles += w
+        je._run_start = None
+        if je._has_checkpoint:
+            # the checkpoint survives in HBM; the retry pays one restore
+            pay = working_set_bytes(je.job) / je.gang_size / chip.hbm_bytes_per_cycle
+            je.remaining += pay
+            je.spill_restore_cycles += pay
+    if not je._has_checkpoint:
+        je.wasted_cycles = je.busy_cycles
+        je.spill_restore_cycles = 0.0
+        je.remaining = je.service_cycles
+    je.state = JobState.FAILED_TRANSIENT
+    je.failed_cycle = now
 
 
 class _DeferredDispatchMixin:
@@ -522,6 +622,10 @@ class FlashPolicy(_DeferredDispatchMixin):
         self.loop: EventLoop | None = None
         self.on_complete: Callable[[JobExec], None] = lambda je: None
         self._dispatch_pending = False
+        # fault state (repro.serve.faults): a dead chip accepts no work; a
+        # straggler window stretches every NEW run segment by slow_factor
+        self.alive = True
+        self.slow_factor = 1.0
         self.aff_running: list[JobExec | None] = [None] * chip.n_affiliations
         self.shallow_q = _PriorityQueue()
         self.deep_q = _PriorityQueue()
@@ -539,6 +643,12 @@ class FlashPolicy(_DeferredDispatchMixin):
         self.on_complete = on_complete
 
     def submit(self, je: JobExec) -> None:
+        # a FAILED_TRANSIENT entry can legitimately arrive here (its arrival
+        # event raced a crash at the same instant); the queue purges it lazily.
+        # A live QUEUED submission to a dead chip is a router bug.
+        assert self.alive or je.state is not JobState.QUEUED, (
+            f"job {je.job.job_id} routed to dead chip {je.chip_index}"
+        )
         (self.shallow_q if je.kind == "shallow" else self.deep_q).push(je)
         self._schedule_dispatch()
 
@@ -582,15 +692,21 @@ class FlashPolicy(_DeferredDispatchMixin):
     def _suspend_deep(self, d: JobExec, now: float) -> None:
         # suspend: close the deep segment, revoke its completion, charge the
         # SRAM→HBM spill + later restore to its remaining work (a gang
-        # fragment spills only its 1/M shard of the working set)
+        # fragment spills only its 1/M shard of the working set).  Under a
+        # straggler window only worked/_run_factor of the wall time is real
+        # progress; the excess is charged to wasted_cycles.  The spilled image
+        # doubles as a crash checkpoint (_has_checkpoint) for retries.
         worked = now - d._run_start
         d._complete_ev.cancel()
         if worked > 0:
-            d.segments.append(Segment(d._run_start, now, "deep"))
+            progress = worked / d._run_factor
+            d.segments.append(Segment(d._run_start, now, "deep", chip=d.chip_index))
             pay = (2.0 * working_set_bytes(d.job) / d.gang_size
                    / self.chip.hbm_bytes_per_cycle)
-            d.remaining = max(0.0, d.remaining - worked) + pay
+            d.remaining = max(0.0, d.remaining - progress) + pay
             d.spill_restore_cycles += pay
+            d.wasted_cycles += worked - progress
+            d._has_checkpoint = True
         d.n_preemptions += 1
         d.state = JobState.SUSPENDED
         d._run_start = None
@@ -599,9 +715,9 @@ class FlashPolicy(_DeferredDispatchMixin):
 
     # -- gang callbacks (invoked by GangReservation, possibly cross-chip) ----
 
-    def _gang_launch(self, d: JobExec) -> None:
+    def _gang_launch(self, d: JobExec, factor: float = 1.0) -> None:
         self._gang_hold = False
-        self._run_deep(d, self.loop.now)
+        self._run_deep(d, self.loop.now, factor=factor)
 
     def _gang_suspend(self, d: JobExec) -> None:
         if d.state is not JobState.RUNNING:
@@ -647,14 +763,19 @@ class FlashPolicy(_DeferredDispatchMixin):
         _cancel_deadline(je)
         je.state = JobState.RUNNING
         je.lanes = f"affiliation-{aff}"
-        je.first_start = now
+        if je.first_start is None:  # a retry keeps its original first start
+            je.first_start = now
         je._run_start = now
+        je._run_factor = self.slow_factor
         self.aff_running[aff] = je
-        je._complete_ev = self.loop.call_after(je.remaining, lambda: self._finish_shallow(je, aff))
+        je._complete_ev = self.loop.call_after(
+            je.remaining * je._run_factor, lambda: self._finish_shallow(je, aff))
 
     def _finish_shallow(self, je: JobExec, aff: int) -> None:
         now = self.loop.now
-        je.segments.append(Segment(je._run_start, now, f"affiliation-{aff}"))
+        je.segments.append(Segment(je._run_start, now, f"affiliation-{aff}",
+                                   chip=je.chip_index))
+        je.wasted_cycles += (now - je._run_start) - je.remaining  # straggler excess
         je.remaining = 0.0
         je.state = JobState.DONE
         je.completion = now
@@ -701,7 +822,7 @@ class FlashPolicy(_DeferredDispatchMixin):
         else:
             self._run_deep(d, now)
 
-    def _run_deep(self, d: JobExec, now: float) -> None:
+    def _run_deep(self, d: JobExec, now: float, factor: float | None = None) -> None:
         _cancel_deadline(d)
         d.state = JobState.RUNNING
         d.lanes = (f"{self._deep_label}+gang[{d.gang_rank}/{d.gang_size}]"
@@ -709,11 +830,14 @@ class FlashPolicy(_DeferredDispatchMixin):
         if d.first_start is None:
             d.first_start = now
         d._run_start = now
-        d._complete_ev = self.loop.call_after(d.remaining, lambda: self._finish_deep(d))
+        d._run_factor = factor if factor is not None else self.slow_factor
+        d._complete_ev = self.loop.call_after(
+            d.remaining * d._run_factor, lambda: self._finish_deep(d))
 
     def _finish_deep(self, d: JobExec) -> None:
         now = self.loop.now
-        d.segments.append(Segment(d._run_start, now, "deep"))
+        d.segments.append(Segment(d._run_start, now, "deep", chip=d.chip_index))
+        d.wasted_cycles += (now - d._run_start) - d.remaining  # straggler excess
         d.remaining = 0.0
         d.state = JobState.DONE
         d.completion = now
@@ -722,6 +846,79 @@ class FlashPolicy(_DeferredDispatchMixin):
             d.gang.running = False  # all fragments finish at this instant
         self.on_complete(d)
         self._schedule_dispatch()
+
+    # -- fault injection (invoked by the cluster router's fault handlers) ----
+
+    def fail_all(self, now: float) -> list[JobExec]:
+        """Chip crash: every resident job fails transiently and the chip stops
+        accepting work until ``revive``.  Returns every newly-failed record —
+        including fragments a gang abort killed on OTHER (healthy) chips, so
+        the router sees each victim exactly once."""
+        self.alive = False
+        victims: list[JobExec] = []
+        for i, je in enumerate(self.aff_running):
+            if je is not None:
+                _fail_record(je, now, f"affiliation-{i}", self.chip)
+                victims.append(je)
+                self.aff_running[i] = None
+        d = self.deep_active
+        if d is not None:
+            if d.gang is not None:
+                victims.extend(d.gang.abort(now))
+            else:
+                _fail_record(d, now, "deep", self.chip)
+                victims.append(d)
+            self.deep_active = None
+        for q in (self.shallow_q, self.deep_q):
+            while len(q):
+                je = q.pop()
+                if je.state is not JobState.QUEUED:
+                    continue  # a gang abort above already froze this fragment
+                if je.gang is not None:
+                    victims.extend(je.gang.abort(now))
+                else:
+                    _fail_record(je, now, "queued", self.chip)
+                    victims.append(je)
+        self._gang_hold = False
+        return victims
+
+    def fail_one(self, now: float) -> list[JobExec]:
+        """Transient job fault: kill ONE running job (deterministically the
+        active deep job, else the lowest busy affiliation) without taking the
+        chip down.  A ganged victim aborts its whole gang in lockstep."""
+        d = self.deep_active
+        if d is not None and d.state is JobState.RUNNING:
+            if d.gang is not None:
+                return d.gang.abort(now)
+            _fail_record(d, now, "deep", self.chip)
+            self.deep_active = None
+            self._schedule_dispatch()
+            return [d]
+        for i, je in enumerate(self.aff_running):
+            if je is not None:
+                _fail_record(je, now, f"affiliation-{i}", self.chip)
+                self.aff_running[i] = None
+                self._schedule_dispatch()
+                return [je]
+        return []
+
+    def _gang_member_fail(self, d: JobExec, now: float) -> None:
+        """Abort this chip's fragment of a dead gang.  Always a full restart:
+        the re-planned job may land on different chips, where a per-chip shard
+        checkpoint is meaningless."""
+        d._has_checkpoint = False
+        _fail_record(d, now, "deep", self.chip)
+        if self.deep_active is d:
+            self.deep_active = None
+        self._gang_hold = False
+        if self.alive:
+            self._schedule_dispatch()  # the gang's claim on this chip is gone
+
+    def revive(self) -> None:
+        """Chip recovered from a crash: accept placements again.  The crash
+        cleared every queue, so the chip rejoins empty (and the router rejoins
+        it with a cold warm-set)."""
+        self.alive = True
 
 
 class SequentialPolicy(_DeferredDispatchMixin):
@@ -735,12 +932,17 @@ class SequentialPolicy(_DeferredDispatchMixin):
         self._dispatch_pending = False
         self.queue = _PriorityQueue()
         self.running: JobExec | None = None
+        self.alive = True
+        self.slow_factor = 1.0
 
     def bind(self, loop: EventLoop, on_complete: Callable[[JobExec], None]) -> None:
         self.loop = loop
         self.on_complete = on_complete
 
     def submit(self, je: JobExec) -> None:
+        assert self.alive or je.state is not JobState.QUEUED, (
+            f"job {je.job.job_id} routed to dead chip {je.chip_index}"
+        )
         self.queue.push(je)
         self._schedule_dispatch()
 
@@ -752,20 +954,52 @@ class SequentialPolicy(_DeferredDispatchMixin):
         _cancel_deadline(je)
         je.state = JobState.RUNNING
         je.lanes = lanes_whole_chip(self.chip).label
-        je.first_start = now
+        if je.first_start is None:  # a retry keeps its original first start
+            je.first_start = now
         je._run_start = now
+        je._run_factor = self.slow_factor
         self.running = je
-        je._complete_ev = self.loop.call_after(je.remaining, lambda: self._finish(je))
+        je._complete_ev = self.loop.call_after(
+            je.remaining * je._run_factor, lambda: self._finish(je))
 
     def _finish(self, je: JobExec) -> None:
         now = self.loop.now
-        je.segments.append(Segment(je._run_start, now, "whole-chip"))
+        je.segments.append(Segment(je._run_start, now, "whole-chip", chip=je.chip_index))
+        je.wasted_cycles += (now - je._run_start) - je.remaining  # straggler excess
         je.remaining = 0.0
         je.state = JobState.DONE
         je.completion = now
         self.running = None
         self.on_complete(je)
         self._schedule_dispatch()
+
+    # -- fault injection (mirrors FlashPolicy; sequential chips never gang) --
+
+    def fail_all(self, now: float) -> list[JobExec]:
+        self.alive = False
+        victims: list[JobExec] = []
+        if self.running is not None:
+            _fail_record(self.running, now, "whole-chip", self.chip)
+            victims.append(self.running)
+            self.running = None
+        while len(self.queue):
+            je = self.queue.pop()
+            if je.state is JobState.QUEUED:
+                _fail_record(je, now, "queued", self.chip)
+                victims.append(je)
+        return victims
+
+    def fail_one(self, now: float) -> list[JobExec]:
+        je = self.running
+        if je is None or je.state is not JobState.RUNNING:
+            return []
+        _fail_record(je, now, "whole-chip", self.chip)
+        self.running = None
+        self._schedule_dispatch()
+        return [je]
+
+    def revive(self) -> None:
+        self.alive = True
 
 
 def policy_for(chip: ChipConfig):
@@ -783,14 +1017,18 @@ class ServeResult:
     jobs: list[JobExec]  # submission order
     makespan: float
     events_processed: int
+    chip_index: int = 0  # this engine's fleet position (0 when single-chip)
 
     def validate(self) -> "ServeResult":
         """Timeline-consistency invariants (raises AssertionError on violation):
-        every submission completed OR was shed, per-affiliation intervals never
-        overlap, and each completed job's run segments sum to its service time
-        plus the spill/restore overhead it was charged (work conservation —
-        shed jobs are excluded: they must have NO segments, no start, no
-        completion, and a shed instant no earlier than their arrival)."""
+        every submission reached a terminal state (DONE, SHED, or frozen by a
+        fault), per-affiliation intervals on THIS chip never overlap, and each
+        record's run segments sum to the work it was charged (work
+        conservation): a completed job ran service + spill/restore + wasted
+        cycles; a fault-frozen attempt satisfies the running form busy +
+        remaining == service + spill + wasted.  Shed jobs must have NO
+        segments, no start, no completion, and a shed instant no earlier than
+        their arrival."""
         n_aff = self.chip.n_affiliations if self.chip.multi_job else 1
         per_resource: dict[str, list[Segment]] = {}
         for je in self.jobs:
@@ -804,19 +1042,38 @@ class ServeResult:
                     f"job {je.job.job_id} shed before it arrived"
                 )
                 continue
-            assert je.state is JobState.DONE, f"job {je.job.job_id} never completed ({je.state})"
-            assert je.completion is not None and je.first_start is not None
-            assert je.first_start >= je.job.arrival_cycle - _TOL, (
-                f"job {je.job.job_id} started before it arrived"
-            )
-            got = je.busy_cycles
-            want = je.service_cycles + je.spill_restore_cycles
-            assert abs(got - want) <= _TOL * max(1.0, want), (
-                f"job {je.job.job_id} ran {got} cycles, owed {want} "
-                f"(service {je.service_cycles} + spill/restore {je.spill_restore_cycles})"
-            )
+            if je.state in (JobState.FAILED_TRANSIENT, JobState.FAILED):
+                assert je.failed_cycle is not None, (
+                    f"failed job {je.job.job_id} missing failed_cycle"
+                )
+                assert je.completion is None, (
+                    f"failed attempt of {je.job.job_id} holds a completion"
+                )
+                got = je.busy_cycles + je.remaining
+                want = je.service_cycles + je.spill_restore_cycles + je.wasted_cycles
+                assert abs(got - want) <= _TOL * max(1.0, want), (
+                    f"failed attempt of {je.job.job_id}: busy+remaining {got} != "
+                    f"service+spill+wasted {want}"
+                )
+            else:
+                assert je.state is JobState.DONE, (
+                    f"job {je.job.job_id} never completed ({je.state})"
+                )
+                assert je.completion is not None and je.first_start is not None
+                assert je.first_start >= je.job.arrival_cycle - _TOL, (
+                    f"job {je.job.job_id} started before it arrived"
+                )
+                got = je.busy_cycles
+                want = je.service_cycles + je.spill_restore_cycles + je.wasted_cycles
+                assert abs(got - want) <= _TOL * max(1.0, want), (
+                    f"job {je.job.job_id} ran {got} cycles, owed {want} "
+                    f"(service {je.service_cycles} + spill/restore "
+                    f"{je.spill_restore_cycles} + wasted {je.wasted_cycles})"
+                )
             for seg in je.segments:
                 assert seg.end >= seg.start - _TOL
+                if seg.chip != self.chip_index:
+                    continue  # an earlier attempt's run on another fleet chip
                 if seg.resource == "deep":  # a gang occupies every affiliation
                     for a in range(n_aff):
                         per_resource.setdefault(f"affiliation-{a}", []).append(seg)
@@ -860,6 +1117,7 @@ class ServingEngine:
         self.exec_policy = (exec_policy if exec_policy is not None
                             else exec_policy_from_hoist(hoist))
         self.hoist = self.exec_policy.plan_hoist
+        self.chip_index = 0  # fleet position; the cluster router assigns it
         self.jobs: list[JobExec] = []
         self._source = None
         # fleet hooks: the cluster router tracks per-chip backlog through these
@@ -877,19 +1135,25 @@ class ServingEngine:
 
     def submit(self, job: FheJob, extra_cycles: float = 0.0, sim: SimResult | None = None,
                service_cycles: float | None = None,
-               gang: "GangReservation | None" = None) -> JobExec:
+               gang: "GangReservation | None" = None,
+               arm_deadline: bool = True) -> JobExec:
         """Queue one job.  ``extra_cycles`` is added to the service demand —
         the cluster router charges warm-set cold starts (KSK/plaintext fetch)
         this way, so work conservation holds penalty-inclusive.  The router's
         gang path overrides the priced demand (``service_cycles`` = per-chip
         gang duration incl. link stalls, with ``sim`` the single-chip sim for
         reference) and attaches the fragment to its cross-chip reservation.
+        ``arm_deadline=False`` skips the queue-timeout shed — the router's
+        retry path uses it because a retry's deadline measured from the
+        ORIGINAL arrival would already be in the past (and a retried job must
+        not be shed mid-recovery anyway).
         """
         if sim is None:
             sim = self.service_sim(job)
         base = float(service_cycles) if service_cycles is not None else sim.cycles
         je = JobExec(job=job, service_cycles=base + float(extra_cycles), sim=sim,
-                     lanes="", cold_start_cycles=float(extra_cycles), gang=gang)
+                     lanes="", cold_start_cycles=float(extra_cycles), gang=gang,
+                     chip_index=self.chip_index)
         if gang is not None:
             gang.attach(self.policy, je)
         self.jobs.append(je)
@@ -897,7 +1161,7 @@ class ServingEngine:
         # fraction of a cycle before a fractional clock (non-integral spill pay)
         arrival = max(self.loop.now, float(job.arrival_cycle))
         self.loop.call_at(arrival, lambda: self.policy.submit(je))
-        if self.shed_after is not None and gang is None:
+        if self.shed_after is not None and gang is None and arm_deadline:
             # gang fragments are exempt: the lockstep barrier already bounds
             # their queueing through the router's gang-vs-single estimate, and
             # shedding one fragment of a committed reservation would deadlock
@@ -944,7 +1208,8 @@ class ServingEngine:
         makespan = max((je.completion for je in self.jobs
                         if je.completion is not None), default=0.0)
         return ServeResult(chip=self.chip, jobs=list(self.jobs),
-                           makespan=makespan, events_processed=self.loop.processed)
+                           makespan=makespan, events_processed=self.loop.processed,
+                           chip_index=self.chip_index)
 
     def run(self, source=None) -> ServeResult:
         if source is not None:

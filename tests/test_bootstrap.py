@@ -18,38 +18,38 @@ from repro.fhe.context import FheContext
 @pytest.fixture(scope="module")
 def btctx():
     p = P.make_params(1 << 8, 18, 1, check_security=False)
-    return p, B.build_context(p, seed=0, h=32)
+    bctx = B.build_context(p, seed=0, h=32)
+    return p, bctx, FheContext(params=p, keys=bctx.keys)
 
 
 @pytest.fixture(scope="module")
 def boot_result(btctx):
-    p, ctx = btctx
+    p, ctx, fc = btctx
     rng = np.random.default_rng(7)
     z = rng.normal(size=p.slots) * 0.4 + 1j * rng.normal(size=p.slots) * 0.4
-    ct = ops.encrypt(p, ctx.keys.pk, ops.encode(p, z))
+    ct = fc.encrypt(fc.encode(z))
     att = 1 / 64.0
-    ct = ops.level_drop(ops.mul_const(p, ct, att), 0)
-    fc = FheContext(params=p, keys=ctx.keys)
+    ct = ops.level_drop(fc.mul_const(ct, att), 0)
     with trace.capture_trace() as t:
         out = fc.bootstrap(ctx, ct, post_scale=1 / att)
-    return p, ctx, z, out, list(t)
+    return p, fc, z, out, list(t)
 
 
 def test_bootstrap_refreshes_levels(boot_result):
-    p, ctx, z, out, _ = boot_result
+    p, fc, z, out, _ = boot_result
     assert out.level >= 5, f"bootstrap must leave usable depth, got level {out.level}"
 
 
 def test_bootstrap_value_correct(boot_result):
-    p, ctx, z, out, _ = boot_result
-    got = ops.decrypt_decode(p, ctx.keys.sk, out)
+    p, fc, z, out, _ = boot_result
+    got = np.asarray(fc.decrypt_decode(out))
     np.testing.assert_allclose(got, z, atol=5e-2)
 
 
 def test_post_bootstrap_multiplication(boot_result):
-    p, ctx, z, out, _ = boot_result
-    sq = ops.square(p, out, ctx.keys.rlk)
-    got = ops.decrypt_decode(p, ctx.keys.sk, sq)
+    p, fc, z, out, _ = boot_result
+    sq = fc.square(out)
+    got = np.asarray(fc.decrypt_decode(sq))
     np.testing.assert_allclose(got, z * z, atol=1e-1)
 
 
@@ -65,28 +65,27 @@ def test_bootstrap_trace_structure(boot_result):
 
 def test_eval_mod_precision(btctx):
     """Homomorphic sine matches the numpy Chebyshev evaluation."""
-    p, ctx = btctx
+    p, ctx, fc = btctx
     rng = np.random.default_rng(3)
     x = rng.uniform(-0.95, 0.95, size=p.slots)
-    xct = ops.encrypt(p, ctx.keys.pk, ops.encode(p, x))
-    fc = FheContext(params=p, keys=ctx.keys)
+    xct = fc.encrypt(fc.encode(x))
     basis = fc.chebyshev_basis(xct, ctx.eval_mod_degree)
     out = fc.eval_chebyshev(basis, ctx.sine_coeffs)
     want = np.polynomial.chebyshev.Chebyshev(ctx.sine_coeffs)(x)
-    got = ops.decrypt_decode(p, ctx.keys.sk, out).real
+    got = np.asarray(fc.decrypt_decode(out)).real
     np.testing.assert_allclose(got, want, atol=1e-3)
 
 
 def test_force_to_exactness(btctx):
     """force_to's mul-by-one fold is value-preserving across multi-level drops."""
-    p, ctx = btctx
+    p, ctx, fc = btctx
     rng = np.random.default_rng(11)
     z = rng.normal(size=p.slots) * 0.3
-    ct = ops.encrypt(p, ctx.keys.pk, ops.encode(p, z))
+    ct = fc.encrypt(fc.encode(z))
     dropped = FheContext(params=p).force_to(ct, ct.level - 5, p.scale * 1.01)
     assert dropped.level == ct.level - 5
     assert dropped.scale == p.scale * 1.01
-    np.testing.assert_allclose(ops.decrypt_decode(p, ctx.keys.sk, dropped), z, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(fc.decrypt_decode(dropped)), z, atol=2e-3)
 
 
 def test_context_precomputes_galois_union_without_overgeneration(btctx):
@@ -94,7 +93,7 @@ def test_context_precomputes_galois_union_without_overgeneration(btctx):
     exactly one switching key per needed Galois element — no extras."""
     from repro.fhe import keys as K
 
-    p, ctx = btctx
+    p, ctx, _ = btctx
     want = set()
     for plan in (*ctx.cts_plans, *ctx.stc_plans):
         want |= plan.rotations()

@@ -4,101 +4,104 @@ import numpy as np
 import pytest
 
 from repro.fhe import keys as K
-from repro.fhe import ops
 from repro.fhe import params as P
 from repro.fhe import trace
+from repro.fhe.context import FheContext
 
 
 @pytest.fixture(scope="module")
 def ctx():
     p = P.make_params(1 << 9, 6, 2, check_security=False)
     ks = K.full_keyset(p, seed=0, rotations=(1, 3, 7), conjugate=True)
+    c = FheContext(params=p, keys=ks)
     rng = np.random.default_rng(1)
     z = rng.normal(size=p.slots) * 0.5 + 1j * rng.normal(size=p.slots) * 0.5
     w = rng.normal(size=p.slots) * 0.5
-    return p, ks, z, w
+    return c, z, w
 
 
 def test_encode_decode_roundtrip(ctx):
-    p, ks, z, _ = ctx
-    pt = ops.encode(p, z)
-    np.testing.assert_allclose(ops.decode(p, pt), z, atol=1e-4)
+    c, z, _ = ctx
+    pt = c.encode(z)
+    np.testing.assert_allclose(c.decode(pt), z, atol=1e-4)
 
 
 def test_encrypt_decrypt(ctx):
-    p, ks, z, _ = ctx
-    ct = ops.encrypt(p, ks.pk, ops.encode(p, z))
-    np.testing.assert_allclose(ops.decrypt_decode(p, ks.sk, ct), z, atol=1e-3)
+    c, z, _ = ctx
+    ct = c.encrypt(c.encode(z))
+    np.testing.assert_allclose(c.decrypt_decode(ct), z, atol=1e-3)
 
 
 def test_add_sub(ctx):
-    p, ks, z, w = ctx
-    a = ops.encrypt(p, ks.pk, ops.encode(p, z))
-    b = ops.encrypt(p, ks.pk, ops.encode(p, w), seed=23)
-    np.testing.assert_allclose(ops.decrypt_decode(p, ks.sk, ops.add(p, a, b)), z + w, atol=1e-3)
-    np.testing.assert_allclose(ops.decrypt_decode(p, ks.sk, ops.sub(p, a, b)), z - w, atol=1e-3)
+    c, z, w = ctx
+    a = c.encrypt(c.encode(z))
+    b = c.encrypt(c.encode(w), seed=23)
+    np.testing.assert_allclose(c.decrypt_decode(c.add(a, b)), z + w, atol=1e-3)
+    np.testing.assert_allclose(c.decrypt_decode(c.sub(a, b)), z - w, atol=1e-3)
 
 
 def test_add_plain_and_const(ctx):
-    p, ks, z, w = ctx
-    a = ops.encrypt(p, ks.pk, ops.encode(p, z))
-    out = ops.add_plain(p, a, ops.encode(p, w, level=a.level, scale=a.scale))
-    np.testing.assert_allclose(ops.decrypt_decode(p, ks.sk, out), z + w, atol=1e-3)
-    out2 = ops.add_const(p, a, 0.25)
-    np.testing.assert_allclose(ops.decrypt_decode(p, ks.sk, out2), z + 0.25, atol=1e-3)
+    c, z, w = ctx
+    a = c.encrypt(c.encode(z))
+    out = c.add_plain(a, c.encode(w, level=a.level, scale=a.scale))
+    np.testing.assert_allclose(c.decrypt_decode(out), z + w, atol=1e-3)
+    out2 = c.add_const(a, 0.25)
+    np.testing.assert_allclose(c.decrypt_decode(out2), z + 0.25, atol=1e-3)
 
 
 def test_mul_relin_rescale(ctx):
-    p, ks, z, w = ctx
-    a = ops.encrypt(p, ks.pk, ops.encode(p, z))
-    b = ops.encrypt(p, ks.pk, ops.encode(p, w), seed=29)
-    m = ops.mul(p, a, b, ks.rlk)
+    c, z, w = ctx
+    p = c.params
+    a = c.encrypt(c.encode(z))
+    b = c.encrypt(c.encode(w), seed=29)
+    m = c.mul(a, b)
     assert m.level == p.L - 1
     assert abs(np.log2(m.scale) - p.scale_bits) < 1.0  # scale stays stationary
-    np.testing.assert_allclose(ops.decrypt_decode(p, ks.sk, m), z * w, atol=2e-3)
+    np.testing.assert_allclose(c.decrypt_decode(m), z * w, atol=2e-3)
 
 
 def test_mul_plain(ctx):
-    p, ks, z, w = ctx
-    a = ops.encrypt(p, ks.pk, ops.encode(p, z))
-    m = ops.mul_plain(p, a, ops.encode(p, w, level=a.level))
-    np.testing.assert_allclose(ops.decrypt_decode(p, ks.sk, m), z * w, atol=2e-3)
-    m2 = ops.mul_const(p, a, -1.5)
-    np.testing.assert_allclose(ops.decrypt_decode(p, ks.sk, m2), -1.5 * z, atol=2e-3)
+    c, z, w = ctx
+    a = c.encrypt(c.encode(z))
+    m = c.mul_plain(a, c.encode(w, level=a.level))
+    np.testing.assert_allclose(c.decrypt_decode(m), z * w, atol=2e-3)
+    m2 = c.mul_const(a, -1.5)
+    np.testing.assert_allclose(c.decrypt_decode(m2), -1.5 * z, atol=2e-3)
 
 
 @pytest.mark.parametrize("r", [1, 3, 7])
 def test_rotate(ctx, r):
-    p, ks, z, _ = ctx
-    a = ops.encrypt(p, ks.pk, ops.encode(p, z))
-    out = ops.rotate(p, a, r, ks)
-    np.testing.assert_allclose(ops.decrypt_decode(p, ks.sk, out), np.roll(z, -r), atol=2e-3)
+    c, z, _ = ctx
+    a = c.encrypt(c.encode(z))
+    out = c.rotate(a, r)
+    np.testing.assert_allclose(c.decrypt_decode(out), np.roll(z, -r), atol=2e-3)
 
 
 def test_conjugate(ctx):
-    p, ks, z, _ = ctx
-    a = ops.encrypt(p, ks.pk, ops.encode(p, z))
-    out = ops.conjugate(p, a, ks)
-    np.testing.assert_allclose(ops.decrypt_decode(p, ks.sk, out), np.conj(z), atol=2e-3)
+    c, z, _ = ctx
+    a = c.encrypt(c.encode(z))
+    out = c.conjugate(a)
+    np.testing.assert_allclose(c.decrypt_decode(out), np.conj(z), atol=2e-3)
 
 
 def test_depth_chain(ctx):
-    p, ks, _, w = ctx
+    c, _, w = ctx
+    p = c.params
     ref = 0.95 * w / np.abs(w).max()  # keep |x| < 1 so x^16 stays bounded
-    cur = ops.encrypt(p, ks.pk, ops.encode(p, ref))
+    cur = c.encrypt(c.encode(ref))
     for _ in range(4):
-        cur = ops.square(p, cur, ks.rlk)
+        cur = c.square(cur)
         ref = ref * ref
     assert cur.level == p.L - 4
-    np.testing.assert_allclose(ops.decrypt_decode(p, ks.sk, cur), ref, atol=5e-3)
+    np.testing.assert_allclose(c.decrypt_decode(cur), ref, atol=5e-3)
 
 
 def test_trace_capture_records_pipeline(ctx):
-    p, ks, z, w = ctx
-    a = ops.encrypt(p, ks.pk, ops.encode(p, z))
-    b = ops.encrypt(p, ks.pk, ops.encode(p, w), seed=5)
+    c, z, w = ctx
+    a = c.encrypt(c.encode(z))
+    b = c.encrypt(c.encode(w), seed=5)
     with trace.capture_trace() as t:
-        ops.mul(p, a, b, ks.rlk)
+        c.mul(a, b)
     names = [i.op for i in t]
     # key-switching is the iNTT→BConv→NTT pipeline
     assert "INTT" in names and "BCONV" in names and "NTT" in names

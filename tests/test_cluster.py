@@ -404,7 +404,7 @@ def test_summarize_cluster_idle_chip():
     assert m["n_completed_deep"] == 0.0
     assert np.isnan(m["time_to_shed_p99_cycles"])
     empty_sample_keys = {"latency_p99_deep_cycles", "time_to_shed_p50_cycles",
-                         "time_to_shed_p99_cycles"}
+                         "time_to_shed_p99_cycles", "mttr_mcycles"}
     assert all(np.isfinite(v) for k, v in m.items() if k not in empty_sample_keys)
 
 

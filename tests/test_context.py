@@ -2,10 +2,11 @@
 
 Three contracts pinned here:
 
-  * **shim lifecycle** — the surviving ``fhe.ops`` free functions are thin
-    shims over the SAME context-consuming implementation (bit-exact parity,
-    hypothesis-driven, always warning); the retired linear/polyeval/bootstrap
-    tranche raises ``AttributeError`` with the migration hint;
+  * **shim lifecycle** — every retired free-function tranche
+    (linear/polyeval/bootstrap, and now the ``fhe.ops`` kwarg-threading
+    entry points) raises ``AttributeError`` with the context migration hint,
+    never silently delegating; the context methods carry the full numerics
+    contract (cross-backend bit-exactness, hypothesis-driven);
   * **policy identity** — ``ExecPolicy.policy_key()`` distinguishes every
     (scheme, backend, hoisting, numerics) combination, excludes the dispatch
     hook, and is what keys the serving service-time memo (no mode aliasing);
@@ -15,7 +16,6 @@ Three contracts pinned here:
 """
 
 import itertools
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -52,17 +52,8 @@ def cset():
     return p, ks, ctx, ct_a, ct_b, za, zb
 
 
-def _legacy(fn, *args, **kwargs):
-    """Call a deprecated shim, asserting it actually warns."""
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        out = fn(*args, **kwargs)
-    assert any(issubclass(x.category, DeprecationWarning) for x in w), fn.__name__
-    return out
-
-
 # ---------------------------------------------------------------------------
-# shim parity: context methods ≡ legacy free functions, bit-exact
+# numerics contract: every (backend, hoisting) combination ≡ ref/never, bit-exact
 # ---------------------------------------------------------------------------
 
 
@@ -70,23 +61,23 @@ def _legacy(fn, *args, **kwargs):
 @given(backend=st.sampled_from(("ref", "fused")),
        hoisting=st.sampled_from(HOISTING_MODES),
        r=st.sampled_from(ROTS))
-def test_ops_context_vs_legacy_bitexact(cset, backend, hoisting, r):
+def test_ops_backends_bitexact_vs_reference(cset, backend, hoisting, r):
     p, ks, _, ct_a, ct_b, _, _ = cset
     ctx = FheContext(params=p, keys=ks,
                      policy=ExecPolicy(backend=backend, hoisting=hoisting))
+    ref = FheContext(params=p, keys=ks,
+                     policy=ExecPolicy(backend="ref", hoisting="never"))
     pairs = [
-        (ctx.add(ct_a, ct_b), _legacy(ops.add, p, ct_a, ct_b, backend)),
-        (ctx.sub(ct_a, ct_b), _legacy(ops.sub, p, ct_a, ct_b, backend)),
-        (ctx.negate(ct_a), _legacy(ops.negate, p, ct_a, backend)),
-        (ctx.mul(ct_a, ct_b),
-         _legacy(ops.mul, p, ct_a, ct_b, ks.rlk, backend=backend)),
-        (ctx.square(ct_a), _legacy(ops.square, p, ct_a, ks.rlk, backend=backend)),
-        (ctx.rotate(ct_a, r),
-         _legacy(ops.rotate, p, ct_a, r, ks, backend=backend, hoisting=hoisting)),
-        (ctx.conjugate(ct_a), _legacy(ops.conjugate, p, ct_a, ks, backend)),
-        (ctx.rescale(ct_a), _legacy(ops.rescale, p, ct_a, backend)),
-        (ctx.add_const(ct_a, 0.25), _legacy(ops.add_const, p, ct_a, 0.25, backend)),
-        (ctx.mul_const(ct_a, 0.5), _legacy(ops.mul_const, p, ct_a, 0.5, backend=backend)),
+        (ctx.add(ct_a, ct_b), ref.add(ct_a, ct_b)),
+        (ctx.sub(ct_a, ct_b), ref.sub(ct_a, ct_b)),
+        (ctx.negate(ct_a), ref.negate(ct_a)),
+        (ctx.mul(ct_a, ct_b), ref.mul(ct_a, ct_b)),
+        (ctx.square(ct_a), ref.square(ct_a)),
+        (ctx.rotate(ct_a, r), ref.rotate(ct_a, r)),
+        (ctx.conjugate(ct_a), ref.conjugate(ct_a)),
+        (ctx.rescale(ct_a), ref.rescale(ct_a)),
+        (ctx.add_const(ct_a, 0.25), ref.add_const(ct_a, 0.25)),
+        (ctx.mul_const(ct_a, 0.5), ref.mul_const(ct_a, 0.5)),
     ]
     for got, want in pairs:
         assert _ct_equal(got, want)
@@ -96,18 +87,20 @@ def test_ops_context_vs_legacy_bitexact(cset, backend, hoisting, r):
 @settings(max_examples=4, deadline=None)
 @given(backend=st.sampled_from(("ref", "fused")),
        hoisting=st.sampled_from(HOISTING_MODES))
-def test_encode_encrypt_decrypt_parity(cset, backend, hoisting):
+def test_encode_encrypt_decrypt_backends_bitexact(cset, backend, hoisting):
     p, ks, _, _, _, za, _ = cset
     ctx = FheContext(params=p, keys=ks,
                      policy=ExecPolicy(backend=backend, hoisting=hoisting))
+    ref = FheContext(params=p, keys=ks,
+                     policy=ExecPolicy(backend="ref", hoisting="never"))
     pt = ctx.encode(za)
-    pt_l = _legacy(ops.encode, p, za, backend=backend)
-    assert bool(jnp.array_equal(pt.data, pt_l.data))
+    pt_r = ref.encode(za)
+    assert bool(jnp.array_equal(pt.data, pt_r.data))
     ct = ctx.encrypt(pt, seed=5)
-    ct_l = _legacy(ops.encrypt, p, ks.pk, pt_l, seed=5, backend=backend)
-    assert _ct_equal(ct, ct_l)
+    ct_r = ref.encrypt(pt_r, seed=5)
+    assert _ct_equal(ct, ct_r)
     got = ctx.decrypt_decode(ct)
-    want = _legacy(ops.decrypt_decode, p, ks.sk, ct_l, backend)
+    want = ref.decrypt_decode(ct_r)
     assert np.array_equal(np.asarray(got), np.asarray(want))
     assert np.abs(got - za).max() < 1e-3
 
@@ -354,22 +347,11 @@ def test_plan_diags_banded():
 # ---------------------------------------------------------------------------
 
 
-def test_legacy_free_functions_warn(cset):
-    """The surviving ops shims still warn on every call."""
-    p, ks, _, ct_a, ct_b, za, _ = cset
-    with pytest.warns(DeprecationWarning):
-        ops.add(p, ct_a, ct_b)
-    with pytest.warns(DeprecationWarning):
-        ops.encode(p, za)
-    with pytest.warns(DeprecationWarning):
-        ops.rotate(p, ct_a, 1, ks)
-
-
 def test_retired_shims_raise_with_migration_hint():
-    """First retirement tranche (docs/context_api.md step 3): the
-    linear/polyeval/bootstrap free functions are gone — the names resolve to
-    an AttributeError carrying the context replacement, never to silent
-    delegation."""
+    """Retirement tranches (docs/context_api.md step 3): the
+    linear/polyeval/bootstrap free functions AND the ops kwarg-threading
+    entry points are gone — every name resolves to an AttributeError
+    carrying the context replacement, never to silent delegation."""
     from repro.fhe import bootstrap
 
     retired = [
@@ -381,8 +363,20 @@ def test_retired_shims_raise_with_migration_hint():
         (bootstrap, "coeff_to_slot"), (bootstrap, "eval_mod"),
         (bootstrap, "slot_to_coeff"),
     ]
+    retired += [(ops, name) for name in (
+        "encode", "encode_const", "decode", "encrypt", "decrypt",
+        "decrypt_decode", "add", "sub", "negate", "add_plain", "add_const",
+        "mul_plain", "mul_const", "mul_const_exact", "mul", "square",
+        "rescale", "rotate", "rotate_hoisted", "rotate_hoisted_group",
+        "conjugate")]
     for mod, name in retired:
         with pytest.raises(AttributeError, match="ctx\\."):
             getattr(mod, name)
+        with pytest.raises(AttributeError, match="docs/context_api.md"):
+            getattr(mod, name)
     with pytest.raises(AttributeError):
         linear.no_such_function  # unknown names still raise plainly
+    with pytest.raises(AttributeError):
+        ops.no_such_function
+    # non-retired ops module members stay importable (level_drop is API)
+    assert callable(ops.level_drop)

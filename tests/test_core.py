@@ -12,9 +12,9 @@ from repro.core import scheduler as S
 from repro.core.cache import MB, LruCache
 from repro.core.simulator import lanes_deep, lanes_whole_chip, simulate_stream
 from repro.fhe import keys as K
-from repro.fhe import ops
 from repro.fhe import params as P
 from repro.fhe import trace
+from repro.fhe.context import FheContext
 
 
 def _sig(instrs):
@@ -26,11 +26,12 @@ def _sig(instrs):
 def small():
     p = P.make_params(1 << 9, 6, 2, check_security=False)
     ks = K.full_keyset(p, seed=0, rotations=(1, 3), conjugate=True)
+    ctx = FheContext(params=p, keys=ks)
     rng = np.random.default_rng(5)
     z = rng.normal(size=p.slots) * 0.4
-    a = ops.encrypt(p, ks.pk, ops.encode(p, z))
-    b = ops.encrypt(p, ks.pk, ops.encode(p, z * 0.5), seed=31)
-    return p, ks, a, b
+    a = ctx.encrypt(ctx.encode(z))
+    b = ctx.encrypt(ctx.encode(z * 0.5), seed=31)
+    return p, ctx, a, b
 
 
 # ---------------------------------------------------------------------------
@@ -41,17 +42,17 @@ def small():
 def test_planner_hmul_matches_execution(small):
     # default CPU execution runs the *staged* key-switch pipeline (explicit
     # working-set boundaries); the fused-pipeline parity lives in test_fusedks
-    p, ks, a, b = small
+    p, ctx, a, b = small
     with trace.capture_trace() as t:
-        ops.mul(p, a, b, ks.rlk)
+        ctx.mul(a, b)
     pp = PL.PlanParams.of(p)
     assert _sig(t) == _sig(PL.hmul(pp, a.level, fused=False))
 
 
 def test_planner_rotate_matches_execution(small):
-    p, ks, a, _ = small
+    p, ctx, a, _ = small
     with trace.capture_trace() as t:
-        ops.rotate(p, a, 3, ks)
+        ctx.rotate(a, 3)
     pp = PL.PlanParams.of(p)
     assert _sig(t) == _sig(PL.rotate(pp, a.level, fused=False))
 
@@ -69,10 +70,10 @@ def test_planner_keyswitch_level_dependence(small):
 
 
 def test_planner_mul_plain_matches_execution(small):
-    p, ks, a, _ = small
+    p, ctx, a, _ = small
     pt_z = np.ones(p.slots) * 0.5
     with trace.capture_trace() as t:
-        ops.mul_plain(p, a, ops.encode(p, pt_z, level=a.level), rescale_after=True)
+        ctx.mul_plain(a, ctx.encode(pt_z, level=a.level), rescale_after=True)
     pp = PL.PlanParams.of(p)
     assert _sig(t) == _sig(PL.mul_plain(pp, a.level, rescale_after=True, mode="exec"))
 

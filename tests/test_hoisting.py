@@ -1,4 +1,4 @@
-"""Hoisted rotation key-switching: bit-exactness vs ``ops.rotate`` across
+"""Hoisted rotation key-switching: bit-exactness vs ``ctx.rotate`` across
 levels/dnum/rotation sets (hypothesis), dispatch-count amortisation
 (β + O(1) vs k·β extended-basis NTTs), planner trace parity for the hoisted
 shape, and simulator accounting."""
@@ -28,10 +28,12 @@ ROTS = (1, 2, 3, 5, 7)
 def hset(request):
     p = P.make_params(1 << 9, 5, request.param, check_security=False)
     ks = K.full_keyset(p, seed=0, rotations=ROTS, conjugate=True)
+    cr = FheContext(params=p, keys=ks, policy=ExecPolicy(backend="ref"))
+    cf = FheContext(params=p, keys=ks, policy=ExecPolicy(backend="fused"))
     rng = np.random.default_rng(7)
     z = rng.normal(size=p.slots) * 0.3
-    ct = ops.encrypt(p, ks.pk, ops.encode(p, z))
-    return p, ks, ct, z
+    ct = cr.encrypt(cr.encode(z))
+    return p, cr, cf, ct, z
 
 
 def _sig(instrs, skip=()):
@@ -51,56 +53,57 @@ def _ct_equal(a, b) -> bool:
 @given(level=st.integers(min_value=1, max_value=5),
        rs=st.lists(st.sampled_from(ROTS), min_size=1, max_size=4, unique=True))
 def test_group_bitexact_vs_rotate(hset, level, rs):
-    p, ks, ct, _ = hset
+    p, cr, _, ct, _ = hset
     c = ops.level_drop(ct, level)
-    group = ops.rotate_hoisted_group(p, c, tuple(rs), ks, backend="ref")
+    group = cr.rotate_hoisted_group(c, tuple(rs))
     for r in rs:
-        assert _ct_equal(group[r], ops.rotate(p, c, r, ks, backend="ref")), (level, r)
+        assert _ct_equal(group[r], cr.rotate(c, r)), (level, r)
 
 
 def test_group_bitexact_fused_kernels(hset):
     """The batched Pallas path (ModUp + Galois-MAC + batched ModDown kernels)
     against the staged u64 oracle rotations."""
-    p, ks, ct, _ = hset
+    p, cr, cf, ct, _ = hset
     for level in (p.L, max(1, p.alpha - 1)):
         c = ops.level_drop(ct, level)
-        group = ops.rotate_hoisted_group(p, c, ROTS, ks, backend="fused")
+        group = cf.rotate_hoisted_group(c, ROTS)
         for r in ROTS:
-            assert _ct_equal(group[r], ops.rotate(p, c, r, ks, backend="ref")), (level, r)
+            assert _ct_equal(group[r], cr.rotate(c, r)), (level, r)
 
 
 def test_single_hoisted_and_modes(hset):
-    p, ks, ct, _ = hset
-    std = ops.rotate(p, ct, 3, ks, backend="ref")
-    assert _ct_equal(ops.rotate_hoisted(p, ct, 3, ks, backend="ref"), std)
-    assert _ct_equal(ops.rotate(p, ct, 3, ks, backend="ref", hoisting="always"), std)
-    assert _ct_equal(ops.rotate(p, ct, 3, ks, backend="ref", hoisting="auto"), std)
+    p, cr, _, ct, _ = hset
+    std = cr.rotate(ct, 3)
+    assert _ct_equal(cr.rotate_hoisted(ct, 3), std)
+    assert _ct_equal(cr.with_policy(hoisting="always").rotate(ct, 3), std)
+    assert _ct_equal(cr.with_policy(hoisting="auto").rotate(ct, 3), std)
     with pytest.raises(ValueError):
-        ops.rotate(p, ct, 3, ks, hoisting="sometimes")
+        cr.with_policy(hoisting="sometimes")  # modes are validated up front
 
 
 def test_rotation_values_correct(hset):
     """Hoisted rotations still *rotate*: decode matches np.roll."""
-    p, ks, ct, z = hset
-    group = ops.rotate_hoisted_group(p, ct, (1, 5), ks, backend="ref")
+    p, cr, _, ct, z = hset
+    group = cr.rotate_hoisted_group(ct, (1, 5))
     for r in (1, 5):
-        got = ops.decrypt_decode(p, ks.sk, group[r])
+        got = np.asarray(cr.decrypt_decode(group[r]))
         np.testing.assert_allclose(got.real, np.roll(z, -r), atol=2e-2)
 
 
 def test_hoisted_digits_reused_across_calls(hset):
     """A precomputed ``HoistedDigits`` skips the ModUp entirely: only the
     ModDown's two forward NTTs remain per rotation."""
-    p, ks, ct, _ = hset
+    p, cr, _, ct, _ = hset
     hd = KS.hoisted_mod_up(ct.c1, p, ct.level, backend="ref")
     with dispatch.count_dispatches() as c:
-        out = ops.rotate_hoisted(p, ct, 2, ks, backend="ref", hoisted=hd)
+        out = cr.rotate_hoisted(ct, 2, hoisted=hd)
     assert c.get("ntt", 0) == 2 and c.get("intt", 0) == 2  # ModDown only
-    assert _ct_equal(out, ops.rotate(p, ct, 2, ks, backend="ref"))
+    assert _ct_equal(out, cr.rotate(ct, 2))
 
 
 def test_hoisted_ksk_cached_per_keyset(hset):
-    p, ks, ct, _ = hset
+    p, cr, _, ct, _ = hset
+    ks = cr.keys
     t = pow(5, 3, 2 * p.n)
     a = KS.hoisted_ksk(p, ks, t, p.L)
     assert KS.hoisted_ksk(p, ks, t, p.L) is a
@@ -113,13 +116,13 @@ def test_hoisted_ksk_cached_per_keyset(hset):
 
 
 def test_group_kernel_dispatches_amortised(hset):
-    p, ks, ct, _ = hset
+    p, _, cf, ct, _ = hset
     k = len(ROTS)
     with dispatch.count_dispatches() as ch:
-        ops.rotate_hoisted_group(p, ct, ROTS, ks, backend="fused")
+        cf.rotate_hoisted_group(ct, ROTS)
     with dispatch.count_dispatches() as cs:
         for r in ROTS:
-            ops.rotate(p, ct, r, ks, backend="fused")
+            cf.rotate(ct, r)
     # hoisted: shared iNTT + ModUp launch + ONE batched Galois-MAC launch +
     # ONE batched ModDown (P-block iNTT + kernel) + k c0-adds
     assert ch["hoistmodup"] == 1 and ch["hoistmac"] == 1
@@ -134,13 +137,13 @@ def test_group_kernel_dispatches_amortised(hset):
 def test_ref_ntt_launches_beta_plus_k(hset):
     """Staged pipeline: forward-NTT launches collapse from k·(β+2) to β+2k —
     the per-rotation extended-basis NTTs disappear entirely."""
-    p, ks, ct, _ = hset
+    p, cr, _, ct, _ = hset
     beta, k = p.beta(p.L), len(ROTS)
     with dispatch.count_dispatches() as ch:
-        ops.rotate_hoisted_group(p, ct, ROTS, ks, backend="ref")
+        cr.rotate_hoisted_group(ct, ROTS)
     with dispatch.count_dispatches() as cs:
         for r in ROTS:
-            ops.rotate(p, ct, r, ks, backend="ref")
+            cr.rotate(ct, r)
     assert ch["ntt"] == beta + 2 * k  # β ModUp + 2 ModDown per rotation
     assert cs["ntt"] == k * (beta + 2)
 
@@ -148,14 +151,14 @@ def test_ref_ntt_launches_beta_plus_k(hset):
 def test_ext_basis_ntt_records_beta_vs_k_beta(hset):
     """Trace-level: the group performs exactly β extended-basis forward NTTs
     (one per digit, shared), vs k·β on the per-rotation path."""
-    p, ks, ct, _ = hset
+    p, cr, _, ct, _ = hset
     beta, k = p.beta(p.L), len(ROTS)
     m = p.L + 1 + p.alpha
     with trace.capture_trace() as th:
-        ops.rotate_hoisted_group(p, ct, ROTS, ks, backend="ref")
+        cr.rotate_hoisted_group(ct, ROTS)
     with trace.capture_trace() as ts:
         for r in ROTS:
-            ops.rotate(p, ct, r, ks, backend="ref")
+            cr.rotate(ct, r)
     ext_ntts = lambda t: sum(1 for i in t if i.op == "NTT" and i.limbs == m)
     assert ext_ntts(th) == beta
     assert ext_ntts(ts) == k * beta
@@ -167,26 +170,26 @@ def test_ext_basis_ntt_records_beta_vs_k_beta(hset):
 
 
 def test_planner_parity_hoisted_group(hset):
-    p, ks, ct, _ = hset
+    p, cr, cf, ct, _ = hset
     pp = PL.PlanParams.of(p)
     for level in (p.L, max(1, p.alpha - 1)):
         c = ops.level_drop(ct, level)
-        for bk, fused in (("ref", False), ("fused", True)):
+        for ctx, fused in ((cr, False), (cf, True)):
             with trace.capture_trace() as t:
-                ops.rotate_hoisted_group(p, c, ROTS, ks, backend=bk)
+                ctx.rotate_hoisted_group(c, ROTS)
             want = PL.hoisted_rotations(pp, level, len(ROTS), fused=fused)
-            assert _sig(t) == _sig(want), (level, bk)
+            assert _sig(t) == _sig(want), (level, fused)
 
 
 def test_planner_parity_standard_rotate_unchanged(hset):
     """The permute-last refactor must not change the standard rotation's
     trace shape — planner ``rotate`` streams still match."""
-    p, ks, ct, _ = hset
+    p, cr, cf, ct, _ = hset
     pp = PL.PlanParams.of(p)
-    for bk, fused in (("ref", False), ("fused", True)):
+    for ctx, fused in ((cr, False), (cf, True)):
         with trace.capture_trace() as t:
-            ops.rotate(p, ct, 5, ks, backend=bk)
-        assert _sig(t) == _sig(PL.rotate(pp, p.L, fused=fused)), bk
+            ctx.rotate(ct, 5)
+        assert _sig(t) == _sig(PL.rotate(pp, p.L, fused=fused)), fused
 
 
 # ---------------------------------------------------------------------------
@@ -202,8 +205,9 @@ def bsgs_setup():
            + 1j * rng.normal(size=(p.slots, p.slots))) / p.slots
     plan = linear.plan_matrix(mat)
     ks = K.full_keyset(p, seed=1, rotations=tuple(plan.rotations()))
+    base = FheContext(params=p, keys=ks, policy=ExecPolicy(backend="ref"))
     z = rng.normal(size=p.slots) * 0.5
-    ct = ops.encrypt(p, ks.pk, ops.encode(p, z))
+    ct = base.encrypt(base.encode(z))
     return p, ks, plan, mat, ct, z
 
 
@@ -214,7 +218,7 @@ def test_apply_bsgs_hoisting_bitexact(bsgs_setup):
     hoisted = ctx.apply_bsgs(ct, plan)
     staged = ctx.with_policy(hoisting="never").apply_bsgs(ct, plan)
     assert _ct_equal(hoisted, staged)
-    got = ops.decrypt_decode(p, ks.sk, hoisted)
+    got = np.asarray(ctx.decrypt_decode(hoisted))
     np.testing.assert_allclose(got, mat @ z, atol=5e-2)
 
 
@@ -259,10 +263,10 @@ def test_full_keyset_no_overgeneration():
 def test_simulator_parity_executable_vs_planner(hset):
     """Simulating a captured hoisted trace equals simulating the planner's
     analytic hoisted stream — cycles, HBM bytes, and per-unit totals."""
-    p, ks, ct, _ = hset
+    p, _, cf, ct, _ = hset
     pp = PL.PlanParams.of(p)
     with trace.capture_trace() as t:
-        ops.rotate_hoisted_group(p, ct, ROTS, ks, backend="fused")
+        cf.rotate_hoisted_group(ct, ROTS)
     chip = H.FLASH_FHE
     got = simulate_stream(list(t), chip, lanes_deep(chip))
     want = simulate_stream(

@@ -21,8 +21,10 @@ from . import fusedks_bench
 class _Emitter:
     def __init__(self, out_path: str | None):
         self._fh = open(out_path, "w") if out_path else None
+        self.rows: list[tuple[str, object]] = []  # every emitted (name, value)
 
     def __call__(self, name: str, value, derived: int = 0):
+        self.rows.append((name, value))
         if isinstance(value, float):
             value = f"{value:.6g}"
         row = f"{name},{value},{derived}"
@@ -228,6 +230,12 @@ def main(argv=None) -> None:
                          "enforced)")
     ap.add_argument("--out", default=None, help="also write CSV rows to this file")
     ap.add_argument("--iters", type=int, default=3, help="timing iterations per config")
+    ap.add_argument("--history", nargs="?", const="BENCH_HISTORY.json", default=None,
+                    metavar="FILE",
+                    help="append every emitted row to the perf-history JSON "
+                         "(default FILE: BENCH_HISTORY.json); run "
+                         "tools/bench_history.py check-regression afterwards "
+                         "to compare against the trailing median")
     args = ap.parse_args(argv)
 
     emit = _Emitter(args.out)
@@ -245,6 +253,10 @@ def main(argv=None) -> None:
         emit("bench.total_seconds", time.time() - t0)
     finally:
         emit.close()
+    if args.history:
+        from repro.obs import history
+        n = history.append_rows(args.history, emit.rows)
+        print(f"# appended {n} rows to {args.history}", file=sys.stderr)
 
 
 if __name__ == "__main__":

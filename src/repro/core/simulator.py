@@ -138,8 +138,18 @@ def simulate_stream(
     cache: LruCache | None = None,
     cache_bytes: float | None = None,
     key_prefix: str = "",
+    tracer=None,
+    trace_pid: int | None = None,
 ) -> SimResult:
-    """Run one job's instruction stream on the granted lanes."""
+    """Run one job's instruction stream on the granted lanes.
+
+    ``tracer`` (an ``repro.obs.Tracer``) records one occupancy slice per
+    instruction per functional unit it charges, with timestamps = cumulative
+    unit cycles — a per-unit utilisation timeline, not a global schedule
+    (units overlap freely in the fused pipeline).  Each call gets its own
+    trace process (``trace_pid`` overrides) so successive sims — whose unit
+    clocks all start at 0 — never interleave on one track.
+    """
     if cache is None:
         cache = LruCache(cache_bytes if cache_bytes is not None else chip.total_cache_mb * MB)
     unit = {"ntt": 0.0, "bconv": 0.0, "modmul": 0.0, "hbm": 0.0, "transpose": 0.0}
@@ -147,7 +157,17 @@ def simulate_stream(
     hbm_bytes = 0.0
     ksk_counter: dict[str, int] = {}
 
+    trace = tracer is not None and bool(tracer)
+    if trace:
+        pid = trace_pid if trace_pid is not None else tracer.new_process(
+            f"sim {lanes.label or chip.name}")
+        tids = {u: tracer.track(pid, u) for u in unit}
+        hbm_cursor = 0.0
+
     for ins in instrs:
+        if trace:
+            before = dict(unit)
+            hbm_before = hbm_bytes
         n, limbs = ins.n, ins.limbs
         # Fig-2 saturation: a ring of degree N cannot keep more than ~N/16
         # lanes busy (four-step data-distribution limit) — this is WHY adding
@@ -212,6 +232,16 @@ def simulate_stream(
             continue
         else:
             raise ValueError(f"unknown instruction {ins.op}")
+        if trace:
+            for u in ("ntt", "bconv", "modmul", "transpose"):
+                if unit[u] > before[u]:
+                    tracer.complete(ins.op, before[u], unit[u], pid=pid,
+                                    tid=tids[u], n=ins.n, limbs=ins.limbs)
+            if hbm_bytes > hbm_before:
+                dt = (hbm_bytes - hbm_before) / chip.hbm_bytes_per_cycle
+                tracer.complete(ins.op, hbm_cursor, hbm_cursor + dt, pid=pid,
+                                tid=tids["hbm"], bytes=hbm_bytes - hbm_before)
+                hbm_cursor += dt
 
     unit["hbm"] = hbm_bytes / chip.hbm_bytes_per_cycle
     if chip.fused_keyswitch:

@@ -204,26 +204,3 @@ def _bootstrap(fc, bctx: BootstrapContext, ct: ops.Ciphertext,
     trace.record("BOOTSTRAP_END", bctx.params.n, out.level + 1)
     return out
 
-
-# ---------------------------------------------------------------------------
-# retired free-function shims (docs/context_api.md retirement plan, step 3):
-# names stay resolvable for one more PR, raising with the migration hint.
-# ---------------------------------------------------------------------------
-
-_RETIRED = {
-    "bootstrap": "ctx.bootstrap(bctx, ct)",
-    "mod_raise": "ctx.mod_raise(bctx, ct)",
-    "coeff_to_slot": "ctx.coeff_to_slot(bctx, ct)",
-    "eval_mod": "ctx.eval_mod(bctx, ct, coeff_scale)",
-    "slot_to_coeff": "ctx.slot_to_coeff(bctx, a0, a1)",
-}
-
-
-def __getattr__(name: str):
-    if name in _RETIRED:
-        raise AttributeError(
-            f"repro.fhe.bootstrap.{name}() was removed; use {_RETIRED[name]} on "
-            "an FheContext over the BootstrapContext's params/keys "
-            "(see docs/context_api.md)"
-        )
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

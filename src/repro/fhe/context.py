@@ -115,6 +115,26 @@ class ExecPolicy:
         way, so one engine can price mixed CKKS+BGV traffic distinctly."""
         return self if scheme == self.scheme else dataclasses.replace(self, scheme=scheme)
 
+    def traced(self, tracer) -> "ExecPolicy":
+        """This policy with its kernel launches recorded into ``tracer`` (an
+        ``repro.obs.Tracer``): each dispatch becomes a unit-width slice at its
+        dispatch index (kernels have no sim-time of their own).  Composes with
+        an existing hook — both observe every launch.  A disabled tracer (or
+        None) returns ``self`` unchanged, preserving the zero-overhead rule.
+        ``policy_key`` ignores hooks, so the traced policy prices identically.
+        """
+        if tracer is None or not tracer:
+            return self
+        traced_hook = tracer.dispatch_hook()
+        prior = self.dispatch_hook
+        if prior is None:
+            hook = traced_hook
+        else:
+            def hook(op: str) -> None:
+                prior(op)
+                traced_hook(op)
+        return dataclasses.replace(self, dispatch_hook=hook)
+
     # -- resolved views -----------------------------------------------------
 
     @property

@@ -219,26 +219,3 @@ def _imag_part(ctx, ct: ops.Ciphertext) -> ops.Ciphertext:
     d = ops._sub(ctx, ct, ops._conjugate(ctx, ct, ctx.require_keys()))
     return ops._mul_const(ctx, d, -0.5j, rescale_after=True)
 
-
-# ---------------------------------------------------------------------------
-# retired free-function shims (docs/context_api.md retirement plan, step 3):
-# the deprecated kwarg-threading entry points were deleted; the stub below
-# keeps the old names resolvable for ONE more PR, raising with the migration
-# hint instead of silently delegating.
-# ---------------------------------------------------------------------------
-
-_RETIRED = {
-    "apply_bsgs": "ctx.apply_bsgs(ct, plan)",
-    "apply_bsgs_pair": "ctx.apply_bsgs_pair(ct, plans)",
-    "real_part": "ctx.real_part(ct)",
-    "imag_part": "ctx.imag_part(ct)",
-}
-
-
-def __getattr__(name: str):
-    if name in _RETIRED:
-        raise AttributeError(
-            f"repro.fhe.linear.{name}() was removed; use {_RETIRED[name]} on an "
-            "FheContext (see docs/context_api.md)"
-        )
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

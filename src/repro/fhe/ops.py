@@ -397,44 +397,3 @@ def _apply_galois(ctx, ct: Ciphertext, t: int, keys: KeySet) -> Ciphertext:
     c0, c1 = keyswitch.permute_last(ct.c0, ks0, ks1, t, params, lv, ctx.backend)
     return Ciphertext(c0=c0, c1=c1, level=lv, scale=ct.scale)
 
-
-# ---------------------------------------------------------------------------
-# retired free-function shims (docs/context_api.md retirement plan, step 3):
-# the deprecated kwarg-threading entry points were deleted; the stub below
-# keeps the old names resolvable for ONE more PR, raising with the migration
-# hint instead of silently delegating.
-# ---------------------------------------------------------------------------
-
-_RETIRED = {
-    "encode": "ctx.encode(z)",
-    "encode_const": "ctx.encode_const(c, level, scale)",
-    "decode": "ctx.decode(pt)",
-    "encrypt": "ctx.encrypt(pt)",
-    "decrypt": "ctx.decrypt(ct)",
-    "decrypt_decode": "ctx.decrypt_decode(ct)",
-    "add": "ctx.add(a, b)",
-    "sub": "ctx.sub(a, b)",
-    "negate": "ctx.negate(a)",
-    "add_plain": "ctx.add_plain(a, pt)",
-    "add_const": "ctx.add_const(a, c)",
-    "mul_plain": "ctx.mul_plain(a, pt)",
-    "mul_const": "ctx.mul_const(a, c)",
-    "mul_const_exact": "ctx.mul_const_exact(a, c, target_scale)",
-    "mul": "ctx.mul(a, b)",
-    "square": "ctx.square(a)",
-    "rescale": "ctx.rescale(ct)",
-    "rotate": "ctx.rotate(ct, r)",
-    "rotate_hoisted": "ctx.rotate_hoisted(ct, r)",
-    "rotate_hoisted_group": "ctx.rotate_hoisted_group(ct, rots)",
-    "conjugate": "ctx.conjugate(ct)",
-}
-
-
-def __getattr__(name: str):
-    if name in _RETIRED:
-        raise AttributeError(
-            f"repro.fhe.ops.{name}() was removed; use {_RETIRED[name]} on an "
-            "FheContext — execution modes (backend / rotation hoisting) move "
-            "into its ExecPolicy (see docs/context_api.md)"
-        )
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

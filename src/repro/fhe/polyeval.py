@@ -145,23 +145,3 @@ def _eval_chebyshev(ctx, basis: ChebyshevBasis, coeffs: np.ndarray) -> ops.Ciphe
         acc = ops._add_const(ctx, acc, float(c[0]))
     return acc
 
-
-# ---------------------------------------------------------------------------
-# retired free-function shims (docs/context_api.md retirement plan, step 3):
-# names stay resolvable for one more PR, raising with the migration hint.
-# ---------------------------------------------------------------------------
-
-_RETIRED = {
-    "force_to": "ctx.force_to(ct, level, scale)",
-    "add_any": "ctx.add_any(a, b)",
-    "eval_chebyshev": "ctx.eval_chebyshev(basis, coeffs)",
-}
-
-
-def __getattr__(name: str):
-    if name in _RETIRED:
-        raise AttributeError(
-            f"repro.fhe.polyeval.{name}() was removed; use {_RETIRED[name]} on "
-            "an FheContext (see docs/context_api.md)"
-        )
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -10,6 +10,11 @@ tests *measure* that collapse instead of asserting it.
 Counting happens at Python call time, so inside an enclosing `jax.jit` the
 counts reflect trace-time launches (once per compilation), which is exactly
 the static dispatch count of the compiled program.
+
+Tracing: ``repro.obs.Tracer.dispatch_hook()`` plugs into ``hook_dispatches``
+(or ``ExecPolicy.traced``) and turns each launch into a unit-width Perfetto
+slice at its dispatch *index* — kernels carry no simulated time, so the index
+is the deterministic clock for that track (see docs/observability.md).
 """
 
 from __future__ import annotations

@@ -84,6 +84,7 @@ from repro.core.cache import MB
 from repro.core.hardware import ChipConfig
 from repro.core.jobs import FheJob
 from repro.fhe.context import ExecPolicy
+from repro.obs.metrics import MetricsRegistry
 
 from .events import EventLoop
 from .faults import FaultConfig, FaultEvent, FaultPlan, RetryPolicy
@@ -97,6 +98,7 @@ from .policy import (
     ServeResult,
     ServingEngine,
     TokenBucket,
+    _trace_job_end,
     gang_link_bytes,
     gang_service_cycles,
     working_set_bytes,
@@ -219,12 +221,24 @@ class ClusterResult:
     final_backlog_serial: list[float] = dataclasses.field(default_factory=list)
     peak_backlog_cycles: float = 0.0
     shed_reasons: dict[str, int] = dataclasses.field(default_factory=dict)
+    # per-chip shed attribution: chip -1 = rejected at the router's door
+    # (token_bucket / reserve / no_healthy_chip — never routed anywhere),
+    # chip i >= 0 = queue-timeout sheds on that chip.  ``validate`` asserts
+    # the breakdown sums back to the fleet-global ``shed_reasons``
+    shed_reasons_by_chip: dict[int, dict[str, int]] = dataclasses.field(default_factory=dict)
     # fault observability: per-chip [crash, recover) downtime windows (an
     # unrecovered crash closes at the run's end) and injected/handled fault
     # counters ("crashes" / "transients" / "slow_windows" / "retries" /
     # "jobs_lost" / "retry_no_chip")
     downtime: dict[int, list[tuple[float, float]]] = dataclasses.field(default_factory=dict)
     fault_counts: dict[str, int] = dataclasses.field(default_factory=dict)
+    # per-chip fault attribution: injected events on their target chip,
+    # retries/jobs_lost on the chip the attempt failed on, retry_no_chip
+    # (whole fleet dark) on -1; sums back to ``fault_counts``
+    fault_counts_by_chip: dict[int, dict[str, int]] = dataclasses.field(default_factory=dict)
+    # ``MetricsRegistry.snapshot()`` of the run's registry (serve.shed /
+    # serve.faults counters, turnaround histogram, peak-backlog gauge)
+    metrics: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         if not self.chips:
@@ -360,6 +374,21 @@ class ClusterResult:
         )
         per_chip_mk = max((r.makespan for r in self.chip_results), default=0.0)
         assert abs(self.makespan - per_chip_mk) <= 1e-6 * max(1.0, per_chip_mk)
+        # per-chip attribution must re-aggregate to the fleet-global books
+        # (both are views over one labelled counter, so a mismatch means the
+        # router double- or under-counted somewhere)
+        for label, per_chip, total in (
+                ("shed", self.shed_reasons_by_chip, self.shed_reasons),
+                ("fault", self.fault_counts_by_chip, self.fault_counts)):
+            agg: dict[str, int] = {}
+            for chip, counts in per_chip.items():
+                assert -1 <= chip < self.config.n_chips, (
+                    f"{label} attribution names unknown chip {chip}")
+                for k, v in counts.items():
+                    agg[k] = agg.get(k, 0) + v
+            assert agg == total, (
+                f"per-chip {label} breakdown {agg} does not sum to the "
+                f"fleet-global book {total}")
         return self
 
 
@@ -367,25 +396,44 @@ class ClusterRouter:
     """Front-end DES router: shards one arrival stream over N engines."""
 
     def __init__(self, chip: ChipConfig | None, config: ClusterConfig,
-                 loop: EventLoop | None = None):
+                 loop: EventLoop | None = None, tracer=None, metrics=None):
         pairs = config.chip_pairs(chip)
         self.chip = chip if chip is not None else pairs[0][0]
         self.config = config
-        self.loop = loop if loop is not None else EventLoop()
+        # observability (repro.obs): the tracer timestamps off the SHARED
+        # loop; the metrics registry is the fleet's shed/fault book of record
+        # (``shed_reasons``/``fault_counts`` re-aggregate it, so the global
+        # and per-chip views can never disagree)
+        self.tracer = tracer if tracer else None
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._shed_ctr = self.metrics.counter("serve.shed", labels=("reason", "chip"))
+        self._fault_ctr = self.metrics.counter("serve.faults", labels=("kind", "chip"))
+        self._backlog_gauge = self.metrics.gauge("serve.peak_backlog_cycles")
+        self.loop = loop if loop is not None else EventLoop(tracer=self.tracer)
         self.chips = [c for c, _ in pairs]
         adm = config.admission
         self.engines = [ServingEngine(c, loop=self.loop, hoist=config.hoist,
                                       exec_policy=p,
                                       shed_after=(adm.shed_after_cycles
-                                                  if adm is not None else None))
+                                                  if adm is not None else None),
+                                      tracer=self.tracer, metrics=self.metrics)
                         for c, p in pairs]
         for i, eng in enumerate(self.engines):
             eng.chip_index = i
+            eng._fleet = True  # the router owns job async spans
             eng.on_job_complete = functools.partial(self._completed, i)
             eng.on_job_shed = functools.partial(self._shed_echo, i)
+        self._router_tid = 0
+        if self.tracer is not None:
+            # fixed trace topology up front: pid 0 = router, pid i+1 = chip i,
+            # every resource track interned now so tids depend only on the
+            # fleet shape (not on arrival order)
+            self.tracer.name_process(0, "fleet router")
+            self._router_tid = self.tracer.track(0, "router")
+            for eng in self.engines:
+                eng._trace_register()
         # per-tenant token buckets, created lazily on first arrival
         self._buckets: dict[int, TokenBucket] = {}
-        self.shed_reasons: dict[str, int] = {}
         # fault state: chip health, downtime windows, and the retry policy.
         # ``alive`` mirrors each policy's flag but lives here so the routing
         # hot path never reaches into engines
@@ -393,7 +441,6 @@ class ClusterRouter:
         self.retry = config.retry
         self.downtime: dict[int, list[tuple[float, float]]] = {}
         self._down_since: dict[int, float] = {}
-        self.fault_counts: dict[str, int] = {}
         if config.faults is not None:
             plan = (config.faults.draw(config.n_chips)
                     if isinstance(config.faults, FaultConfig) else config.faults)
@@ -432,6 +479,38 @@ class ClusterRouter:
                        eng.policy.deep_coop)
                 groups.setdefault(key, []).append(i)
         self._gang_groups = [idxs for idxs in groups.values() if len(idxs) >= 2]
+
+    # -- shed/fault books: derived views over the metrics counters -----------
+    # (single source of truth — the fleet-global dicts and the per-chip
+    # breakdowns are two aggregations of the same labelled counter, so
+    # ``ClusterResult.validate`` can assert they sum without ever diverging)
+
+    @staticmethod
+    def _per_chip(ctr) -> dict[int, dict[str, int]]:
+        return {int(chip): {key[0]: int(v) for key, v in rest.items()}
+                for chip, rest in ctr.by_label("chip").items()}
+
+    @property
+    def shed_reasons(self) -> dict[str, int]:
+        return {k: int(v) for k, v in self._shed_ctr.group_sum("reason").items()}
+
+    @property
+    def shed_reasons_by_chip(self) -> dict[int, dict[str, int]]:
+        """Shed counts by chip: ``-1`` = rejected at the router's door
+        (token_bucket / reserve / no_healthy_chip), ``i >= 0`` = queue-timeout
+        sheds that had already been routed to chip i."""
+        return self._per_chip(self._shed_ctr)
+
+    @property
+    def fault_counts(self) -> dict[str, int]:
+        return {k: int(v) for k, v in self._fault_ctr.group_sum("kind").items()}
+
+    @property
+    def fault_counts_by_chip(self) -> dict[int, dict[str, int]]:
+        """Fault/recovery counts by chip: injected events land on their target
+        chip; retries/jobs_lost attribute to the chip the attempt FAILED on;
+        ``retry_no_chip`` (whole fleet dark) lands on ``-1``."""
+        return self._per_chip(self._fault_ctr)
 
     # -- submission ---------------------------------------------------------
 
@@ -590,10 +669,23 @@ class ClusterRouter:
                      state=JobState.SHED, chip_index=-1)
         je.shed_cycle = self.loop.now
         self._by_id[job.job_id] = je
-        self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
+        self._shed_ctr.inc(reason=reason, chip=-1)
+        if self.tracer is not None:
+            # door-shed jobs never reach a chip: their whole (empty) lifecycle
+            # lives on the router process
+            self.tracer.job_begin(job.job_id, job.workload, pid=0,
+                                  kind=job.kind, tenant=job.tenant_id,
+                                  priority=job.priority)
+            self.tracer.instant("shed", pid=0, tid=self._router_tid,
+                                job=job.job_id, reason=reason)
+            self.tracer.job_end(job.job_id, job.workload, "SHED", pid=0)
 
     def _note_backlog(self) -> None:
-        self.peak_backlog = max(self.peak_backlog, sum(self.backlog))
+        total = sum(self.backlog)
+        self.peak_backlog = max(self.peak_backlog, total)
+        self._backlog_gauge.max(total)
+        if self.tracer is not None:
+            self.tracer.counter("backlog_cycles", {"total": total})
 
     # -- fault injection + recovery ------------------------------------------
 
@@ -608,8 +700,15 @@ class ClusterRouter:
             if ev.chip < self.config.n_chips:
                 self.loop.call_at(ev.at, functools.partial(self._fault, ev))
 
-    def _count(self, key: str, n: int = 1) -> None:
-        self.fault_counts[key] = self.fault_counts.get(key, 0) + n
+    def _count(self, key: str, chip: int, n: int = 1) -> None:
+        self._fault_ctr.inc(n, kind=key, chip=chip)
+
+    def _fault_mark(self, name: str, i: int, **args) -> None:
+        """Instant on chip i's health track (the "chip" tid is always 0 —
+        ``_trace_register`` interns it first)."""
+        if self.tracer is not None:
+            self.tracer.instant(name, pid=i + 1,
+                                tid=self.tracer.track(i + 1, "chip"), **args)
 
     def _fault(self, ev: FaultEvent) -> None:
         now = self.loop.now
@@ -618,9 +717,15 @@ class ClusterRouter:
         if ev.kind == "crash":
             if not self.alive[i]:
                 return  # random plans can crash an already-dead chip
-            self._count("crashes")
+            self._count("crashes", i)
             self.alive[i] = False
             self._down_since[i] = now
+            if self.tracer is not None:
+                # downtime is a B/E span on the health track: crash/recover
+                # windows never overlap per chip (the guards above/below), so
+                # the stack stays balanced; ``run`` closes unrecovered spans
+                self.tracer.begin("down", pid=i + 1,
+                                  tid=self.tracer.track(i + 1, "chip"))
             victims = policy.fail_all(now)
             self._handle_victims(victims, now)
             # the chip's outstanding work is gone: zero its estimators (the
@@ -635,15 +740,24 @@ class ClusterRouter:
             self.alive[i] = True
             policy.revive()
             self.downtime.setdefault(i, []).append((self._down_since.pop(i), now))
+            if self.tracer is not None:
+                self.tracer.end("down", pid=i + 1,
+                                tid=self.tracer.track(i + 1, "chip"))
         elif ev.kind == "transient":
             if not self.alive[i]:
                 return  # a dead chip has nothing running to fault
-            self._count("transients")
+            self._count("transients", i)
+            self._fault_mark("transient", i)
             self._handle_victims(policy.fail_one(now), now)
         elif ev.kind == "slow_start":
-            self._count("slow_windows")
+            # slowdown windows are instants, NOT B/E spans: they may straddle
+            # a crash/recover window on the same track, which would break the
+            # B/E stack discipline the validator enforces
+            self._count("slow_windows", i)
+            self._fault_mark("slow_start", i, factor=ev.factor)
             policy.slow_factor = ev.factor
         else:  # slow_end
+            self._fault_mark("slow_end", i)
             policy.slow_factor = 1.0
 
     def _handle_victims(self, victims: list[JobExec], now: float) -> None:
@@ -670,10 +784,15 @@ class ClusterRouter:
         rp = self.retry
         if rp is None or attempts_done > rp.max_attempts:
             old.state = JobState.FAILED
-            self._count("jobs_lost")
+            self._count("jobs_lost", old.chip_index)
+            _trace_job_end(self.tracer, old, "FAILED")
             return
-        self._count("retries")
+        self._count("retries", old.chip_index)
         delay = rp.backoff_cycles(attempts_done)
+        if self.tracer is not None:
+            self.tracer.instant("retry", pid=0, tid=self._router_tid,
+                                job=job.job_id, attempt=attempts_done + 1,
+                                delay=delay)
         self.loop.call_after(delay, functools.partial(
             self._retry, job, old, attempts_done, carried_wasted))
 
@@ -698,7 +817,7 @@ class ClusterRouter:
         now = self.loop.now
         if not any(self.alive):
             # the whole fleet is dark: burn an attempt and back off again
-            self._count("retry_no_chip")
+            self._count("retry_no_chip", -1)
             self._after_failure(job, old, attempts_done + 1, carried_wasted)
             return
         rp = self.retry
@@ -763,6 +882,15 @@ class ClusterRouter:
                 self._route_gang(job, members)
                 return
         i = self._pick(job)
+        if self.tracer is not None:
+            # the router opens the job's async span (engines are fleet-managed
+            # and stay silent in submit); the routing instant makes the
+            # placement decision visible on the router track
+            self.tracer.job_begin(job.job_id, job.workload, pid=i + 1,
+                                  kind=job.kind, tenant=job.tenant_id,
+                                  priority=job.priority)
+            self.tracer.instant("routed", pid=0, tid=self._router_tid,
+                                job=job.job_id, chip=i)
         pay = self._cold_penalty(job, i)  # counted in metrics via cold_start_cycles
         self._touch_warm(job, i)
         je = self.engines[i].submit(job, extra_cycles=pay)
@@ -788,6 +916,13 @@ class ClusterRouter:
         per_chip, link = gang_service_cycles(
             sim.cycles, job, len(members), self.config.link_bytes_per_cycle,
             self.config.gang_syncs)
+        if self.tracer is not None and retry_meta is None:
+            self.tracer.job_begin(job.job_id, job.workload, pid=members[0] + 1,
+                                  kind=job.kind, tenant=job.tenant_id,
+                                  priority=job.priority)
+        if self.tracer is not None:
+            self.tracer.instant("routed_gang", pid=0, tid=self._router_tid,
+                                job=job.job_id, chips=list(members))
         gang = GangReservation(job, self.loop)
         for rank, i in enumerate(members):
             je = self.engines[i].submit(job, sim=sim, service_cycles=per_chip,
@@ -837,16 +972,20 @@ class ClusterRouter:
         routing time (the job will never run), so the estimators keep
         tracking genuinely outstanding work."""
         self._debit_backlog(i, je)
-        self.shed_reasons["timeout"] = self.shed_reasons.get("timeout", 0) + 1
+        self._shed_ctr.inc(reason="timeout", chip=i)
 
     # -- run -----------------------------------------------------------------
 
     def run(self) -> ClusterResult:
         self.loop.run()
         # a chip still dark at drain closes its downtime window at run end so
-        # availability integrates the full outage
+        # availability integrates the full outage (and its open "down" trace
+        # span closes with it, keeping the B/E stacks balanced)
         for i, start in sorted(self._down_since.items()):
             self.downtime.setdefault(i, []).append((start, self.loop.now))
+            if self.tracer is not None:
+                self.tracer.end("down", pid=i + 1,
+                                tid=self.tracer.track(i + 1, "chip"))
         self._down_since.clear()
         chip_results = [eng.result() for eng in self.engines]
         makespan = max((r.makespan for r in chip_results), default=0.0)
@@ -860,8 +999,11 @@ class ClusterRouter:
                              final_backlog_serial=list(self.backlog_serial),
                              peak_backlog_cycles=self.peak_backlog,
                              shed_reasons=dict(self.shed_reasons),
+                             shed_reasons_by_chip=self.shed_reasons_by_chip,
                              downtime={i: list(w) for i, w in self.downtime.items()},
-                             fault_counts=dict(self.fault_counts))
+                             fault_counts=dict(self.fault_counts),
+                             fault_counts_by_chip=self.fault_counts_by_chip,
+                             metrics=self.metrics.snapshot())
 
 
 def serve_cluster(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: int = 2,
@@ -875,7 +1017,8 @@ def serve_cluster(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: i
                   gang_syncs: int = GANG_SYNCS,
                   admission: AdmissionConfig | None = None,
                   faults: FaultPlan | FaultConfig | None = None,
-                  retry: RetryPolicy | None = None) -> ClusterResult:
+                  retry: RetryPolicy | None = None,
+                  tracer=None, metrics=None) -> ClusterResult:
     """Serve an open-loop job list on a chip fleet; the one-call API.
 
     Homogeneous fleet: pass ``chip`` + ``n_chips``.  Heterogeneous fleet:
@@ -892,6 +1035,12 @@ def serve_cluster(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: i
     drop-rate/goodput metrics rather than growing the backlog.  ``faults=``
     arms seeded fault injection (``FaultPlan`` scripted / ``FaultConfig``
     random) and ``retry=`` the recovery policy — see ``repro.serve.faults``.
+    ``tracer=`` (an ``repro.obs.Tracer``) records the whole fleet run —
+    chips→processes, affiliations/lanes→threads, job lifecycles as async
+    spans — for Perfetto export (``repro.obs.write_chrome_trace``);
+    ``metrics=`` supplies the ``repro.obs.MetricsRegistry`` backing the
+    shed/fault books (one is created per run when omitted, and its snapshot
+    lands in ``ClusterResult.metrics`` either way).
     """
     cfg = config if config is not None else ClusterConfig(
         n_chips=0 if chips is not None else n_chips, router=router, seed=seed,
@@ -900,7 +1049,7 @@ def serve_cluster(jobs: list[FheJob], chip: ChipConfig | None = None, n_chips: i
         chips=tuple(chips) if chips is not None else None,
         gang_max_chips=gang_max_chips, link_bytes_per_cycle=link_bytes_per_cycle,
         gang_syncs=gang_syncs, admission=admission, faults=faults, retry=retry)
-    rt = ClusterRouter(chip, cfg)
+    rt = ClusterRouter(chip, cfg, tracer=tracer, metrics=metrics)
     for job in jobs:
         rt.submit(job)
     result = rt.run()

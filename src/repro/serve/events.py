@@ -57,12 +57,17 @@ class EventLoop:
     seconds only at the metrics layer, via the chip frequency).
     """
 
-    def __init__(self, start: float = 0.0):
+    def __init__(self, start: float = 0.0, tracer=None):
         self.now = float(start)
         self._heap: list[Event] = []
         self._seq = itertools.count()
         self._n_cancelled = 0
         self.processed = 0
+        # observability seam: a ``repro.obs.Tracer`` bound here timestamps
+        # every event it records off THIS clock — the loop is the single
+        # source of simulated time, which is what makes traces deterministic
+        if tracer is not None and tracer:
+            tracer.bind_clock(lambda: self.now)
 
     def __len__(self) -> int:
         return len(self._heap) - self._n_cancelled

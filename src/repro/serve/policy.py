@@ -437,6 +437,12 @@ class GangReservation:
         """Barrier arrival (idempotent); launches once every member holds."""
         if self.aborted:
             return
+        if policy.tracer and id(policy) not in self._ready:
+            je = next(j for p, j in self.members if p is policy)
+            policy.tracer.instant(
+                "gang_ready", pid=je.chip_index + 1,
+                tid=policy.tracer.track(je.chip_index + 1, "deep"),
+                job=self.job.job_id, rank=je.gang_rank, size=self.size)
         self._ready.add(id(policy))
         if len(self._ready) == self.size and not self._launch_pending:
             self._launch_pending = True
@@ -453,6 +459,11 @@ class GangReservation:
         # gangs have) and fragments still finish at the same instant
         factor = max(p.slow_factor for p, _ in self.members)
         for policy, je in self.members:
+            if policy.tracer:
+                policy.tracer.instant(
+                    "gang_launch", pid=je.chip_index + 1,
+                    tid=policy.tracer.track(je.chip_index + 1, "deep"),
+                    job=self.job.job_id, rank=je.gang_rank, factor=factor)
             policy._gang_launch(je, factor)
 
     def suspend(self) -> None:
@@ -534,7 +545,49 @@ def _cancel_deadline(je: JobExec) -> None:
         je._deadline_ev = None
 
 
-def _fail_record(je: JobExec, now: float, resource: str, chip: ChipConfig) -> None:
+# -- tracing helpers (repro.obs seam) ----------------------------------------
+# Every emission is guarded by ``if tracer:`` — ``tracer`` is None (or a
+# disabled Tracer, which is falsy) on every default path, so the serving hot
+# loops pay one attribute test.  Conventions (see docs/observability.md):
+# pid = chip_index + 1 (pid 0 is the fleet router), tid = the resource track
+# (affiliation-i / deep / whole-chip / chip), job lifecycles are async spans
+# keyed by job_id with state-transition instants.  Gang fragments share one
+# job id, so only the rank-0 fragment speaks for the job's async span; every
+# fragment still records its own run segments on its own chip's tracks.
+
+# turnaround histogram buckets (cycles): decade-ish ladder covering shallow
+# sub-ms jobs through deep bootstrapped pipelines at 1 GHz-scale clocks
+TURNAROUND_BUCKETS = (1e4, 3e4, 1e5, 3e5, 1e6, 3e6, 1e7, 3e7, 1e8, 3e8, 1e9)
+
+
+def _trace_segment(tracer, je: JobExec, start: float, end: float,
+                   resource: str) -> None:
+    """One closed run interval — emitted exactly where ``segments.append`` is."""
+    if tracer:
+        pid = je.chip_index + 1
+        tracer.complete(je.job.workload, start, end, pid=pid,
+                        tid=tracer.track(pid, resource),
+                        job=je.job.job_id, kind=je.kind, attempt=je.attempts)
+
+
+def _primary(je: JobExec) -> bool:
+    return je.gang is None or je.gang_rank == 0
+
+
+def _trace_state(tracer, je: JobExec, state: str, **args) -> None:
+    if tracer and _primary(je):
+        tracer.job_state(je.job.job_id, je.job.workload, state,
+                         pid=je.chip_index + 1, attempt=je.attempts, **args)
+
+
+def _trace_job_end(tracer, je: JobExec, state: str) -> None:
+    if tracer and _primary(je):
+        tracer.job_end(je.job.job_id, je.job.workload, state,
+                       pid=max(je.chip_index, -1) + 1)
+
+
+def _fail_record(je: JobExec, now: float, resource: str, chip: ChipConfig,
+                 tracer=None) -> None:
     """Freeze one attempt record as FAILED_TRANSIENT with consistent books.
 
     Closes any open run segment (that wall time is lost → ``wasted_cycles``).
@@ -553,6 +606,7 @@ def _fail_record(je: JobExec, now: float, resource: str, chip: ChipConfig) -> No
         w = now - je._run_start
         if w > 0:
             je.segments.append(Segment(je._run_start, now, resource, chip=je.chip_index))
+            _trace_segment(tracer, je, je._run_start, now, resource)
         je.wasted_cycles += w
         je._run_start = None
         if je._has_checkpoint:
@@ -566,6 +620,7 @@ def _fail_record(je: JobExec, now: float, resource: str, chip: ChipConfig) -> No
         je.remaining = je.service_cycles
     je.state = JobState.FAILED_TRANSIENT
     je.failed_cycle = now
+    _trace_state(tracer, je, "FAILED_TRANSIENT", resource=resource)
 
 
 class _DeferredDispatchMixin:
@@ -622,6 +677,7 @@ class FlashPolicy(_DeferredDispatchMixin):
         self.loop: EventLoop | None = None
         self.on_complete: Callable[[JobExec], None] = lambda je: None
         self._dispatch_pending = False
+        self.tracer = None  # repro.obs seam; the owning ServingEngine sets it
         # fault state (repro.serve.faults): a dead chip accepts no work; a
         # straggler window stretches every NEW run segment by slow_factor
         self.alive = True
@@ -698,16 +754,20 @@ class FlashPolicy(_DeferredDispatchMixin):
         # doubles as a crash checkpoint (_has_checkpoint) for retries.
         worked = now - d._run_start
         d._complete_ev.cancel()
+        spill_pay = 0.0
         if worked > 0:
             progress = worked / d._run_factor
             d.segments.append(Segment(d._run_start, now, "deep", chip=d.chip_index))
+            _trace_segment(self.tracer, d, d._run_start, now, "deep")
             pay = (2.0 * working_set_bytes(d.job) / d.gang_size
                    / self.chip.hbm_bytes_per_cycle)
             d.remaining = max(0.0, d.remaining - progress) + pay
             d.spill_restore_cycles += pay
             d.wasted_cycles += worked - progress
             d._has_checkpoint = True
+            spill_pay = pay
         d.n_preemptions += 1
+        _trace_state(self.tracer, d, "SUSPENDED", spill_cycles=spill_pay)
         d.state = JobState.SUSPENDED
         d._run_start = None
         d._suspended_at = now  # aging clock restarts: only waiting counts
@@ -762,6 +822,7 @@ class FlashPolicy(_DeferredDispatchMixin):
     def _start_shallow(self, je: JobExec, aff: int, now: float) -> None:
         _cancel_deadline(je)
         je.state = JobState.RUNNING
+        _trace_state(self.tracer, je, "RUNNING", resource=f"affiliation-{aff}")
         je.lanes = f"affiliation-{aff}"
         if je.first_start is None:  # a retry keeps its original first start
             je.first_start = now
@@ -775,10 +836,12 @@ class FlashPolicy(_DeferredDispatchMixin):
         now = self.loop.now
         je.segments.append(Segment(je._run_start, now, f"affiliation-{aff}",
                                    chip=je.chip_index))
+        _trace_segment(self.tracer, je, je._run_start, now, f"affiliation-{aff}")
         je.wasted_cycles += (now - je._run_start) - je.remaining  # straggler excess
         je.remaining = 0.0
         je.state = JobState.DONE
         je.completion = now
+        _trace_job_end(self.tracer, je, "DONE")
         self.aff_running[aff] = None
         self._shallow_svc_sum += je.service_cycles
         self._shallow_svc_n += 1
@@ -825,6 +888,7 @@ class FlashPolicy(_DeferredDispatchMixin):
     def _run_deep(self, d: JobExec, now: float, factor: float | None = None) -> None:
         _cancel_deadline(d)
         d.state = JobState.RUNNING
+        _trace_state(self.tracer, d, "RUNNING", resource="deep")
         d.lanes = (f"{self._deep_label}+gang[{d.gang_rank}/{d.gang_size}]"
                    if d.gang is not None else self._deep_label)
         if d.first_start is None:
@@ -837,10 +901,12 @@ class FlashPolicy(_DeferredDispatchMixin):
     def _finish_deep(self, d: JobExec) -> None:
         now = self.loop.now
         d.segments.append(Segment(d._run_start, now, "deep", chip=d.chip_index))
+        _trace_segment(self.tracer, d, d._run_start, now, "deep")
         d.wasted_cycles += (now - d._run_start) - d.remaining  # straggler excess
         d.remaining = 0.0
         d.state = JobState.DONE
         d.completion = now
+        _trace_job_end(self.tracer, d, "DONE")
         self.deep_active = None
         if d.gang is not None:
             d.gang.running = False  # all fragments finish at this instant
@@ -858,7 +924,7 @@ class FlashPolicy(_DeferredDispatchMixin):
         victims: list[JobExec] = []
         for i, je in enumerate(self.aff_running):
             if je is not None:
-                _fail_record(je, now, f"affiliation-{i}", self.chip)
+                _fail_record(je, now, f"affiliation-{i}", self.chip, self.tracer)
                 victims.append(je)
                 self.aff_running[i] = None
         d = self.deep_active
@@ -866,7 +932,7 @@ class FlashPolicy(_DeferredDispatchMixin):
             if d.gang is not None:
                 victims.extend(d.gang.abort(now))
             else:
-                _fail_record(d, now, "deep", self.chip)
+                _fail_record(d, now, "deep", self.chip, self.tracer)
                 victims.append(d)
             self.deep_active = None
         for q in (self.shallow_q, self.deep_q):
@@ -877,7 +943,7 @@ class FlashPolicy(_DeferredDispatchMixin):
                 if je.gang is not None:
                     victims.extend(je.gang.abort(now))
                 else:
-                    _fail_record(je, now, "queued", self.chip)
+                    _fail_record(je, now, "queued", self.chip, self.tracer)
                     victims.append(je)
         self._gang_hold = False
         return victims
@@ -890,13 +956,13 @@ class FlashPolicy(_DeferredDispatchMixin):
         if d is not None and d.state is JobState.RUNNING:
             if d.gang is not None:
                 return d.gang.abort(now)
-            _fail_record(d, now, "deep", self.chip)
+            _fail_record(d, now, "deep", self.chip, self.tracer)
             self.deep_active = None
             self._schedule_dispatch()
             return [d]
         for i, je in enumerate(self.aff_running):
             if je is not None:
-                _fail_record(je, now, f"affiliation-{i}", self.chip)
+                _fail_record(je, now, f"affiliation-{i}", self.chip, self.tracer)
                 self.aff_running[i] = None
                 self._schedule_dispatch()
                 return [je]
@@ -907,7 +973,7 @@ class FlashPolicy(_DeferredDispatchMixin):
         the re-planned job may land on different chips, where a per-chip shard
         checkpoint is meaningless."""
         d._has_checkpoint = False
-        _fail_record(d, now, "deep", self.chip)
+        _fail_record(d, now, "deep", self.chip, self.tracer)
         if self.deep_active is d:
             self.deep_active = None
         self._gang_hold = False
@@ -930,6 +996,7 @@ class SequentialPolicy(_DeferredDispatchMixin):
         self.loop: EventLoop | None = None
         self.on_complete: Callable[[JobExec], None] = lambda je: None
         self._dispatch_pending = False
+        self.tracer = None  # repro.obs seam; the owning ServingEngine sets it
         self.queue = _PriorityQueue()
         self.running: JobExec | None = None
         self.alive = True
@@ -953,6 +1020,7 @@ class SequentialPolicy(_DeferredDispatchMixin):
         now = self.loop.now
         _cancel_deadline(je)
         je.state = JobState.RUNNING
+        _trace_state(self.tracer, je, "RUNNING", resource="whole-chip")
         je.lanes = lanes_whole_chip(self.chip).label
         if je.first_start is None:  # a retry keeps its original first start
             je.first_start = now
@@ -965,10 +1033,12 @@ class SequentialPolicy(_DeferredDispatchMixin):
     def _finish(self, je: JobExec) -> None:
         now = self.loop.now
         je.segments.append(Segment(je._run_start, now, "whole-chip", chip=je.chip_index))
+        _trace_segment(self.tracer, je, je._run_start, now, "whole-chip")
         je.wasted_cycles += (now - je._run_start) - je.remaining  # straggler excess
         je.remaining = 0.0
         je.state = JobState.DONE
         je.completion = now
+        _trace_job_end(self.tracer, je, "DONE")
         self.running = None
         self.on_complete(je)
         self._schedule_dispatch()
@@ -979,13 +1049,13 @@ class SequentialPolicy(_DeferredDispatchMixin):
         self.alive = False
         victims: list[JobExec] = []
         if self.running is not None:
-            _fail_record(self.running, now, "whole-chip", self.chip)
+            _fail_record(self.running, now, "whole-chip", self.chip, self.tracer)
             victims.append(self.running)
             self.running = None
         while len(self.queue):
             je = self.queue.pop()
             if je.state is JobState.QUEUED:
-                _fail_record(je, now, "queued", self.chip)
+                _fail_record(je, now, "queued", self.chip, self.tracer)
                 victims.append(je)
         return victims
 
@@ -993,7 +1063,7 @@ class SequentialPolicy(_DeferredDispatchMixin):
         je = self.running
         if je is None or je.state is not JobState.RUNNING:
             return []
-        _fail_record(je, now, "whole-chip", self.chip)
+        _fail_record(je, now, "whole-chip", self.chip, self.tracer)
         self.running = None
         self._schedule_dispatch()
         return [je]
@@ -1100,16 +1170,24 @@ class ServingEngine:
 
     def __init__(self, chip: ChipConfig, policy=None, loop: EventLoop | None = None,
                  hoist: bool = False, exec_policy: ExecPolicy | None = None,
-                 shed_after: float | None = None):
+                 shed_after: float | None = None, tracer=None, metrics=None):
         self.chip = chip
         self.policy = policy if policy is not None else policy_for(chip)
         # engine-level queue timeout (AdmissionConfig.shed_after_cycles): a job
         # still QUEUED this long after arrival is shed where it waits
         assert shed_after is None or shed_after > 0
         self.shed_after = shed_after
+        # observability (repro.obs): a disabled tracer normalises to None so
+        # every guard below is one attribute test; the policy shares it.  The
+        # optional MetricsRegistry collects completion counters/histograms
+        self.tracer = tracer if tracer else None
+        self.metrics = metrics
+        self.policy.tracer = self.tracer
+        self._fleet = False  # True under a ClusterRouter (it owns job spans)
+        self._trace_registered = False
         # a caller-supplied loop lets N engines share one clock (fleet serving,
         # repro.serve.cluster); by default each engine owns its own
-        self.loop = loop if loop is not None else EventLoop()
+        self.loop = loop if loop is not None else EventLoop(tracer=self.tracer)
         # execution policy for service-time estimation (kernel pipeline +
         # hoisting + numerics mode); ``hoist=`` is the legacy bool spelling.
         # Hoisted rotations amortise ModUp across BSGS baby steps, shrinking
@@ -1132,6 +1210,25 @@ class ServingEngine:
         the engine's charges exactly.  Honours the policy's ``deep_coop``."""
         coop = job.kind == "deep" and bool(getattr(self.policy, "deep_coop", False))
         return job_service_sim(job, self.chip, policy=self.exec_policy, deep_coop=coop)
+
+    def _trace_register(self) -> None:
+        """Name this chip's trace process and intern its resource tracks in a
+        fixed order (chip health first, then placement lanes), so track ids —
+        and therefore exported bytes — depend only on topology, not on which
+        job happens to land first.  The cluster router calls this after
+        assigning ``chip_index``; standalone engines call it on first submit."""
+        if self.tracer is None or self._trace_registered:
+            return
+        self._trace_registered = True
+        pid = self.chip_index + 1
+        self.tracer.name_process(pid, f"chip{self.chip_index} {self.chip.name}")
+        self.tracer.track(pid, "chip")  # health: down spans, fault instants
+        if hasattr(self.policy, "aff_running"):  # FlashPolicy-shaped
+            for a in range(self.chip.n_affiliations):
+                self.tracer.track(pid, f"affiliation-{a}")
+            self.tracer.track(pid, "deep")
+        else:
+            self.tracer.track(pid, "whole-chip")
 
     def submit(self, job: FheJob, extra_cycles: float = 0.0, sim: SimResult | None = None,
                service_cycles: float | None = None,
@@ -1160,6 +1257,14 @@ class ServingEngine:
         # clamp: integer-rounded arrivals from a closed-loop source can land a
         # fraction of a cycle before a fractional clock (non-integral spill pay)
         arrival = max(self.loop.now, float(job.arrival_cycle))
+        if self.tracer is not None and not self._fleet:
+            # standalone engines own the job's async span; in fleet mode the
+            # router opens it at routing time (retries re-enter here, and a
+            # second ``b`` per job id would corrupt the async track)
+            self._trace_register()
+            self.tracer.job_begin(job.job_id, job.workload, ts=arrival,
+                                  pid=self.chip_index + 1, kind=job.kind,
+                                  tenant=job.tenant_id, priority=job.priority)
         self.loop.call_at(arrival, lambda: self.policy.submit(je))
         if self.shed_after is not None and gang is None and arm_deadline:
             # gang fragments are exempt: the lockstep barrier already bounds
@@ -1190,10 +1295,22 @@ class ServingEngine:
             je._complete_ev = None
         je.state = JobState.SHED
         je.shed_cycle = self.loop.now
+        if self.tracer is not None and _primary(je):
+            self.tracer.instant("shed", pid=self.chip_index + 1,
+                                tid=self.tracer.track(self.chip_index + 1, "chip"),
+                                job=je.job.job_id, reason="timeout")
+        _trace_job_end(self.tracer, je, "SHED")
         if self.on_job_shed is not None:
             self.on_job_shed(je)
 
     def _job_completed(self, je: JobExec) -> None:
+        # gang fragments complete once per member; only rank 0 is the job
+        if self.metrics is not None and _primary(je):
+            self.metrics.counter("serve.jobs_completed", labels=("kind",)).inc(
+                kind=je.kind)
+            self.metrics.histogram(
+                "serve.turnaround_cycles", buckets=TURNAROUND_BUCKETS,
+            ).observe(je.completion - je.job.arrival_cycle)
         if self.on_job_complete is not None:
             self.on_job_complete(je)
         if self._source is not None:
@@ -1222,16 +1339,18 @@ class ServingEngine:
 
 def serve(jobs: list[FheJob], chip: ChipConfig, policy=None, validate: bool = True,
           hoist: bool = False, exec_policy: ExecPolicy | None = None,
-          shed_after: float | None = None) -> ServeResult:
+          shed_after: float | None = None, tracer=None, metrics=None) -> ServeResult:
     """Run an open-loop job list through the event engine; the one-call API.
 
     ``exec_policy`` selects the service-time kernel mode (an
     ``repro.fhe.ExecPolicy``); the legacy ``hoist=`` bool is honoured when no
     policy is given.  ``shed_after`` arms the engine-level queue timeout: jobs
     still queued that many cycles after arrival end ``JobState.SHED`` instead
-    of waiting forever (fleet admission lives in ``serve_cluster``)."""
+    of waiting forever (fleet admission lives in ``serve_cluster``).
+    ``tracer`` (an ``repro.obs.Tracer``) records the run for Perfetto export;
+    ``metrics`` (an ``repro.obs.MetricsRegistry``) collects completion stats."""
     eng = ServingEngine(chip, policy=policy, hoist=hoist, exec_policy=exec_policy,
-                        shed_after=shed_after)
+                        shed_after=shed_after, tracer=tracer, metrics=metrics)
     for job in jobs:
         eng.submit(job)
     result = eng.run()
@@ -1240,9 +1359,9 @@ def serve(jobs: list[FheJob], chip: ChipConfig, policy=None, validate: bool = Tr
 
 def serve_source(source, chip: ChipConfig, policy=None, validate: bool = True,
                  hoist: bool = False, exec_policy: ExecPolicy | None = None,
-                 shed_after: float | None = None) -> ServeResult:
+                 shed_after: float | None = None, tracer=None, metrics=None) -> ServeResult:
     """Run a closed-loop traffic source (arrivals depend on completions)."""
     eng = ServingEngine(chip, policy=policy, hoist=hoist, exec_policy=exec_policy,
-                        shed_after=shed_after)
+                        shed_after=shed_after, tracer=tracer, metrics=metrics)
     result = eng.run(source=source)
     return result.validate() if validate else result

@@ -347,11 +347,11 @@ def test_plan_diags_banded():
 # ---------------------------------------------------------------------------
 
 
-def test_retired_shims_raise_with_migration_hint():
-    """Retirement tranches (docs/context_api.md step 3): the
-    linear/polyeval/bootstrap free functions AND the ops kwarg-threading
-    entry points are gone — every name resolves to an AttributeError
-    carrying the context replacement, never to silent delegation."""
+def test_retired_names_raise_plain_attribute_error():
+    """Retirement complete (docs/context_api.md step 5): the transitional
+    ``__getattr__`` stub tables are deleted, so every legacy free-function
+    name raises a PLAIN AttributeError — no migration-hint string and no
+    module ``__getattr__`` left behind in the four op modules."""
     from repro.fhe import bootstrap
 
     retired = [
@@ -369,11 +369,12 @@ def test_retired_shims_raise_with_migration_hint():
         "mul_plain", "mul_const", "mul_const_exact", "mul", "square",
         "rescale", "rotate", "rotate_hoisted", "rotate_hoisted_group",
         "conjugate")]
+    for mod, _ in retired:
+        assert not hasattr(mod, "__getattr__"), f"{mod.__name__} keeps a stub"
     for mod, name in retired:
-        with pytest.raises(AttributeError, match="ctx\\."):
+        with pytest.raises(AttributeError) as exc:
             getattr(mod, name)
-        with pytest.raises(AttributeError, match="docs/context_api.md"):
-            getattr(mod, name)
+        assert "docs/context_api.md" not in str(exc.value)
     with pytest.raises(AttributeError):
         linear.no_such_function  # unknown names still raise plainly
     with pytest.raises(AttributeError):

@@ -1,0 +1,102 @@
+"""Perf-history CLI over ``repro.obs.history`` (``BENCH_HISTORY.json``).
+
+The history file is the repo's perf trajectory: ``benchmarks/run.py --smoke
+--history`` appends one row per emitted bench metric, and this tool answers
+"did anything drift?" — cycle-level metrics are deterministic functions of
+the code, so any deviation from the trailing median is a behaviour change
+(improvements are flagged too; re-baseline by letting the new value
+accumulate history, or prune the file).  Wall-clock metrics (``wall_ms`` /
+``seconds`` / ``wall_speedup``) are never gated — host timing is noise.
+
+    PYTHONPATH=src python tools/bench_history.py check-regression
+    PYTHONPATH=src python tools/bench_history.py check-regression \
+        --file BENCH_HISTORY.json --window 8 --tolerance 0.15
+    PYTHONPATH=src python tools/bench_history.py show [--metric substr]
+    PYTHONPATH=src python tools/bench_history.py append name=value [...]
+
+``check-regression`` exits non-zero when any (bench, scenario, metric)
+group's newest row deviates more than ``--tolerance`` (relative) from the
+median of up to ``--window`` prior rows; single-row groups pass vacuously.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.obs import history
+
+
+def cmd_check(args) -> int:
+    rows = history.load_history(args.file)
+    if not rows:
+        print(f"{args.file}: no history yet — nothing to check")
+        return 0
+    problems = history.check_regression(rows, window=args.window,
+                                        tolerance=args.tolerance)
+    if problems:
+        print(f"{len(problems)} regression(s) vs trailing median:")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    groups = {(r.get("bench"), r.get("scenario"), r.get("metric")) for r in rows}
+    print(f"ok: {len(rows)} rows, {len(groups)} metric groups, "
+          f"newest within {args.tolerance:.0%} of trailing median "
+          f"(window {args.window})")
+    return 0
+
+
+def cmd_show(args) -> int:
+    rows = history.load_history(args.file)
+    for r in rows:
+        label = ".".join(p for p in (r.get("bench", ""), r.get("scenario", ""),
+                                     r.get("metric", "")) if p)
+        if args.metric and args.metric not in label:
+            continue
+        print(f"{label}\t{r.get('value')}\t{r.get('commit', '?')}\t"
+              f"{r.get('date', '?')}")
+    return 0
+
+
+def cmd_append(args) -> int:
+    rows = []
+    for pair in args.rows:
+        name, _, value = pair.partition("=")
+        if not _:
+            print(f"expected name=value, got {pair!r}", file=sys.stderr)
+            return 2
+        rows.append((name, float(value)))
+    n = history.append_rows(args.file, rows)
+    print(f"appended {n} rows to {args.file}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--file", default="BENCH_HISTORY.json",
+                    help="history file (default: BENCH_HISTORY.json)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    chk = sub.add_parser("check-regression",
+                         help="newest row vs trailing median per metric group")
+    chk.add_argument("--window", type=int, default=8,
+                     help="prior rows in the median (default 8)")
+    chk.add_argument("--tolerance", type=float, default=0.15,
+                     help="relative deviation band (default 0.15)")
+    chk.set_defaults(fn=cmd_check)
+
+    show = sub.add_parser("show", help="dump rows as TSV")
+    show.add_argument("--metric", default=None,
+                      help="only rows whose label contains this substring")
+    show.set_defaults(fn=cmd_show)
+
+    app = sub.add_parser("append", help="append name=value rows by hand")
+    app.add_argument("rows", nargs="+", metavar="name=value")
+    app.set_defaults(fn=cmd_append)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
